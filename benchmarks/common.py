@@ -1,0 +1,98 @@
+"""Shared benchmark machinery: workloads, timing, CSV reporting.
+
+Benchmarks mirror the paper's experimental protocol (§6.1) at
+container-friendly scale: power-law graphs, 90/10 split, batches of single
+edge updates, Q registered queries.  Each module emits
+``name,us_per_call,derived`` rows; ``derived`` carries the figure-specific
+metric (memory bytes, #diffs, max queries, …).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import dropping as dr
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+
+ROWS: list[tuple[str, float, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6  # µs
+
+
+def paper_workload(
+    *,
+    v: int = 256,
+    e: int = 1024,
+    num_batches: int = 20,
+    batch_size: int = 1,
+    delete_fraction: float = 0.0,
+    seed: int = 0,
+    weighted: bool = True,
+):
+    """90/10 split + insert stream from the held-out pool (paper §6.1)."""
+    edges = powerlaw_graph(v, e, seed=seed, weighted=weighted)
+    initial, pool = split_90_10(edges, seed=seed)
+    stream = update_stream(
+        initial, v,
+        num_batches=num_batches, batch_size=batch_size,
+        delete_fraction=delete_fraction, insert_pool=pool, seed=seed + 1,
+    )
+    return initial, stream
+
+
+# bloom sized for container-scale graphs: 2^11 bits = 256 B packed per query
+DROP_DEGREE = lambda p, mode="det", seed=1: dr.DropConfig(
+    mode=mode, selection="degree", p=p, tau_min=2, tau_max=24, seed=seed,
+    bloom_bits=1 << 11,
+)
+DROP_RANDOM = lambda p, mode="det", seed=1: dr.DropConfig(
+    mode=mode, selection="random", p=p, seed=seed, bloom_bits=1 << 11
+)
+
+def run_stream_stats(system, stream):
+    """(total µs, cumulative MaintainStats dict) over a stream."""
+    import jax, time as _t
+    tot = {}
+    def acc(st):
+        for k, v in st._asdict().items():
+            tot[k] = tot.get(k, 0) + int(v)
+    if getattr(system, "last_stats", None) is not None:
+        acc(system.last_stats)  # the initial computation sweep
+    t0 = _t.perf_counter()
+    for batch in stream:
+        acc(system.apply_updates(batch))
+    return (_t.perf_counter() - t0) * 1e6, tot
+
+
+def run_stream(system, stream) -> float:
+    """Total maintenance wall time (µs) over an update stream."""
+    t0 = time.perf_counter()
+    for batch in stream:
+        system.apply_updates(batch)
+    return (time.perf_counter() - t0) * 1e6
+
+
+def make_sssp(initial, v, sources, **kw):
+    return q.sssp(DynamicGraph(v, initial, capacity=len(initial) * 4 + 64),
+                  sources, max_iters=48, **kw)
+
+
+def make_khop(initial, v, sources, k=5, **kw):
+    return q.khop(DynamicGraph(v, initial, capacity=len(initial) * 4 + 64),
+                  sources, k=k, **kw)

@@ -1,0 +1,38 @@
+"""Figure 10 (Appendix A): batch-size sweep — VDC/SCRATCH time ratio.
+
+The paper: DC is dramatically faster at batch size 1 and loses to SCRATCH
+as batches grow past ~100K edges.  We sweep batch size at a fixed total
+update count and report the ratio (algorithmic work ratio as `derived` —
+the machine-neutral signal).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import emit, make_khop, paper_workload, run_stream
+from repro.core.graph import DynamicGraph
+from repro.core.scratch import scratch_like
+from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+
+
+def main() -> None:
+    v = 256
+    total_updates = 64
+    edges = powerlaw_graph(v, 1024, seed=0, weighted=False)
+    initial, pool = split_90_10(edges, seed=0)
+    for bs in (1, 4, 16, 64):
+        stream = update_stream(
+            initial, v, num_batches=total_updates // bs, batch_size=bs,
+            insert_pool=list(pool), seed=9,
+        )
+        eng = make_khop(initial, v, list(range(4)))
+        t_dc = run_stream(eng, stream)
+        sc = scratch_like(eng.cfg, DynamicGraph(v, initial, capacity=len(initial) * 4 + 64),
+                          eng.state.init)
+        t_sc = run_stream(sc, stream)
+        work_ratio = int(eng.last_stats.scheduled) / max(int(sc.last_stats.scheduled), 1)
+        emit(f"fig10/batch{bs}", t_dc / len(stream),
+             f"vdc_over_scratch_time={t_dc / max(t_sc, 1e-9):.2f};work_ratio={work_ratio:.3f}")
+
+
+if __name__ == "__main__":
+    main()

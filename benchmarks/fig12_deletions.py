@@ -1,0 +1,32 @@
+"""Figures 11–12 (Appendix B): deletion-ratio sweep.
+
+Delete probabilities 0/25/50/75% over the same stream length; the paper
+finds JOD & dropping configurations are insensitive (or improve) while
+VDC's negative-multiplicity load grows with deletions.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import DROP_DEGREE, emit, make_sssp, paper_workload, run_stream
+
+
+def main() -> None:
+    v = 256
+    for frac in (0.0, 0.25, 0.5, 0.75):
+        initial, stream = paper_workload(
+            v=v, e=1024, num_batches=12, delete_fraction=frac, seed=11
+        )
+        for label, kw in (
+            ("vdc", dict(mode="vdc")),
+            ("jod", dict(mode="jod")),
+            ("detdrop", dict(drop=DROP_DEGREE(0.5, "det"))),
+            ("probdrop", dict(drop=DROP_DEGREE(0.5, "prob"))),
+        ):
+            eng = make_sssp(initial, v, [0, 1, 2, 3], **kw)
+            t = run_stream(eng, stream)
+            emit(f"fig12/del{int(frac * 100)}/{label}", t / len(stream),
+                 f"bytes={eng.nbytes()};diffs={int(eng.state.dstore.count.sum())}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Figure 4: SCRATCH / VDC / JOD across query classes — time and memory.
+
+VDC materializes δJ (memory ∝ E); JOD drops it (§4).  Expected shape:
+JOD memory < VDC memory (paper: 1.2×–5.5×), both ≪ SCRATCH recompute work.
+Runs SPSP, K-hop, WCC, PageRank and an RPQ on a labelled graph.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, paper_workload, run_stream
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.core.scratch import scratch_like
+from repro.data.graphgen import ldbc_like_graph, split_90_10, update_stream
+
+
+def _compare(name, make_engine, initial, stream, v):
+    engines = {
+        "vdc": make_engine(mode="vdc"),
+        "jod": make_engine(mode="jod"),
+    }
+    for label, eng in engines.items():
+        t = run_stream(eng, stream)
+        emit(f"fig4/{name}/{label}", t / len(stream), f"bytes={eng.nbytes()}")
+    sc = scratch_like(
+        engines["jod"].cfg,
+        DynamicGraph(v, initial, capacity=len(initial) * 4 + 64),
+        engines["jod"].state.init,
+    )
+    t = run_stream(sc, stream)
+    emit(f"fig4/{name}/scratch", t / len(stream), "bytes=0")
+    ratio = engines["vdc"].nbytes() / max(engines["jod"].nbytes(), 1)
+    emit(f"fig4/{name}/jod_memory_ratio", 0.0, f"vdc_over_jod={ratio:.2f}")
+
+
+def main() -> None:
+    v = 256
+    initial, stream = paper_workload(v=v, e=1024, num_batches=10)
+    cap = len(initial) * 4 + 64
+
+    _compare(
+        "spsp",
+        lambda **kw: q.sssp(DynamicGraph(v, initial, capacity=cap), [0, 1, 2, 3], max_iters=48, **kw),
+        initial, stream, v,
+    )
+    _compare(
+        "khop",
+        lambda **kw: q.khop(DynamicGraph(v, initial, capacity=cap), [0, 1, 2, 3], k=5, **kw),
+        initial, stream, v,
+    )
+    sym = initial + [(b, a, w) for (a, b, w) in initial]
+    sym_stream = [bat + [(y, x, l, w, s) for (x, y, l, w, s) in bat] for bat in stream]
+    _compare(
+        "wcc",
+        lambda **kw: q.wcc(DynamicGraph(v, sym, capacity=4 * len(sym) + 64), max_iters=64, **kw),
+        sym, sym_stream, v,
+    )
+    _compare(
+        "pagerank",
+        lambda **kw: q.pagerank(DynamicGraph(v, initial, capacity=cap), iters=10, **kw),
+        initial, stream, v,
+    )
+
+    # RPQ Q1/Q2 on a labelled (LDBC-like) graph
+    lg = ldbc_like_graph(v, 1024, seed=3)
+    linit, lpool = split_90_10(lg, seed=3)
+    lstream = update_stream(linit, v, num_batches=10, insert_pool=lpool, seed=4)
+    for qname, nfa in [("rpq_q1", q.NFA.star(1)), ("rpq_q2", q.NFA.concat_star(1, 2))]:
+        for mode in ("vdc", "jod"):
+            rpq = q.RPQ(DynamicGraph(v, linit, capacity=4 * len(linit) + 64),
+                        nfa, sources=[0, 1], mode=mode)
+            t = run_stream(rpq, lstream)
+            emit(f"fig4/{qname}/{mode}", t / len(lstream), f"bytes={rpq.nbytes()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Figure 6: Random vs Degree drop selection (and 6b's recompute profile).
+
+(a) sweep drop probability p for Det/Prob × Random/Degree, reporting
+    dropped-diff counts vs maintenance time — Degree should dominate Random.
+(b) per-degree-bucket average recompute counts under Random dropping — low
+    degree buckets recompute rarely; high-degree vertices are hammered
+    (the paper's justification for Degree selection).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (DROP_DEGREE, DROP_RANDOM, emit, make_khop,
+    paper_workload, run_stream, run_stream_stats)
+
+
+def main() -> None:
+    v = 256
+    initial, stream = paper_workload(v=v, e=1024, num_batches=10, weighted=False)
+    sources = list(range(10))  # paper: 10 K-hop queries
+
+    for p in (0.25, 0.75):
+        for sel, mk in (("random", DROP_RANDOM), ("degree", DROP_DEGREE)):
+            for mode in ("det", "prob"):
+                eng = make_khop(initial, v, sources, drop=mk(p, mode))
+                t, tot = run_stream_stats(eng, stream)
+                dropped = tot["dropped"]
+                repairs = int(eng.state.repair_counts.sum())
+                emit(
+                    f"fig6a/{mode}-{sel}_p{p}", t / len(stream),
+                    f"dropped={dropped};repairs={repairs};bytes={eng.nbytes()}",
+                )
+
+    # (b) recompute counts by degree bucket, Random Det-Drop p=0.1
+    eng = make_khop(initial, v, sources, drop=DROP_RANDOM(0.1))
+    run_stream(eng, stream)
+    repair = np.asarray(eng.state.repair_counts).sum(axis=0)  # [V]
+    deg = eng.graph.degrees_total()
+    buckets = [(1, 4), (4, 16), (16, 64), (64, 1 << 30)]
+    for lo, hi in buckets:
+        m = (deg >= lo) & (deg < hi)
+        avg = float(repair[m].mean()) if m.any() else 0.0
+        emit(f"fig6b/recomputes_deg[{lo},{hi})", 0.0,
+             f"avg_recomputes={avg:.2f};vertices={int(m.sum())}")
+
+
+if __name__ == "__main__":
+    main()

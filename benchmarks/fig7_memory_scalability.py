@@ -1,0 +1,63 @@
+"""Figure 7: max concurrent queries under a fixed memory budget.
+
+For each system (VDC / JOD / Det-Drop / Prob-Drop, Degree selection) find
+the largest Q whose post-stream diff footprint fits the budget; for the
+dropping systems, find the smallest p that fits (paper's ideal-knob
+assumption) and report the runtime at that p.  Expected ordering:
+VDC < JOD < Det-Drop < Prob-Drop (paper: JOD 2.3–10×, dropping up to 20×,
+Prob ~1.5× over Det).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import DROP_DEGREE, emit, make_sssp, paper_workload, run_stream
+
+BUDGET = 96 * 1024  # bytes of diff state — container-scale stand-in for 10GB
+
+
+def fits(make, qs, budget, stream):
+    """Largest q in qs whose footprint fits; returns (q, engine, time)."""
+    best = None
+    for nq in qs:
+        eng = make(nq)
+        t = run_stream(eng, stream)
+        if eng.nbytes() <= budget:
+            best = (nq, eng, t)
+        else:
+            break
+    return best
+
+
+def main() -> None:
+    v = 256
+    initial, stream = paper_workload(v=v, e=1024, num_batches=8)
+    qs = [1, 2, 4, 8, 16, 32, 64, 128]
+
+    vdc = fits(lambda nq: make_sssp(initial, v, list(range(nq)), mode="vdc"), qs, BUDGET, stream)
+    emit("fig7/vdc_max_q", vdc[2] / len(stream), f"max_queries={vdc[0]};bytes={vdc[1].nbytes()}")
+
+    jod = fits(lambda nq: make_sssp(initial, v, list(range(nq)), mode="jod"), qs, BUDGET, stream)
+    emit("fig7/jod_max_q", jod[2] / len(stream), f"max_queries={jod[0]};bytes={jod[1].nbytes()}")
+
+    for mode in ("det", "prob"):
+        best = None
+        for nq in qs:
+            # smallest p ∈ grid that fits the budget at this Q
+            for p in (0.0, 0.3, 0.6, 0.9, 1.0):
+                eng = make_sssp(initial, v, list(range(nq)), drop=DROP_DEGREE(p, mode))
+                t = run_stream(eng, stream)
+                if eng.nbytes() <= BUDGET:
+                    best = (nq, p, t, eng.nbytes())
+                    break
+            else:
+                break
+        if best:
+            nq, p, t, b = best
+            emit(f"fig7/{mode}drop_max_q", t / len(stream),
+                 f"max_queries={nq};p={p};bytes={b}")
+    emit("fig7/speedup_summary", 0.0,
+         f"jod_over_vdc={jod[0] / max(vdc[0], 1):.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Figure 8: PageRank / WCC under a tight memory budget (Det vs Prob).
+
+Single 'query' batch computations: find the smallest drop probability at
+which the diff footprint fits the budget, then compare Det-Drop vs
+Prob-Drop runtime.  Prob-Drop should need a lower p (its DroppedVT is
+constant-size) and thus run no slower — the paper's Fig. 8 conclusion.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import DROP_DEGREE, emit, paper_workload, run_stream
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+
+
+def find_p(make, budget, stream):
+    for p in (0.0, 0.3, 0.5, 0.7, 0.9, 1.0):
+        eng = make(p)
+        t = run_stream(eng, stream)
+        if eng.nbytes() <= budget:
+            return p, t, eng.nbytes()
+    return None
+
+
+def main() -> None:
+    v = 256
+    initial, stream = paper_workload(v=v, e=1024, num_batches=8)
+    cap = len(initial) * 4 + 64
+
+    # WCC on symmetrized graph
+    sym = initial + [(b, a, w) for (a, b, w) in initial]
+    sym_stream = [bat + [(y, x, l, w, s) for (x, y, l, w, s) in bat] for bat in stream]
+    for mode in ("det", "prob"):
+        got = find_p(
+            lambda p: q.wcc(DynamicGraph(v, sym, capacity=4 * len(sym) + 64),
+                            max_iters=64, drop=DROP_DEGREE(p, mode)),
+            budget=6 * 1024, stream=sym_stream,
+        )
+        if got:
+            emit(f"fig8/wcc_{mode}", got[1] / len(sym_stream), f"p={got[0]};bytes={got[2]}")
+        else:
+            emit(f"fig8/wcc_{mode}", 0.0, "DID_NOT_FIT (DroppedVT floor)")
+
+    for mode in ("det", "prob"):
+        got = find_p(
+            lambda p: q.pagerank(DynamicGraph(v, initial, capacity=cap),
+                                 iters=10, drop=DROP_DEGREE(p, mode)),
+            budget=8 * 1024, stream=stream,
+        )
+        if got:
+            emit(f"fig8/pagerank_{mode}", got[1] / len(stream), f"p={got[0]};bytes={got[2]}")
+        else:
+            emit(f"fig8/pagerank_{mode}", 0.0,
+                 "DID_NOT_FIT at any p (Det-Drop d/(d+s) floor — paper Fig8 needs 100% drop)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""§Roofline: aggregate the dry-run reports into the per-cell roofline table.
+
+Reads ``reports/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
+prints, per (arch × shape × mesh): the three roofline terms in seconds, the
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+
+    PYTHONPATH=src python -m benchmarks.roofline [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
+
+
+def load() -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(REPORT_DIR, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    for unit, scale in (("s", 1), ("ms", 1e-3), ("us", 1e-6), ("ns", 1e-9)):
+        if x >= scale:
+            return f"{x / scale:.2f}{unit}"
+    return f"{x:.1e}s"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+
+    recs = load()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    bad = [r for r in recs if r.get("status") != "ok"]
+
+    if args.markdown:
+        print("| cell | mesh | t_compute | t_memory | t_collective | bottleneck "
+              "| useful-FLOP ratio | roofline frac | HBM/dev |")
+        print("|---|---|---|---|---|---|---|---|---|")
+    else:
+        print("name,us_per_call,derived")
+
+    for r in ok:
+        ro = r["roofline"]
+        cell = f"{r['arch']}:{r['shape']}"
+        dom = max(ro["t_compute_s"], ro["t_memory_s"], ro["t_collective_s"])
+        mem = ro.get("per_device_hbm_bytes") or 0
+        if args.markdown:
+            print(
+                f"| {cell} | {r['mesh']} | {fmt_s(ro['t_compute_s'])} "
+                f"| {fmt_s(ro['t_memory_s'])} | {fmt_s(ro['t_collective_s'])} "
+                f"| {ro['bottleneck']} | {ro['useful_flop_ratio']:.2f} "
+                f"| {ro['roofline_fraction']:.2%} | {mem / 2**30:.1f}GiB |"
+            )
+        else:
+            print(
+                f"roofline/{cell}/{r['mesh']},{dom * 1e6:.1f},"
+                f"bottleneck={ro['bottleneck']};frac={ro['roofline_fraction']:.3f};"
+                f"useful={ro['useful_flop_ratio']:.2f};hbm_gib={mem / 2**30:.1f}"
+            )
+    for r in bad:
+        print(f"roofline/{r['arch']}:{r['shape']}/{r['mesh']},0,STATUS={r['status']}")
+
+
+if __name__ == "__main__":
+    main()

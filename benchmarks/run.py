@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  ``python -m benchmarks.run``
+runs everything; ``--only fig4`` filters.
+"""
+
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    "benchmarks.table1_scaling",
+    "benchmarks.fig4_baselines",
+    "benchmarks.fig5_degree_sweep",
+    "benchmarks.fig6_drop_selection",
+    "benchmarks.fig7_memory_scalability",
+    "benchmarks.fig8_pr_wcc",
+    "benchmarks.fig9_landmark",
+    "benchmarks.fig10_batch_size",
+    "benchmarks.fig12_deletions",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        if args.only and args.only not in mod_name:
+            continue
+        t0 = time.time()
+        try:
+            importlib.import_module(mod_name).main()
+            print(f"# {mod_name} done in {time.time() - t0:.1f}s")
+        except Exception:  # noqa: BLE001
+            failures.append(mod_name)
+            print(f"# {mod_name} FAILED:")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Diff-IFE as a GNN-sampler index: maintain K-hop frontiers of minibatch
+seeds incrementally while the graph changes under training.
+
+``minibatch_lg`` needs fanout sampling over a *dynamic* graph.  The paper's
+K-hop engine maintains, per seed, the set of vertices within K hops; the
+sampler then only draws from fresh frontiers — no full re-walk after each
+edge update.
+
+    PYTHONPATH=src python examples/incremental_gnn_sampling.py
+"""
+
+import numpy as np
+
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+from repro.data.sampler import CSRGraph, sample_subgraph
+
+V = 300
+edges = powerlaw_graph(V, 1500, seed=4, weighted=False)
+initial, pool = split_90_10(edges, seed=4)
+stream = update_stream(initial, V, num_batches=10, insert_pool=pool, seed=5)
+
+seeds = np.asarray([3, 17, 56, 81])
+khop = q.khop(DynamicGraph(V, initial, capacity=8192), [int(s) for s in seeds], k=2)
+
+present = list(initial)
+for i, batch in enumerate(stream):
+    stats = khop.apply_updates(batch)
+    reachable = q.khop_reachable(khop)  # [num_seeds, V] — maintained, not recomputed
+    for (u, v, l, w, s) in batch:
+        if s > 0:
+            present.append((u, v, 1.0))
+        else:
+            present = [(a, b, w_) for (a, b, w_) in present if (a, b) != (u, v)]
+    # draw a fanout sample restricted to fresh 2-hop frontiers
+    src = np.asarray([e[0] for e in present], np.int32)
+    dst = np.asarray([e[1] for e in present], np.int32)
+    csr = CSRGraph.from_edges(src, dst, V)
+    sub = sample_subgraph(csr, seeds, (5, 3), max_nodes=128, max_edges=256,
+                          rng=np.random.default_rng(i))
+    sampled_nodes = sub.node_ids[sub.node_mask]
+    in_frontier = reachable[:, sampled_nodes].any(axis=0)
+    print(f"batch {i}: maintained reruns={int(stats.scheduled):4d}; "
+          f"sample={len(sampled_nodes):3d} nodes, "
+          f"{int(in_frontier.sum())} inside maintained 2-hop frontiers")
+
+# every sampled non-seed node must lie inside some seed's maintained frontier
+assert in_frontier.all(), "sampler escaped the maintained frontier"
+print("\nincremental frontier index is consistent with the sampler")

@@ -1,0 +1,45 @@
+"""Quickstart: register continuous SPSP queries on a dynamic graph and watch
+differential maintenance beat from-scratch re-execution.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core import dropping as dr
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.core.scratch import scratch_like
+from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+
+V = 200
+edges = powerlaw_graph(V, 800, seed=0)
+initial, pool = split_90_10(edges)
+stream = update_stream(initial, V, num_batches=20, insert_pool=pool,
+                       delete_fraction=0.2, seed=1)
+
+# 8 continuous single-pair-shortest-path queries, maintained with
+# Join-On-Demand + probabilistic degree-based dropping (the paper's best).
+sources = list(range(8))
+engine = q.sssp(
+    DynamicGraph(V, initial, capacity=4096),
+    sources,
+    max_iters=48,
+    mode="jod",
+    drop=dr.DropConfig(mode="prob", selection="degree", p=0.5,
+                       tau_min=2, tau_max=24, bloom_bits=1 << 13),
+)
+scratch = scratch_like(engine.cfg, DynamicGraph(V, initial, capacity=4096),
+                       engine.state.init)
+
+for i, batch in enumerate(stream):
+    stats = engine.apply_updates(batch)
+    scratch.apply_updates(batch)
+    assert np.array_equal(engine.answers(), scratch.answers()), "mismatch!"
+    if i % 5 == 0:
+        print(f"batch {i:2d}: scheduled={int(stats.scheduled):5d} vertex-reruns "
+              f"(scratch would do {int(scratch.last_stats.scheduled):7d}); "
+              f"diff bytes={engine.nbytes()}")
+
+print("\nall answers verified identical to from-scratch re-execution")
+print(f"final memory: {engine.nbytes()} B of differences for {len(sources)} queries")

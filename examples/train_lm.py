@@ -1,0 +1,82 @@
+"""End-to-end driver: train a ~100M-param llama-style LM for a few hundred
+steps on synthetic tokens, with checkpointing, fault injection + restart,
+and straggler detection — the full production runtime at laptop scale.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.lm_harness import make_train_step
+from repro.data.synthetic import lm_batch
+from repro.models import transformer as tf
+from repro.optim import adamw_init
+from repro.runtime.fault import FaultPolicy, InjectedFault, StepResult, Supervisor
+from repro.runtime.straggler import StragglerDetector, StepTimer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    ap.add_argument("--inject-fault-at", type=int, default=150)
+    ap.add_argument("--layers", type=int, default=12)
+    ap.add_argument("--d-model", type=int, default=512)
+    ap.add_argument("--vocab", type=int, default=32000)
+    args = ap.parse_args()
+
+    # defaults: ~100M params (12L × d=512 × ff=2048, vocab 32k); shrink with
+    # --layers/--d-model/--vocab for quick CPU validation runs
+    cfg = tf.TransformerConfig(
+        name="lm-100m", num_layers=args.layers, d_model=args.d_model,
+        num_heads=max(args.d_model // 64, 1), num_kv_heads=max(args.d_model // 128, 1),
+        head_dim=64, d_ff=4 * args.d_model, vocab_size=args.vocab,
+        attention="gqa", dtype=jnp.float32, attn_block_q=64, attn_block_k=64,
+    )
+    print(f"params: {cfg.num_params() / 1e6:.1f}M")
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params)
+    step_fn = jax.jit(make_train_step(cfg))
+
+    ckpt = CheckpointManager(args.ckpt_dir, keep=2)
+    detector = StragglerDetector(threshold=3.0)
+    fired = {"done": False}
+
+    def injector(step):
+        if step == args.inject_fault_at and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("simulated node failure")
+
+    sup = Supervisor(ckpt, FaultPolicy(checkpoint_every=50), fault_injector=injector)
+    losses = []
+
+    def one_step(state, step):
+        p, o = state
+        tok, lab = lm_batch(step, batch=args.batch, seq_len=args.seq, vocab=cfg.vocab_size)
+        with StepTimer(detector) as t:
+            p, o, m = step_fn(p, o, jnp.asarray(tok), jnp.asarray(lab))
+            jax.block_until_ready(m["loss"])
+        t.finish(step)
+        losses.append(float(m["loss"]))
+        if step % 25 == 0:
+            print(f"step {step:4d}  loss {losses[-1]:.4f}")
+        return StepResult(state=(p, o), metrics=m)
+
+    t0 = time.time()
+    (params, opt), last = sup.run((params, opt), one_step, num_steps=args.steps)
+    print(f"\n{last} steps in {time.time() - t0:.0f}s; restarts={sup.restarts}")
+    print(f"events: {sup.history}")
+    print(f"loss: first={losses[0]:.3f} last={losses[-1]:.3f} "
+          f"(decreased: {losses[-1] < losses[0]})")
+    assert losses[-1] < losses[0], "loss did not decrease"
+
+
+if __name__ == "__main__":
+    main()

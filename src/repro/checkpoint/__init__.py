@@ -1,0 +1,7 @@
+"""Sharded, atomic, async checkpointing with elastic restore."""
+
+from repro.checkpoint.store import (  # noqa: F401
+    CheckpointManager,
+    restore_checkpoint,
+    save_checkpoint,
+)

@@ -1,0 +1,32 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "llama3.2-1b": "repro.configs.llama3_2_1b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "arctic-480b": "repro.configs.arctic_480b",
+    "pna": "repro.configs.pna",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "dimenet": "repro.configs.dimenet",
+    "equiformer-v2": "repro.configs.equiformer_v2",
+    "mind": "repro.configs.mind",
+    "diff-ife": "repro.configs.diff_ife",
+}
+
+ARCH_NAMES = list(_MODULES)
+
+
+def get_arch(name: str):
+    key = name.replace("_", "-").lower()
+    if key not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(_MODULES[key]).ARCH
+
+
+def all_archs():
+    return [get_arch(n) for n in ARCH_NAMES]

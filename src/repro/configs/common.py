@@ -1,0 +1,87 @@
+"""Config/arch registry protocol + step builders for the dry-run.
+
+Every architecture module exposes an ``ArchSpec``:
+
+    name        arch id (``--arch`` value)
+    family      lm | gnn | recsys | dc
+    full        full-scale config (public-literature numbers)
+    smoke       reduced config for CPU smoke tests
+    shapes      {shape_name: ShapeDef} — the assigned input-shape set
+    build_cell  (cfg, shape, mesh) → Cell with the jittable fn, example-input
+                ShapeDtypeStructs, and in/out shardings
+
+Cells are lowered with ``jax.jit(fn, in_shardings=…).lower(*structs)``; no
+real arrays are ever allocated for the full configs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime import mesh_rules
+
+Struct = jax.ShapeDtypeStruct
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeDef:
+    kind: str  # train | prefill | decode | serve | retrieval
+    meta: dict
+
+
+@dataclasses.dataclass
+class Cell:
+    """One (arch × shape) dry-run unit."""
+
+    name: str
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs (or real arrays for smoke)
+    in_shardings: Any
+    out_shardings: Any = None
+    static_argnums: tuple = ()
+    model_flops: float = 0.0  # 6·N·D (dense) / 6·N_active·D (MoE); 0 = n/a
+    mesh: Any = None  # set by build_cell; activates logical-axis constraints
+
+    def lower(self):
+        from repro.models.common import activation_mesh
+
+        jitted = jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+        )
+        with activation_mesh(self.mesh):
+            return jitted.lower(*self.args)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    name: str
+    family: str
+    full: Callable[[], Any]
+    smoke: Callable[[], Any]
+    shapes: dict
+    build_cell: Callable[[Any, str, Mesh], Cell]
+    notes: str = ""
+
+
+def named(mesh: Mesh, *axes) -> NamedSharding:
+    return NamedSharding(mesh, mesh_rules.logical_to_spec(axes, mesh))
+
+
+def batch_sharding(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, mesh_rules.shard_batch_spec(mesh))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def tree_struct(fn, *args, **kw):
+    """eval_shape → ShapeDtypeStruct tree (no allocation)."""
+    return jax.eval_shape(fn, *args, **kw)

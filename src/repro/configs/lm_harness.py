@@ -1,0 +1,160 @@
+"""Shared cell builders for the LM-family architectures.
+
+Shapes (assigned): train_4k (train_step), prefill_32k (prefill), decode_32k
+(serve_step: 1 new token against a seq_len KV cache).  long_500k is skipped
+for these archs — all five are full-softmax attention (GQA/MLA included);
+see DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.common import (
+    Cell,
+    ShapeDef,
+    Struct,
+    batch_sharding,
+    replicated,
+    tree_struct,
+)
+from repro.models import transformer as tf
+from repro.optim import adamw_init, adamw_update
+from repro.runtime import mesh_rules
+
+LM_SHAPES = {
+    "train_4k": ShapeDef("train", dict(seq_len=4096, global_batch=256)),
+    "prefill_32k": ShapeDef("prefill", dict(seq_len=32768, global_batch=32)),
+    "decode_32k": ShapeDef("decode", dict(seq_len=32768, global_batch=128)),
+    # long_500k: skipped — pure full-attention archs (documented in DESIGN.md)
+}
+
+
+def param_structs(cfg: tf.TransformerConfig):
+    return tree_struct(lambda: tf.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def param_shardings(cfg: tf.TransformerConfig, mesh: Mesh):
+    specs = tf.param_specs(cfg)
+    return mesh_rules.shardings_for(specs, mesh)
+
+
+def opt_structs(cfg: tf.TransformerConfig):
+    ps = param_structs(cfg)
+    return tree_struct(adamw_init, ps)
+
+
+def opt_shardings(cfg: tf.TransformerConfig, mesh: Mesh):
+    from repro.optim.adamw import AdamWState
+
+    psh = param_shardings(cfg, mesh)
+    return AdamWState(step=replicated(mesh), mu=psh, nu=psh)
+
+
+def make_train_step(cfg: tf.TransformerConfig, grad_accum: int = 1):
+    """grad_accum > 1 splits the batch into microbatches scanned
+    sequentially, accumulating grads — activation memory scales 1/accum at
+    identical math (the optimizer sees the mean gradient)."""
+
+    def train_step(params, opt_state, tokens, labels):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(
+                lambda p: tf.loss_fn(cfg, p, tokens, labels)
+            )(params)
+        else:
+            b = tokens.shape[0]
+            assert b % grad_accum == 0
+            mb = b // grad_accum
+            tok = tokens.reshape(grad_accum, mb, -1)
+            lab = labels.reshape(grad_accum, mb, -1)
+
+            def micro(carry, xs):
+                acc, loss_acc = carry
+                t, l = xs
+                loss, g = jax.value_and_grad(
+                    lambda p: tf.loss_fn(cfg, p, t, l)
+                )(params)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return (acc, loss_acc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), (tok, lab))
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+        new_params, new_opt, gnorm = adamw_update(params, grads, opt_state, lr=3e-4)
+        return new_params, new_opt, {"loss": loss, "gnorm": gnorm}
+
+    return train_step
+
+
+def make_prefill(cfg: tf.TransformerConfig):
+    def prefill(params, tokens):
+        logits, cache, _ = tf.forward(cfg, params, tokens)
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode(cfg: tf.TransformerConfig):
+    def serve_step(params, cache, tokens, pos):
+        return tf.decode_step(cfg, params, cache, tokens, pos)
+
+    return serve_step
+
+
+def build_lm_cell(
+    cfg: tf.TransformerConfig, shape_name: str, mesh: Mesh,
+    force_accum: int | None = None,
+) -> Cell:
+    shape = LM_SHAPES[shape_name]
+    meta = shape.meta
+    b, s = meta["global_batch"], meta["seq_len"]
+    ps = param_structs(cfg)
+    psh = param_shardings(cfg, mesh)
+    bsh = batch_sharding(mesh)
+    model_flops = 6.0 * cfg.num_active_params() * b * s
+
+    if shape.kind == "train":
+        # §Perf: microbatch counts chosen so the step fits 16 GB v5e HBM.
+        # force_accum=1 is used by the dry-run's cost extrapolation (the
+        # accumulate-scan body would be counted once by cost_analysis).
+        accum = {
+            "qwen2-72b": 16,
+            "arctic-480b": 32,  # MoE dispatch buffers dominate → deeper split
+            "minicpm3-4b": 8,  # 62 layers of saved residuals
+            "qwen2-moe-a2.7b": 8,
+        }.get(cfg.name, 1)
+        fn = make_train_step(cfg, grad_accum=force_accum or accum)
+        args = (
+            ps,
+            opt_structs(cfg),
+            Struct((b, s), jnp.int32),
+            Struct((b, s), jnp.int32),
+        )
+        in_sh = (psh, opt_shardings(cfg, mesh), bsh, bsh)
+        return Cell(f"{cfg.name}:{shape_name}", fn, args, in_sh, model_flops=model_flops, mesh=mesh)
+
+    if shape.kind == "prefill":
+        fn = make_prefill(cfg)
+        args = (ps, Struct((b, s), jnp.int32))
+        in_sh = (psh, bsh)
+        return Cell(f"{cfg.name}:{shape_name}", fn, args, in_sh, model_flops=model_flops, mesh=mesh)
+
+    if shape.kind == "decode":
+        fn = make_decode(cfg)
+        cache_structs = tree_struct(lambda: tf.init_cache(cfg, b, s))
+        cache_sh = mesh_rules.shardings_for(
+            tf.cache_specs(cfg), mesh
+        )
+        args = (ps, cache_structs, Struct((b,), jnp.int32), Struct((b,), jnp.int32))
+        in_sh = (psh, cache_sh, bsh, bsh)
+        # decode model flops: one token per sequence
+        return Cell(
+            f"{cfg.name}:{shape_name}", fn, args, in_sh,
+            model_flops=6.0 * cfg.num_active_params() * b, mesh=mesh)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,14 @@
+"""Core: the paper's differential computation engine and optimizations."""
+
+from repro.core.engine import (  # noqa: F401
+    DiffIFE,
+    EngineConfig,
+    EngineState,
+    GraphArrays,
+    MaintainStats,
+    maintain,
+    make_state,
+    nbytes_accounted,
+    reassemble,
+)
+from repro.core.graph import DynamicGraph, GraphSnapshot  # noqa: F401

@@ -1,0 +1,131 @@
+"""Vectorized Bloom filter for Prob-Drop (paper §5.1.2).
+
+The paper inserts 8-byte ``vertex_id ‖ iteration`` keys into a heap-allocated
+Bloom filter (lemire/bloofi).  The TPU form is a flat bit array with k probes
+derived by double hashing (Kirsch–Mitzenmacher): ``probe_j = h1 + j·h2 mod M``
+with murmur3-finalizer mixes — branch-free, gather-only, and batchable over
+every (query, vertex) pair at once.
+
+The pure-JAX state is a ``bool[Q, M]`` array (simple scatter/gather); the
+*accounted* memory is the packed size ``M/8`` bytes, which is also the layout
+the Pallas ``bloom`` kernel operates on (u32 words, bit tests in VMEM).
+
+Guarantee: no false negatives (a dropped VT pair always probes positive), so
+Prob-Drop can only cause spurious recomputation — never a wrong answer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+_C1 = jnp.uint32(0x85EBCA6B)
+_C2 = jnp.uint32(0xC2B2AE35)
+_C3 = jnp.uint32(0x27D4EB2F)
+
+
+def _mix(x: Array) -> Array:
+    """murmur3 fmix32."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= _C1
+    x ^= x >> 13
+    x *= _C2
+    x ^= x >> 16
+    return x
+
+
+def hash_key(v: Array, i: Array, salt: Array | int = 0) -> tuple[Array, Array]:
+    """(h1, h2) for double hashing of the (vertex, iteration) key.
+
+    Mirrors the paper's 8-byte concatenated key: both halves enter the mix.
+    ``salt`` decorrelates per-query filters sharing one array.
+    """
+    v = jnp.asarray(v, jnp.uint32)
+    i = jnp.asarray(i, jnp.uint32)
+    s = jnp.asarray(salt, jnp.uint32)
+    h1 = _mix(v * _C3 ^ _mix(i + s))
+    h2 = _mix(i * _C1 ^ _mix(v ^ (s * _C2))) | jnp.uint32(1)  # odd → full cycle
+    return h1, h2
+
+
+@jax.tree_util.register_pytree_node_class
+class BloomFilter:
+    """bits: bool [..., M]; num_hashes is static (pytree aux data)."""
+
+    def __init__(self, bits: Array, num_hashes: int) -> None:
+        self.bits = bits
+        self.num_hashes = num_hashes
+
+    def tree_flatten(self):
+        return (self.bits,), self.num_hashes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    def _replace(self, bits: Array) -> "BloomFilter":
+        return BloomFilter(bits, self.num_hashes)
+
+    @property
+    def num_bits(self) -> int:
+        return int(self.bits.shape[-1])
+
+    @property
+    def nbytes_accounted(self) -> int:
+        """Packed size — what a production filter occupies (M/8 per filter)."""
+        import numpy as np
+
+        lead = int(np.prod(self.bits.shape[:-1])) if self.bits.ndim > 1 else 1
+        return lead * ((self.num_bits + 7) // 8)
+
+
+def make(shape: tuple[int, ...], num_bits: int, num_hashes: int = 4) -> BloomFilter:
+    return BloomFilter(bits=jnp.zeros((*shape, num_bits), dtype=bool), num_hashes=num_hashes)
+
+
+def _probes(flt: BloomFilter, v: Array, i: Array, salt: Array | int) -> Array:
+    h1, h2 = hash_key(v, i, salt)
+    j = jnp.arange(flt.num_hashes, dtype=jnp.uint32)
+    probes = (h1[..., None] + j * h2[..., None]) % jnp.uint32(flt.num_bits)
+    return probes.astype(jnp.int32)  # [..., k]
+
+
+def insert(flt: BloomFilter, v: Array, i: Array, mask: Array, salt: Array | int = 0) -> BloomFilter:
+    """Set bits for keys (v, i) where ``mask``.
+
+    ``v``/``i``/``mask`` share shape ``[..., N]`` matching the filter's
+    leading dims; inserts are scattered along the last axis.
+    """
+    probes = _probes(flt, v, i, salt)  # [..., N, k]
+    # Masked inserts scatter to a sacrificial bit slot (M) that is dropped.
+    tgt = jnp.where(mask[..., None], probes, flt.num_bits)
+    padded = jnp.concatenate(
+        [flt.bits, jnp.zeros((*flt.bits.shape[:-1], 1), dtype=bool)], axis=-1
+    )
+    flat = tgt.reshape(*tgt.shape[:-2], -1)
+    if flat.ndim == 1:
+        new = padded.at[flat].set(True)
+    else:
+        # batched leading dims: flatten them, scatter per row, restore.
+        lead = flt.bits.shape[:-1]
+        p2 = padded.reshape(-1, padded.shape[-1])
+        f2 = flat.reshape(p2.shape[0], -1)
+        rows = jnp.arange(p2.shape[0])[:, None]
+        new = p2.at[rows, f2].set(True).reshape(*lead, -1)
+    return BloomFilter(bits=new[..., : flt.num_bits], num_hashes=flt.num_hashes)
+
+
+def query(flt: BloomFilter, v: Array, i: Array, salt: Array | int = 0) -> Array:
+    """True where (v, i) *may* have been inserted (no false negatives)."""
+    probes = _probes(flt, v, i, salt)  # [..., N, k]
+    got = jnp.take_along_axis(
+        flt.bits[..., None, :], probes, axis=-1
+    )
+    return got.all(axis=-1)
+
+
+def fill_fraction(flt: BloomFilter) -> Array:
+    return flt.bits.mean(axis=-1)

@@ -1,0 +1,182 @@
+"""Dense difference store — the TPU form of the paper's eager-merged δD index.
+
+After eager merging (§4.2) timestamps are one-dimensional (IFE iteration) and
+negative multiplicities are implied, so each key holds a sorted list of
+``(iteration, state)`` *change points*.  GraphflowDB stores these as a hash
+table of sorted Java lists; here they are fixed-capacity sorted rows of a
+dense tensor so every operation vectorizes over all (query, key) pairs:
+
+    iters : int32  [..., S]   sorted ascending, padded with IMAX
+    vals  : f32    [..., S]
+    count : int32  [...]
+
+The leading axes are ``[Q, V]`` for the vertex-state collection ``D`` and
+``[Q, E]`` for VDC's join-output collection ``J``.
+
+Two deliberate deviations from the paper (see DESIGN.md §2):
+
+* **Implicit init diffs** — the paper's trace stores ``+(v, ∞)`` for every
+  vertex at iteration 0; we make the initial state implicit (a lookup that
+  finds nothing returns the query's init), saving one stored diff per key.
+* **Bounded capacity** — rows hold at most ``S`` change points.  On overflow
+  the *oldest* change point is evicted and routed through the dropping
+  machinery (DroppedVT / Bloom), so capacity pressure degrades to recompute
+  (paper §5 semantics), never to a wrong answer.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+class DiffStore(NamedTuple):
+    iters: Array  # int32 [..., S]
+    vals: Array  # float32 [..., S]
+    count: Array  # int32 [...]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.iters.shape[-1])
+
+
+def make(shape: tuple[int, ...], capacity: int) -> DiffStore:
+    return DiffStore(
+        iters=jnp.full((*shape, capacity), IMAX, dtype=jnp.int32),
+        vals=jnp.zeros((*shape, capacity), dtype=jnp.float32),
+        count=jnp.zeros(shape, dtype=jnp.int32),
+    )
+
+
+def used_entries(store: DiffStore) -> Array:
+    return store.count.sum()
+
+
+def lookup_le(store: DiffStore, i: Array | int) -> tuple[Array, Array, Array]:
+    """Latest stored change point at iteration ≤ i.
+
+    Returns ``(val, found_iter, found)``; where ``found`` is False the caller
+    substitutes the implicit init state.  Padding is IMAX so a simple
+    ≤-count reduction finds the insertion point (rows are sorted).
+    """
+    i = jnp.asarray(i, dtype=jnp.int32)
+    mask = store.iters <= i[..., None] if i.ndim else store.iters <= i
+    idx = mask.sum(axis=-1) - 1  # [-1 .. S-1]
+    found = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    val = jnp.take_along_axis(store.vals, safe[..., None], axis=-1)[..., 0]
+    it = jnp.take_along_axis(store.iters, safe[..., None], axis=-1)[..., 0]
+    return val, jnp.where(found, it, -1), found
+
+
+def lookup_lt(store: DiffStore, i: Array | int) -> tuple[Array, Array, Array]:
+    """Latest stored change point strictly before iteration i."""
+    return lookup_le(store, jnp.asarray(i, dtype=jnp.int32) - 1)
+
+
+def value_at(store: DiffStore, i: Array | int) -> tuple[Array, Array]:
+    """(has_entry_at_i, value_at_i) for an exact iteration."""
+    i = jnp.asarray(i, dtype=jnp.int32)
+    eq = store.iters == (i[..., None] if i.ndim else i)
+    has = eq.any(axis=-1)
+    idx = jnp.argmax(eq, axis=-1)
+    val = jnp.take_along_axis(store.vals, idx[..., None], axis=-1)[..., 0]
+    return has, val
+
+
+def has_at(store: DiffStore, i: Array | int) -> Array:
+    i = jnp.asarray(i, dtype=jnp.int32)
+    return (store.iters == (i[..., None] if i.ndim else i)).any(axis=-1)
+
+
+def _shift_left(x: Array, fill) -> Array:
+    return jnp.concatenate(
+        [x[..., 1:], jnp.full_like(x[..., :1], fill)], axis=-1
+    )
+
+
+def _shift_right(x: Array) -> Array:
+    return jnp.concatenate([x[..., :1], x[..., :-1]], axis=-1)
+
+
+def upsert(
+    store: DiffStore, i: Array | int, write: Array, new_vals: Array
+) -> tuple[DiffStore, Array, Array]:
+    """Insert-or-overwrite change point ``(i, new_vals)`` where ``write``.
+
+    Eager-merge semantics: one change point per (key, iteration); a second
+    write at the same iteration overwrites (the paper merges the new graph
+    version's diff into the row).  Returns ``(store, evicted_mask,
+    evicted_iter)`` — evictions happen only when a full row receives a new
+    iteration and must shed its *oldest* change point; the engine registers
+    them with the dropping structures.
+    """
+    i = jnp.asarray(i, dtype=jnp.int32)
+    icol = i[..., None] if i.ndim else i
+    s = store.capacity
+
+    exists = (store.iters == icol).any(axis=-1)
+    # --- overwrite path -------------------------------------------------
+    eqidx = jnp.argmax(store.iters == icol, axis=-1)
+    ow_vals = jnp.where(
+        (write & exists)[..., None]
+        & (jnp.arange(s) == eqidx[..., None]),
+        (new_vals[..., None] if new_vals.ndim == store.count.ndim else new_vals),
+        store.vals,
+    )
+
+    # --- insert path (row may be full → evict oldest) --------------------
+    ins = write & ~exists
+    full = store.count >= s
+    evict = ins & full
+    evicted_iter = store.iters[..., 0]
+    base_iters = jnp.where(evict[..., None], _shift_left(store.iters, IMAX), store.iters)
+    base_vals = jnp.where(evict[..., None], _shift_left(store.vals, 0.0), ow_vals)
+    base_count = jnp.where(evict, store.count - 1, store.count)
+
+    pos = (base_iters < icol).sum(axis=-1)
+    ar = jnp.arange(s)
+    sel_keep = ar < pos[..., None]
+    sel_new = ar == pos[..., None]
+    nv = new_vals[..., None] if new_vals.ndim == store.count.ndim else new_vals
+    ins_iters = jnp.where(
+        sel_keep, base_iters, jnp.where(sel_new, icol, _shift_right(base_iters))
+    )
+    ins_vals = jnp.where(sel_keep, base_vals, jnp.where(sel_new, nv, _shift_right(base_vals)))
+
+    out_iters = jnp.where(ins[..., None], ins_iters, base_iters)
+    out_vals = jnp.where(ins[..., None], ins_vals, base_vals)
+    out_count = jnp.where(ins, base_count + 1, base_count)
+    return DiffStore(out_iters, out_vals, out_count), evict, evicted_iter
+
+
+def remove_at(store: DiffStore, i: Array | int, mask: Array) -> DiffStore:
+    """Remove the change point at exactly iteration ``i`` where ``mask``.
+
+    Used when maintenance finds that a previously-stored diff vanishes (the
+    new value equals the preceding change point: the +/- pair cancels).
+    """
+    i = jnp.asarray(i, dtype=jnp.int32)
+    icol = i[..., None] if i.ndim else i
+    eq = store.iters == icol
+    do = mask & eq.any(axis=-1)
+    pos = jnp.argmax(eq, axis=-1)
+    ar = jnp.arange(store.capacity)
+    after = ar >= pos[..., None]
+    sl_iters = _shift_left(store.iters, IMAX)
+    sl_vals = _shift_left(store.vals, 0.0)
+    out_iters = jnp.where(do[..., None] & after, sl_iters, store.iters)
+    out_vals = jnp.where(do[..., None] & after, sl_vals, store.vals)
+    out_count = jnp.where(do, store.count - 1, store.count)
+    return DiffStore(out_iters, out_vals, out_count)
+
+
+def nbytes_used(store: DiffStore, bytes_per_entry: int = 8) -> Array:
+    """Accountant view: live entries × (4B iter + 4B state) — matches the
+    paper's difference-count-based memory metering."""
+    return store.count.sum() * bytes_per_entry

@@ -1,0 +1,184 @@
+"""Partial difference dropping (paper §5): Det-Drop, Prob-Drop, selection.
+
+Two components, mirroring the paper:
+
+* **Dropped-difference maintenance** — either a deterministic dense store of
+  (vertex, iteration) pairs (Det-Drop; hash-table-of-sorted-lists → sorted
+  rows, like the diff store but iteration-only), or a Bloom filter
+  (Prob-Drop).  Det-Drop keeps ~4 bytes per dropped diff (the paper's
+  d/(d+s) scalability floor); Prob-Drop's footprint is fixed.
+
+* **Selection** — Random (Bernoulli p) or Degree (τ_min / τ_max / p,
+  §5.2.1).  Decisions use a counter-based stateless hash of
+  (seed, query, vertex, iteration) so drop sets are reproducible and
+  independent of sharding.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import bloom as bloom_lib
+from repro.core import diffstore as ds
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DropConfig:
+    mode: str = "none"  # none | det | prob
+    selection: str = "random"  # random | degree
+    p: float = 0.0  # drop probability
+    tau_min: float = 2.0  # drop everything below (degree policy)
+    tau_max: float = float("inf")  # keep everything above (80th pctile)
+    det_capacity: int = 32  # S_d (Det-Drop slots per vertex)
+    bloom_bits: int = 1 << 16  # per-query filter bits
+    bloom_hashes: int = 4
+    seed: int = 0
+
+    def enabled(self) -> bool:
+        return self.mode != "none"
+
+
+class DropState(NamedTuple):
+    """DroppedVT — tracks dropped (vertex, iteration) pairs."""
+
+    det: ds.DiffStore | None  # iters used; vals carry zeros
+    flt: bloom_lib.BloomFilter | None
+    det_overflow: Array  # counter: det evictions would lose dropped VTs
+    max_iter: Array  # int32 — highest iteration ever dropped (horizon term:
+    # dropped change points still bound the engine's upper-bound-rule sweep)
+
+    def nbytes_accounted(self) -> Array:
+        if self.det is not None:
+            return self.det.count.sum() * 4  # paper: d bytes per dropped VT
+        assert self.flt is not None
+        return jnp.asarray(self.flt.nbytes_accounted, jnp.int32)
+
+
+def make_state(cfg: DropConfig, num_queries: int, num_keys: int) -> DropState:
+    z = jnp.zeros((), jnp.int32)
+    neg = jnp.full((), -1, jnp.int32)
+    if cfg.mode == "det":
+        return DropState(
+            det=ds.make((num_queries, num_keys), cfg.det_capacity),
+            flt=None,
+            det_overflow=z,
+            max_iter=neg,
+        )
+    if cfg.mode == "prob":
+        return DropState(
+            det=None,
+            flt=bloom_lib.make((num_queries,), cfg.bloom_bits, cfg.bloom_hashes),
+            det_overflow=z,
+            max_iter=neg,
+        )
+    return DropState(det=None, flt=None, det_overflow=z, max_iter=neg)
+
+
+def _uniform01(seed: int, q: Array, v: Array, i: Array) -> Array:
+    """Deterministic per-(seed, q, v, i) uniform in [0, 1)."""
+    h = bloom_lib._mix(
+        jnp.asarray(v, jnp.uint32)
+        ^ bloom_lib._mix(jnp.asarray(i, jnp.uint32) * jnp.uint32(0x9E3779B9))
+        ^ bloom_lib._mix(jnp.asarray(q, jnp.uint32) + jnp.uint32(seed))
+    )
+    return h.astype(jnp.float32) / jnp.float32(2**32)
+
+
+def select_to_drop(
+    cfg: DropConfig, degree: Array, q: Array, v: Array, i: Array
+) -> Array:
+    """Which candidate differences to drop (paper §5.2, Fig. 3).
+
+    ``degree`` broadcasts against q/v/i (total degree of the vertex).
+    """
+    u = _uniform01(cfg.seed, q, v, i)
+    coin = u < cfg.p
+    if cfg.selection == "random":
+        return coin
+    if cfg.selection == "degree":
+        return jnp.where(
+            degree < cfg.tau_min, True, jnp.where(degree > cfg.tau_max, False, coin)
+        )
+    raise ValueError(f"unknown selection {cfg.selection!r}")
+
+
+def register(state: DropState, i: Array | int, mask: Array) -> DropState:
+    """Record dropped VT pairs (v, i) where ``mask`` [Q, V].
+
+    ``i`` may be a scalar iteration or a per-(q, v) array (evictions drop
+    each row's own oldest iteration).
+    """
+    hi = jnp.where(mask, jnp.asarray(i, jnp.int32), -1).max()
+    max_iter = jnp.maximum(state.max_iter, hi)
+    if state.det is not None:
+        det, evicted, _ = ds.upsert(
+            state.det, jnp.asarray(i, jnp.int32), mask, jnp.zeros(mask.shape, jnp.float32)
+        )
+        return state._replace(
+            det=det,
+            det_overflow=state.det_overflow + evicted.sum(),
+            max_iter=max_iter,
+        )
+    if state.flt is not None:
+        qn, vn = mask.shape
+        v_ids = jnp.broadcast_to(jnp.arange(vn, dtype=jnp.int32)[None, :], (qn, vn))
+        it = jnp.broadcast_to(jnp.asarray(i, jnp.int32), (qn, vn))
+        salt = jnp.arange(qn, dtype=jnp.int32)[:, None]
+        flt = bloom_lib.insert(state.flt, v_ids, it, mask, salt=salt)
+        return state._replace(flt=flt, max_iter=max_iter)
+    return state
+
+
+def unregister(state: DropState, i: Array | int, mask: Array) -> DropState:
+    """Remove dropped records at (v, i) — only possible deterministically.
+
+    Bloom filters cannot delete; stale positives are harmless (the recompute
+    reproduces the stored/current value — see DESIGN.md §2 precedence rule).
+    """
+    if state.det is not None:
+        return state._replace(det=ds.remove_at(state.det, jnp.asarray(i, jnp.int32), mask))
+    return state
+
+
+def dropped_at(state: DropState, i: Array | int, num_vertices: int) -> Array:
+    """Mask [Q, V]: was a diff for (v, i) dropped? (Prob: may false-positive.)"""
+    if state.det is not None:
+        return ds.has_at(state.det, jnp.asarray(i, jnp.int32))
+    if state.flt is not None:
+        qn = state.flt.bits.shape[0]
+        v_ids = jnp.broadcast_to(
+            jnp.arange(num_vertices, dtype=jnp.int32)[None, :], (qn, num_vertices)
+        )
+        it = jnp.full((qn, num_vertices), i, dtype=jnp.int32)
+        salt = jnp.arange(qn, dtype=jnp.int32)[:, None]
+        return bloom_lib.query(state.flt, v_ids, it, salt=salt)
+    raise ValueError("dropped_at called with dropping disabled")
+
+
+def latest_dropped_le(
+    state: DropState, i: int, num_vertices: int
+) -> tuple[Array, Array]:
+    """(found, iter) of the latest dropped VT at iteration ≤ i.
+
+    Paper's AccessDᵢᵛWithDrops step 2.  For Prob-Drop this probes each
+    iteration from i downward (§5.1.2) — vectorized as an all-iteration probe
+    plus an argmax.
+    """
+    if state.det is not None:
+        _, it, found = ds.lookup_le(state.det, jnp.int32(i))
+        return found, it
+    if state.flt is not None:
+        hits = jnp.stack(
+            [dropped_at(state, j, num_vertices) for j in range(i + 1)], axis=-1
+        )  # [Q, V, i+1]
+        found = hits.any(axis=-1)
+        it = jnp.where(
+            found, (i) - jnp.argmax(hits[..., ::-1], axis=-1), -1
+        )
+        return found, it.astype(jnp.int32)
+    raise ValueError("dropping disabled")

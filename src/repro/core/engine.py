@@ -1,0 +1,479 @@
+"""Differential IFE engine — the paper's maintenance procedure, dense on TPU.
+
+One engine serves every configuration in the paper:
+
+* ``mode="vdc"``  — vanilla DC: the Join output ``J`` is materialized as a
+  per-edge difference store (memory ∝ E, the paper's Table-1 bottleneck) and
+  the aggregator reassembles messages *from that store*.
+* ``mode="jod"``  — Join-On-Demand (§4): no J store; messages are recomputed
+  from in-neighbour states on the fly (δE/δD direct rules + upper-bound rule
+  realized as the dirty/frontier schedule below).
+* ``drop.mode="det"|"prob"`` on top of JOD — partial dropping (§5) with
+  deterministic or Bloom-filter DroppedVT and Random/Degree selection.
+
+Timestamps are eager-merged (§4.2) so each (query, vertex) holds a 1-D sorted
+list of (iteration, state) change points; negative multiplicities are implied
+(DESIGN.md §2).
+
+Maintenance is a bounded forward sweep over IFE iterations.  Per iteration i:
+
+    cur        exact D_{i-1} for every vertex (repaired on the fly)
+    sched_i    vertices whose aggregator must rerun: frontier (δD direct
+               rule) ∪ dirty (δE direct rule + upper-bound rule: touched
+               endpoints are rerun at every live iteration — spurious reruns
+               are safe, Thm 4.1 corollary)
+    repair_i   vertices whose change point at i was dropped → recompute to
+               keep ``cur`` exact (AccessDᵢᵛWithDrops, forward form)
+    changed_i  sched_i whose recomputed value differs from the pre-update
+               trajectory → out-neighbours enter frontier_{i+1}
+
+The sweep ends when the frontier is empty and i exceeds the stored horizon
+(max change-point iteration), bounded by ``max_iters``.  Every step is pure
+and fixed-shape → one ``lax.while_loop`` jits/lowers for the production mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import diffstore as ds
+from repro.core import dropping as dr
+from repro.core.graph import DynamicGraph, GraphSnapshot
+from repro.core.semiring import Semiring, reduce_pair
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------------- graph arrays
+class GraphArrays(NamedTuple):
+    """Fixed-shape device view of the graph (COO + degrees)."""
+
+    src: Array  # int32 [E]
+    dst: Array  # int32 [E]
+    weight: Array  # f32 [E]
+    valid: Array  # bool [E]
+    out_degree: Array  # int32 [V]
+    in_degree: Array  # int32 [V]
+
+    @property
+    def num_vertices(self) -> int:
+        return self.out_degree.shape[0]
+
+    @classmethod
+    def from_snapshot(cls, s: GraphSnapshot) -> "GraphArrays":
+        return cls(
+            src=jnp.asarray(s.src, jnp.int32),
+            dst=jnp.asarray(s.dst, jnp.int32),
+            weight=jnp.asarray(s.weight, jnp.float32),
+            valid=jnp.asarray(s.valid),
+            out_degree=jnp.asarray(s.out_degree, jnp.int32),
+            in_degree=jnp.asarray(s.in_degree, jnp.int32),
+        )
+
+
+# --------------------------------------------------------------------------- config / state
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    num_queries: int
+    num_vertices: int
+    max_iters: int
+    semiring: Semiring
+    mode: str = "jod"  # "vdc" | "jod"
+    store_capacity: int = 16  # S: change points per (q, v)
+    jstore_capacity: int = 8  # S_J: per-edge change points (vdc only)
+    drop: dr.DropConfig = dataclasses.field(default_factory=dr.DropConfig)
+    # PageRank: edge weight is alpha / outdeg(src), recomputed from degrees so
+    # deletions retune every sibling message (dirty mask covers them).
+    weight_from_degree: bool = False
+    alpha: float = 0.85
+
+    def __post_init__(self):
+        if self.mode not in ("vdc", "jod"):
+            raise ValueError(f"unknown mode {self.mode!r}")
+        if self.mode == "vdc" and self.drop.enabled():
+            raise ValueError("partial dropping composes with JOD only (paper §5)")
+
+
+class EngineState(NamedTuple):
+    dstore: ds.DiffStore  # [Q, V, S]
+    jstore: ds.DiffStore | None  # [Q, E, S_J] (vdc only)
+    drop: dr.DropState
+    init: Array  # f32 [Q, V] — D_0 (implicit iteration-0 diffs)
+    cur: Array  # f32 [Q, V] — exact values at the last swept iteration
+    repair_counts: Array  # int32 [Q, V] — dropped-diff recomputations (Fig 6b)
+
+
+class MaintainStats(NamedTuple):
+    iters_run: Array  # int32
+    scheduled: Array  # int32 — Σ|sched_i| (algorithmic work, vertex reruns)
+    changed: Array  # int32 — Σ|changed_i| (δD differences produced)
+    repairs: Array  # int32 — Σ|repair_i \ sched_i| (dropped diffs recomputed)
+    written: Array  # int32 — change points upserted
+    removed: Array  # int32 — change points deleted (cancelled +/- pairs)
+    dropped: Array  # int32 — change points dropped instead of stored
+    jwritten: Array  # int32 — J change points upserted (vdc)
+
+
+def zeros_stats() -> MaintainStats:
+    z = jnp.zeros((), jnp.int32)
+    return MaintainStats(z, z, z, z, z, z, z, z)
+
+
+# --------------------------------------------------------------------------- IFE primitives
+def effective_weight(cfg: EngineConfig, g: GraphArrays) -> Array:
+    if cfg.weight_from_degree:
+        outd = jnp.maximum(g.out_degree[g.src], 1).astype(jnp.float32)
+        return jnp.float32(cfg.alpha) / outd
+    return g.weight
+
+
+def edge_messages(cfg: EngineConfig, states: Array, g: GraphArrays) -> Array:
+    """J from D: per-edge messages, identity on invalid slots. [Q, E]"""
+    sr = cfg.semiring
+    msgs = sr.msg(states[:, g.src], effective_weight(cfg, g)[None, :])
+    return jnp.where(g.valid[None, :], msgs, sr.identity)
+
+
+def aggregate(cfg: EngineConfig, msgs: Array, cur: Array, g: GraphArrays) -> Array:
+    """D_i from J_i (+ carry of D_{i-1}): the Min/Sum operator. [Q, V]"""
+    sr = cfg.semiring
+    v = cfg.num_vertices
+    if sr.reduce == "min":
+        seg = jax.vmap(lambda m: jax.ops.segment_min(m, g.dst, num_segments=v))
+    else:
+        seg = jax.vmap(lambda m: jax.ops.segment_sum(m, g.dst, num_segments=v))
+    agg = seg(msgs)
+    if sr.carry_prev:
+        return reduce_pair(sr, agg, cur)
+    return jnp.float32(sr.base) + agg
+
+
+def ife_step(cfg: EngineConfig, cur: Array, g: GraphArrays) -> Array:
+    """One exact IFE step D_{i-1} → D_i (join recomputed — the JOD path)."""
+    return aggregate(cfg, edge_messages(cfg, cur, g), cur, g)
+
+
+def push_frontier(changed: Array, g: GraphArrays) -> Array:
+    """Out-neighbour mask of changed vertices (δD direct rule). [Q, V]"""
+    v = changed.shape[-1]
+    hit = (changed[:, g.src] & g.valid[None, :]).astype(jnp.int32)
+    out = jax.vmap(lambda h: jax.ops.segment_max(h, g.dst, num_segments=v))(hit)
+    return out > 0
+
+
+# --------------------------------------------------------------------------- maintenance
+def make_state(cfg: EngineConfig, init: Array, num_edges: int) -> EngineState:
+    q, v = cfg.num_queries, cfg.num_vertices
+    assert init.shape == (q, v)
+    jstore = (
+        ds.make((q, num_edges), cfg.jstore_capacity) if cfg.mode == "vdc" else None
+    )
+    return EngineState(
+        dstore=ds.make((q, v), cfg.store_capacity),
+        jstore=jstore,
+        drop=dr.make_state(cfg.drop, q, v),
+        init=init.astype(jnp.float32),
+        cur=init.astype(jnp.float32),
+        repair_counts=jnp.zeros((q, v), jnp.int32),
+    )
+
+
+def stored_horizon(store: ds.DiffStore) -> Array:
+    """Max change-point iteration present anywhere (the upper-bound frontier)."""
+    live = jnp.where(store.iters < ds.IMAX, store.iters, -1)
+    return live.max()
+
+
+class _Carry(NamedTuple):
+    i: Array
+    cur: Array  # exact D_{i-1}
+    cur_old: Array  # pre-update trajectory value at i-1 (store-lookup based)
+    stale_old: Array  # bool [Q,V]: old trajectory obscured by a dropped diff
+    frontier: Array  # bool [Q,V]: δD direct-rule schedule for iteration i
+    changed_prev: Array  # bool [Q,V]: value changed at i-1 (feeds J updates)
+    dstore: ds.DiffStore
+    jstore: ds.DiffStore | None
+    drop: dr.DropState
+    repair_counts: Array
+    horizon: Array  # int32 — running max change-point iteration (upper bound;
+    # removals may leave it stale high, costing at most a few empty sweeps,
+    # but avoids a full iters-store scan per iteration)
+    stats: MaintainStats
+
+
+def _sweep_body(
+    cfg: EngineConfig,
+    g: GraphArrays,
+    dirty: Array,
+    init: Array,
+    old_dstore: ds.DiffStore,
+    c: _Carry,
+) -> _Carry:
+    i = c.i
+    q_ids = jnp.arange(cfg.num_queries, dtype=jnp.int32)[:, None]
+    v_ids = jnp.arange(cfg.num_vertices, dtype=jnp.int32)[None, :]
+    degree = (g.out_degree + g.in_degree)[None, :].astype(jnp.float32)
+
+    # -- δE direct + upper-bound rules: dirty endpoints rerun at every live i.
+    sched = c.frontier | dirty[None, :]
+
+    # -- dropped change points at i must be recomputed to keep `cur` exact
+    #    (AccessDᵢᵛWithDrops, forward form).  Prob-Drop may false-positive
+    #    here → spurious but safe recompute.
+    dropped_here = (
+        dr.dropped_at(c.drop, i, cfg.num_vertices)
+        if cfg.drop.enabled()
+        else jnp.zeros_like(sched)
+    )
+    repair = dropped_here & ~sched
+
+    # -- recompute D_i (dense; `sched|repair` is the algorithmic work mask).
+    if cfg.mode == "vdc":
+        # Maintain J at iteration i before reading it: an edge's message
+        # changes when its source changed at i-1, or the edge itself (or a
+        # sibling in-edge of its target) was touched by δE.
+        live_msgs = edge_messages(cfg, c.cur, g)
+        jprev, _, jfound = ds.lookup_le(c.jstore, i)
+        j0 = edge_messages(cfg, init, g)  # implicit J from D_0
+        jprev = jnp.where(jfound, jprev, j0)
+        # NOTE: deliberately NOT masked by g.valid — a deleted edge must
+        # overwrite its stored message with the identity.
+        jdirty = c.changed_prev[:, g.src] | dirty[g.dst][None, :]
+        jwrite = jdirty & (live_msgs != jprev)
+        jstore, _, _ = ds.upsert(c.jstore, i, jwrite, live_msgs)
+        # VDC path: the aggregator *reads* the materialized J difference sets.
+        jval, _, jfound2 = ds.lookup_le(jstore, i)
+        msgs = jnp.where(jfound2, jval, j0)
+        new = aggregate(cfg, msgs, c.cur, g)
+        jwritten = c.stats.jwritten + jwrite.sum(dtype=jnp.int32)
+    else:
+        jstore = c.jstore
+        new = ife_step(cfg, c.cur, g)
+        jwritten = c.stats.jwritten
+
+    # -- pre-update trajectory at i (for δ detection), from the frozen store.
+    old_has, old_val = ds.value_at(old_dstore, i)
+    old_i = jnp.where(old_has, old_val, c.cur_old)
+    # A dropped old change point leaves old_i stale until the next stored old
+    # point re-anchors it; stale scheduled vertices propagate conservatively.
+    stale = (c.stale_old | dropped_here) & ~old_has
+
+    changed = sched & ((new != old_i) | stale)
+
+    # -- new trajectory change point at i?  (vs exact D_{i-1} = cur)
+    want_point = sched & (new != c.cur)
+    has_cur, cur_stored_val = ds.value_at(c.dstore, i)
+
+    if cfg.drop.enabled():
+        to_drop = want_point & dr.select_to_drop(cfg.drop, degree, q_ids, v_ids, i)
+        to_store = want_point & ~to_drop
+    else:
+        to_drop = jnp.zeros_like(want_point)
+        to_store = want_point
+
+    dstore, evicted, evicted_iter = ds.upsert(c.dstore, i, to_store, new)
+    # one fused removal pass (each full remove_at rewrites the store):
+    #   · a dropped point at i that had a stored twin loses the twin
+    #   · a vanished change point (+/- pair cancelled) is deleted
+    vanish = sched & ~want_point & has_cur
+    dstore = ds.remove_at(dstore, i, (to_drop & has_cur) | vanish)
+
+    drop_state = c.drop
+    if cfg.drop.enabled():
+        drop_state = dr.register(drop_state, i, to_drop)
+        drop_state = dr.register(drop_state, evicted_iter, evicted)
+        # a dropped record is stale once the point is stored or vanished
+        drop_state = dr.unregister(drop_state, i, to_store | vanish)
+
+    # -- advance exact/old trajectories, schedule next iteration.
+    recompute = sched | repair
+    cur_next = jnp.where(
+        recompute, new, jnp.where(has_cur, cur_stored_val, c.cur)
+    )
+    frontier_next = push_frontier(changed, g) | changed  # carry: own next value
+
+    stats = MaintainStats(
+        iters_run=c.stats.iters_run + 1,
+        scheduled=c.stats.scheduled + sched.sum(dtype=jnp.int32),
+        changed=c.stats.changed + changed.sum(dtype=jnp.int32),
+        repairs=c.stats.repairs + repair.sum(dtype=jnp.int32),
+        written=c.stats.written + to_store.sum(dtype=jnp.int32),
+        removed=c.stats.removed + vanish.sum(dtype=jnp.int32),
+        dropped=c.stats.dropped + to_drop.sum(dtype=jnp.int32),
+        jwritten=jwritten,
+    )
+    horizon = jnp.where(to_store.any(), jnp.maximum(c.horizon, i), c.horizon)
+    return _Carry(
+        i=i + 1,
+        cur=cur_next,
+        cur_old=old_i,
+        stale_old=stale,
+        frontier=frontier_next,
+        changed_prev=changed,
+        dstore=dstore,
+        jstore=jstore,
+        drop=drop_state,
+        repair_counts=c.repair_counts + repair.astype(jnp.int32),
+        horizon=horizon,
+        stats=stats,
+    )
+
+
+def maintain(
+    cfg: EngineConfig,
+    state: EngineState,
+    g: GraphArrays,
+    dirty: Array,
+) -> tuple[EngineState, MaintainStats]:
+    """One maintenance sweep after a δE batch (or initial computation).
+
+    ``dirty`` is the bool [V] mask of vertices whose in-edge set (or, for
+    degree-derived weights, whose incoming message weights) changed.  For the
+    initial computation pass ``dirty = ones`` with an empty store — the sweep
+    then *is* the static IFE run, recording change points as it goes.
+    """
+    old_dstore = state.dstore  # frozen pre-maintenance snapshot (functional)
+
+    def body(c: _Carry) -> _Carry:
+        return _sweep_body(cfg, g, dirty, state.init, old_dstore, c)
+
+    def cond(c: _Carry) -> Array:
+        # Continue while work is scheduled (frontier/dirty) AND the sweep can
+        # still mutate the store.  Mutations happen only at i ≤ horizon+1:
+        # an in-neighbour change point at j feeds a consumer at j+1 (upper
+        # bound rule), and fresh writes at i extend the horizon to ≥ i, so a
+        # still-converging new trajectory keeps the loop alive while a
+        # permanently-diverged-from-old frontier (no mutations) drains at
+        # horizon+1 instead of max_iters.  i==1 always runs when anything is
+        # dirty (δE direct rule).  The horizon rides the carry (one store
+        # scan per maintain, not per iteration).
+        live = c.frontier.any() | dirty.any()
+        horizon = c.horizon
+        if cfg.drop.enabled():
+            # dropped change points still anchor the upper-bound rule (and
+            # must be swept past so `cur` picks up their repaired values)
+            horizon = jnp.maximum(horizon, c.drop.max_iter)
+        return (
+            (c.i <= jnp.int32(cfg.max_iters))
+            & live
+            & ((c.i == 1) | (c.i <= horizon + 1))
+        )
+
+    c0 = _Carry(
+        i=jnp.int32(1),
+        cur=state.init,
+        cur_old=state.init,
+        stale_old=jnp.zeros((cfg.num_queries, cfg.num_vertices), bool),
+        frontier=jnp.zeros((cfg.num_queries, cfg.num_vertices), bool),
+        changed_prev=jnp.zeros((cfg.num_queries, cfg.num_vertices), bool),
+        dstore=state.dstore,
+        jstore=state.jstore,
+        drop=state.drop,
+        repair_counts=state.repair_counts,
+        horizon=stored_horizon(state.dstore),
+        stats=zeros_stats(),
+    )
+    c = jax.lax.while_loop(cond, body, c0)
+    new_state = EngineState(
+        dstore=c.dstore,
+        jstore=c.jstore,
+        drop=c.drop,
+        init=state.init,
+        cur=c.cur,
+        repair_counts=c.repair_counts,
+    )
+    return new_state, c.stats
+
+
+def reassemble(
+    cfg: EngineConfig, state: EngineState, g: GraphArrays, upto: int | None = None
+) -> Array:
+    """Repair-aware reassembly of D at iteration ``upto`` (paper's Access).
+
+    Bounded forward repair: walk iterations 1..upto; stored points are exact,
+    dropped points are recomputed from the exact previous front.  Cost is
+    O(upto × E) dense, but only dropped lanes represent algorithmic work.
+    """
+    upto = cfg.max_iters if upto is None else upto
+
+    def body(i, cur):
+        has, val = ds.value_at(state.dstore, i)
+        if cfg.drop.enabled():
+            dropped = dr.dropped_at(state.drop, i, cfg.num_vertices)
+            new = ife_step(cfg, cur, g)
+            return jnp.where(has, val, jnp.where(dropped, new, cur))
+        return jnp.where(has, val, cur)
+
+    return jax.lax.fori_loop(1, upto + 1, body, state.init)
+
+
+def answers(cfg: EngineConfig, state: EngineState) -> Array:
+    """Final vertex states after the last maintenance sweep. [Q, V]"""
+    return state.cur
+
+
+# --------------------------------------------------------------------------- memory accounting
+def nbytes_accounted(cfg: EngineConfig, state: EngineState) -> int:
+    """Difference-entry bytes, the paper's memory metric (8 B per diff:
+    4 B iteration + 4 B state; DroppedVT per §5.1 costings)."""
+    total = int(state.dstore.count.sum()) * 8
+    if state.jstore is not None:
+        total += int(state.jstore.count.sum()) * 8
+    if cfg.drop.enabled():
+        total += int(state.drop.nbytes_accounted())
+    return total
+
+
+# --------------------------------------------------------------------------- host-facing wrapper
+class DiffIFE:
+    """Continuous-query processor: owns the dynamic graph + engine state.
+
+    ``DiffIFE`` is the host driver (the GDBMS's continuous query processor);
+    all device work happens in the pure functions above, jitted per graph
+    capacity so update batches never recompile.
+    """
+
+    def __init__(
+        self,
+        cfg: EngineConfig,
+        graph: DynamicGraph,
+        init: np.ndarray | Array,
+    ) -> None:
+        self.cfg = cfg
+        self.graph = graph
+        self.g = GraphArrays.from_snapshot(graph.snapshot())
+        self.state = make_state(cfg, jnp.asarray(init, jnp.float32), graph.capacity)
+        self._maintain = jax.jit(partial(maintain, cfg))
+        self.last_stats: MaintainStats | None = None
+        # initial computation: every vertex dirty, empty store
+        self._run(np.ones(cfg.num_vertices, dtype=bool))
+
+    def _run(self, dirty: np.ndarray) -> None:
+        self.state, stats = self._maintain(self.state, self.g, jnp.asarray(dirty))
+        self.last_stats = jax.tree.map(jax.device_get, stats)
+
+    def apply_updates(self, updates) -> MaintainStats:
+        """Ingest one δE batch and maintain all registered queries."""
+        touched = self.graph.apply_batch(updates)
+        snap = self.graph.snapshot()
+        self.g = GraphArrays.from_snapshot(snap)
+        dirty = np.zeros(self.cfg.num_vertices, dtype=bool)
+        for (u, v) in touched:
+            dirty[v] = True
+            if self.cfg.weight_from_degree:
+                # outdeg(src) changed → every out-message of src retunes
+                dirty[snap.dst[(snap.src == u) & snap.valid]] = True
+        self._run(dirty)
+        return self.last_stats
+
+    def answers(self) -> np.ndarray:
+        return np.asarray(answers(self.cfg, self.state))
+
+    def nbytes(self) -> int:
+        return nbytes_accounted(self.cfg, self.state)

@@ -1,0 +1,204 @@
+"""Dynamic property graph: host-side mutable store + device COO views.
+
+The paper's graph model (§3.1): directed property graph, edge labels and
+weights, update batches ``[(u, v, label, weight, +/-)]``.  A GDBMS keeps the
+adjacency index on the host; the IFE compute consumes fixed-shape device
+arrays.  We preallocate edge capacity so update batches never change array
+shapes (no recompile), and mark deleted slots invalid.
+
+Device layout is COO (``src``, ``dst``, ``w``, ``valid``) — the engine's
+pure-JAX SpMV uses ``segment_min``/``segment_max``/``segment_sum`` over
+``dst``.  The Pallas ``ell_spmv`` kernel consumes the bucketed-ELL view
+produced by :meth:`GraphSnapshot.to_ell`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Sequence
+
+import numpy as np
+
+# An update is (u, v, label, weight, +1|-1) as in the paper §3.1.
+Update = tuple[int, int, int, float, int]
+
+NO_LABEL = 0
+
+
+@dataclasses.dataclass
+class GraphSnapshot:
+    """Immutable fixed-shape device-friendly view of the graph."""
+
+    num_vertices: int
+    src: np.ndarray  # int32 [E_cap]
+    dst: np.ndarray  # int32 [E_cap]
+    weight: np.ndarray  # float32 [E_cap]
+    label: np.ndarray  # int32 [E_cap]
+    valid: np.ndarray  # bool [E_cap]
+    out_degree: np.ndarray  # int32 [V]
+    in_degree: np.ndarray  # int32 [V]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.src.shape[0])
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.valid.sum())
+
+    def degrees_total(self) -> np.ndarray:
+        return self.out_degree + self.in_degree
+
+    def to_ell(self, pad_to_multiple: int = 8) -> tuple[np.ndarray, np.ndarray, int]:
+        """In-adjacency in ELL layout (for the Pallas kernel).
+
+        Returns ``(nbr, w)`` with shape ``[V, D]`` where ``D`` is the max
+        in-degree rounded up; padded slots have ``nbr == V`` (a sentinel row;
+        callers pad the state vector with the reduce identity at index V).
+        """
+        v = self.num_vertices
+        live = self.valid
+        indeg = np.bincount(self.dst[live], minlength=v)
+        d = int(indeg.max()) if v else 0
+        d = max(pad_to_multiple, ((d + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple)
+        nbr = np.full((v, d), v, dtype=np.int32)
+        w = np.zeros((v, d), dtype=np.float32)
+        fill = np.zeros(v, dtype=np.int64)
+        for e in np.nonzero(live)[0]:
+            u, t = int(self.src[e]), int(self.dst[e])
+            nbr[t, fill[t]] = u
+            w[t, fill[t]] = self.weight[e]
+            fill[t] += 1
+        return nbr, w, d
+
+
+class DynamicGraph:
+    """Host-side dynamic graph with slot-recycling edge storage."""
+
+    def __init__(
+        self,
+        num_vertices: int,
+        edges: Sequence[tuple] | np.ndarray,
+        *,
+        capacity: int | None = None,
+        weighted: bool = True,
+    ) -> None:
+        edges = list(edges)
+        n = len(edges)
+        cap = capacity if capacity is not None else max(16, int(n * 1.5))
+        if cap < n:
+            raise ValueError("capacity below initial edge count")
+        self.num_vertices = int(num_vertices)
+        self.weighted = weighted
+        self.src = np.full(cap, 0, dtype=np.int32)
+        self.dst = np.full(cap, 0, dtype=np.int32)
+        self.weight = np.zeros(cap, dtype=np.float32)
+        self.label = np.zeros(cap, dtype=np.int32)
+        self.valid = np.zeros(cap, dtype=bool)
+        self.out_degree = np.zeros(self.num_vertices, dtype=np.int32)
+        self.in_degree = np.zeros(self.num_vertices, dtype=np.int32)
+        self._slot: dict[tuple[int, int, int], int] = {}
+        self._free: list[int] = list(range(cap - 1, n - 1, -1))
+        self.version = 0  # G_k
+        for i, e in enumerate(edges):
+            u, v = int(e[0]), int(e[1])
+            w = float(e[2]) if (weighted and len(e) > 2) else 1.0
+            lbl = int(e[3]) if len(e) > 3 else NO_LABEL
+            self.src[i], self.dst[i] = u, v
+            self.weight[i], self.label[i] = w, lbl
+            self.valid[i] = True
+            self.out_degree[u] += 1
+            self.in_degree[v] += 1
+            self._slot[(u, v, lbl)] = i
+
+    # ------------------------------------------------------------------ api
+    @property
+    def num_edges(self) -> int:
+        return int(self.valid.sum())
+
+    @property
+    def capacity(self) -> int:
+        return int(self.src.shape[0])
+
+    def snapshot(self) -> GraphSnapshot:
+        return GraphSnapshot(
+            num_vertices=self.num_vertices,
+            src=self.src.copy(),
+            dst=self.dst.copy(),
+            weight=self.weight.copy(),
+            label=self.label.copy(),
+            valid=self.valid.copy(),
+            out_degree=self.out_degree.copy(),
+            in_degree=self.in_degree.copy(),
+        )
+
+    def apply_batch(self, updates: Iterable[Update]) -> list[tuple[int, int]]:
+        """Apply one δE batch; returns the touched (src, dst) endpoints.
+
+        Insertions of an existing (u, v, label) update the weight in place
+        (the paper models weight updates as delete+insert; both forms are
+        accepted).  Endpoints — not slots — are returned because a later
+        insert in the same batch may recycle a freed slot.
+        """
+        touched: list[tuple[int, int]] = []
+        for (u, v, lbl, w, sign) in updates:
+            u, v, lbl = int(u), int(v), int(lbl)
+            key = (u, v, lbl)
+            if sign > 0:
+                if key in self._slot:
+                    i = self._slot[key]
+                    self.weight[i] = float(w)
+                else:
+                    if not self._free:
+                        raise MemoryError("edge capacity exhausted")
+                    i = self._free.pop()
+                    self.src[i], self.dst[i] = u, v
+                    self.weight[i], self.label[i] = float(w), lbl
+                    self.valid[i] = True
+                    self._slot[key] = i
+                    self.out_degree[u] += 1
+                    self.in_degree[v] += 1
+            else:
+                if key not in self._slot:
+                    continue  # deleting a non-existent edge is a no-op
+                i = self._slot.pop(key)
+                self.valid[i] = False
+                self._free.append(i)
+                self.out_degree[u] -= 1
+                self.in_degree[v] -= 1
+            touched.append((u, v))
+        self.version += 1
+        return touched
+
+    def degree_percentile(self, pct: float) -> float:
+        """Degree threshold at the given percentile (paper: τ_max = 80th)."""
+        deg = self.degrees_total()
+        return float(np.percentile(deg[deg > 0], pct)) if (deg > 0).any() else 0.0
+
+    def degrees_total(self) -> np.ndarray:
+        return self.out_degree + self.in_degree
+
+
+def product_graph(
+    g: DynamicGraph | GraphSnapshot,
+    nfa_delta: dict[int, list[tuple[int, int]]],
+    num_states: int,
+) -> tuple[int, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """RPQ product construction: vertex (v, q) with id ``v * num_states + q``.
+
+    ``nfa_delta`` maps edge label → list of (q, q') NFA transitions.  Returns
+    ``(num_product_vertices, src, dst, w, parent_edge_slot)`` COO arrays (one
+    product edge per (graph edge, matching transition)).
+    """
+    live = np.nonzero(g.valid)[0]
+    srcs, dsts, slots = [], [], []
+    for e in live:
+        for (q, q2) in nfa_delta.get(int(g.label[e]), ()):
+            srcs.append(int(g.src[e]) * num_states + q)
+            dsts.append(int(g.dst[e]) * num_states + q2)
+            slots.append(int(e))
+    n = g.num_vertices * num_states
+    src = np.asarray(srcs, dtype=np.int32)
+    dst = np.asarray(dsts, dtype=np.int32)
+    w = np.ones(len(srcs), dtype=np.float32)
+    return n, src, dst, w, np.asarray(slots, dtype=np.int32)

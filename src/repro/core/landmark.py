@@ -1,0 +1,180 @@
+"""Landmark-index application of Diff-IFE (paper §6.6, Fig. 9).
+
+A landmark index stores shortest distances between every vertex and a small
+set of high-degree "landmark" vertices.  We maintain, per landmark l, two
+SSSP fields differentially (Diff-IFE):
+
+    fwd[l, v] = d(l → v)     — SSSP on G from l
+    rev[l, v] = d(v → l)     — SSSP on Gᵀ from l
+
+From these, triangle bounds prune the Bellman-Ford search of SCRATCH:
+
+    ub(s, t)  = min_l rev[l, s] + fwd[l, t]                 (d(s,t) ≤ ub)
+    lb(v, t)  = max_l max(fwd[l, t] − fwd[l, v],
+                          rev[l, v] − rev[l, t])            (d(v,t) ≥ lb)
+
+During the SPSP scratch run from s to t, a vertex v with
+``dist(v) + lb(v, t) > ub`` cannot lie on a shortest s→t path, so it never
+propagates — the paper's SCRATCH-LANDMARK.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import semiring as sr
+from repro.core.engine import DiffIFE, EngineConfig, GraphArrays, edge_messages
+from repro.core.graph import DynamicGraph
+from repro.core.queries import _engine_cfg, _source_init
+
+Array = jnp.ndarray
+
+
+def _transpose_updates(updates):
+    return [(v, u, lbl, w, sign) for (u, v, lbl, w, sign) in updates]
+
+
+class LandmarkIndex:
+    """Differentially-maintained landmark distance index."""
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        landmarks: Sequence[int],
+        *,
+        max_iters: int = 64,
+        **kw,
+    ) -> None:
+        self.landmarks = [int(l) for l in landmarks]
+        v = graph.num_vertices
+        self.graph = graph
+        # forward engine shares the caller's graph object; the reverse engine
+        # owns a transposed twin fed with transposed update batches.
+        rev_edges = [
+            (int(graph.dst[e]), int(graph.src[e]), float(graph.weight[e]))
+            for e in np.nonzero(graph.valid)[0]
+        ]
+        self.rgraph = DynamicGraph(v, rev_edges, capacity=graph.capacity)
+        cfg = _engine_cfg(
+            len(self.landmarks), v, sr.min_plus(), max_iters=max_iters, **kw
+        )
+        init = _source_init(self.landmarks, v)
+        self.fwd_engine = DiffIFE(cfg, graph, init)
+        self.rev_engine = DiffIFE(cfg, self.rgraph, init)
+
+    def apply_updates(self, updates) -> None:
+        self.fwd_engine.apply_updates(updates)
+        self.rev_engine.apply_updates(_transpose_updates(updates))
+
+    @property
+    def fwd(self) -> np.ndarray:  # [L, V] d(l → v)
+        return self.fwd_engine.answers()
+
+    @property
+    def rev(self) -> np.ndarray:  # [L, V] d(v → l)
+        return self.rev_engine.answers()
+
+    def nbytes(self) -> int:
+        return self.fwd_engine.nbytes() + self.rev_engine.nbytes()
+
+
+@partial(jax.jit, static_argnums=0)
+def _pruned_bf(
+    cfg: EngineConfig,
+    g: GraphArrays,
+    init: Array,  # [Q, V]
+    lb: Array,  # [Q, V]  lower bound d(v → t)
+    ub: Array,  # [Q]     upper bound d(s → t)
+) -> tuple[Array, Array]:
+    """Bellman-Ford with landmark pruning: pruned vertices never propagate."""
+
+    def body(carry):
+        i, cur, _ = carry
+        live = (cur + lb) <= ub[:, None]  # can still be on a shortest path
+        masked = jnp.where(live, cur, jnp.inf)
+        new = jnp.minimum(
+            cur,
+            jax.vmap(
+                lambda m: jax.ops.segment_min(m, g.dst, num_segments=cur.shape[1])
+            )(edge_messages(cfg, masked, g)),
+        )
+        return (i + 1, new, (new != cur).any())
+
+    def cond(carry):
+        i, _, changed = carry
+        return (i <= jnp.int32(cfg.max_iters)) & changed
+
+    i, final, _ = jax.lax.while_loop(cond, body, (jnp.int32(1), init, jnp.bool_(True)))
+    return final, i - 1
+
+
+class ScratchLandmark:
+    """SCRATCH-LANDMARK (§6.6): scratch SPSP with landmark pruning.
+
+    Updates first maintain the landmark index differentially, then each
+    registered (s, t) query re-runs pruned Bellman-Ford from scratch.
+    """
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        queries: Sequence[tuple[int, int]],
+        num_landmarks: int = 10,
+        *,
+        max_iters: int = 64,
+        **kw,
+    ) -> None:
+        self.graph = graph
+        self.queries = [(int(s), int(t)) for s, t in queries]
+        deg = graph.degrees_total()
+        landmarks = np.argsort(-deg)[:num_landmarks]
+        self.index = LandmarkIndex(graph, landmarks, max_iters=max_iters, **kw)
+        self.cfg = _engine_cfg(
+            len(queries), graph.num_vertices, sr.min_plus(), max_iters=max_iters
+        )
+        self._recompute()
+
+    def _bounds(self) -> tuple[np.ndarray, np.ndarray]:
+        fwd, rev = self.index.fwd, self.index.rev  # [L, V]
+        s = np.asarray([q[0] for q in self.queries])
+        t = np.asarray([q[1] for q in self.queries])
+        ub = np.min(rev[:, s] + fwd[:, t], axis=0)  # [Q]
+        lb = np.maximum(
+            fwd[:, t][:, :, None] - fwd[:, None, :],  # [L, Q, V]
+            rev[:, None, :] - rev[:, t][:, :, None],
+        )
+        # inf − inf → nan: no information → 0.  A +inf bound is *valid*
+        # (l reaches v but not t ⇒ v cannot reach t) and prunes v outright.
+        lb = np.where(np.isnan(lb), 0.0, lb)
+        return np.maximum(lb, 0.0).max(axis=0), ub  # [Q, V], [Q]
+
+    def _recompute(self) -> None:
+        g = GraphArrays.from_snapshot(self.graph.snapshot())
+        lb, ub = self._bounds()
+        init = _source_init([q[0] for q in self.queries], self.graph.num_vertices)
+        final, iters = _pruned_bf(
+            self.cfg,
+            g,
+            jnp.asarray(init),
+            jnp.asarray(lb, jnp.float32),
+            jnp.asarray(ub, jnp.float32),
+        )
+        self._dists = np.asarray(final)
+        self.last_iters = int(iters)
+
+    def apply_updates(self, updates) -> None:
+        self.index.apply_updates(updates)  # graph mutated here (fwd engine)
+        self._recompute()
+
+    def answers(self) -> np.ndarray:
+        """Shortest s→t distance per registered query."""
+        t = np.asarray([q[1] for q in self.queries])
+        return self._dists[np.arange(len(self.queries)), t]
+
+    def nbytes(self) -> int:
+        return self.index.nbytes()

@@ -1,0 +1,215 @@
+"""Query classes from the paper (§6.1.2) on top of the Diff-IFE engine.
+
+Each query family supplies its semiring, initial states (the implicit
+iteration-0 difference set) and an answer extractor.  SPSP/SSSP/K-hop/RPQ are
+*continuous registered queries* (Q of them batched in the leading axis); WCC
+and PageRank are single batch computations (Q = 1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dropping as dr
+from repro.core import semiring as sr
+from repro.core.engine import DiffIFE, EngineConfig
+from repro.core.graph import DynamicGraph, product_graph
+
+INF = np.float32(np.inf)
+
+
+def _source_init(sources: Sequence[int], num_vertices: int, value: float = 0.0) -> np.ndarray:
+    init = np.full((len(sources), num_vertices), INF, dtype=np.float32)
+    for q, s in enumerate(sources):
+        init[q, int(s)] = value
+    return init
+
+
+def _engine_cfg(
+    num_queries: int,
+    num_vertices: int,
+    semiring: sr.Semiring,
+    *,
+    max_iters: int,
+    mode: str = "jod",
+    drop: dr.DropConfig | None = None,
+    weight_from_degree: bool = False,
+    **kw,
+) -> EngineConfig:
+    return EngineConfig(
+        num_queries=num_queries,
+        num_vertices=num_vertices,
+        max_iters=max_iters,
+        semiring=semiring,
+        mode=mode,
+        drop=drop or dr.DropConfig(),
+        weight_from_degree=weight_from_degree,
+        **kw,
+    )
+
+
+# --------------------------------------------------------------------------- SSSP / SPSP
+def sssp(
+    graph: DynamicGraph, sources: Sequence[int], *, max_iters: int = 64, **kw
+) -> DiffIFE:
+    """Q concurrent single-source shortest-distance fields (Bellman-Ford IFE)."""
+    cfg = _engine_cfg(
+        len(sources), graph.num_vertices, sr.min_plus(), max_iters=max_iters, **kw
+    )
+    return DiffIFE(cfg, graph, _source_init(sources, graph.num_vertices))
+
+
+def spsp_answers(engine: DiffIFE, targets: Sequence[int]) -> np.ndarray:
+    """SPSP = SSSP field read at the target (paper's query form)."""
+    d = engine.answers()
+    return np.asarray([d[q, int(t)] for q, t in enumerate(targets)], np.float32)
+
+
+# --------------------------------------------------------------------------- K-hop
+def khop(
+    graph: DynamicGraph, sources: Sequence[int], k: int = 5, **kw
+) -> DiffIFE:
+    """Vertices within ≤ k hops of each source; iterations bounded by k."""
+    cfg = _engine_cfg(
+        len(sources), graph.num_vertices, sr.min_hop(float(k)), max_iters=k, **kw
+    )
+    return DiffIFE(cfg, graph, _source_init(sources, graph.num_vertices))
+
+
+def khop_reachable(engine: DiffIFE) -> np.ndarray:
+    return np.isfinite(engine.answers())
+
+
+# --------------------------------------------------------------------------- WCC
+def wcc(graph: DynamicGraph, *, max_iters: int = 128, **kw) -> DiffIFE:
+    """Weakly connected components: min-label propagation on the symmetrized
+    graph (caller supplies a graph with both edge directions)."""
+    v = graph.num_vertices
+    init = np.arange(v, dtype=np.float32)[None, :]
+    cfg = _engine_cfg(1, v, sr.min_label(), max_iters=max_iters, **kw)
+    return DiffIFE(cfg, graph, init)
+
+
+# --------------------------------------------------------------------------- PageRank
+def pagerank(
+    graph: DynamicGraph, *, iters: int = 10, alpha: float = 0.85, **kw
+) -> DiffIFE:
+    """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2)."""
+    v = graph.num_vertices
+    init = np.ones((1, v), dtype=np.float32)
+    cfg = _engine_cfg(
+        1,
+        v,
+        sr.pagerank(alpha),
+        max_iters=iters,
+        weight_from_degree=True,
+        alpha=alpha,
+        **kw,
+    )
+    return DiffIFE(cfg, graph, init)
+
+
+# --------------------------------------------------------------------------- RPQ
+@dataclasses.dataclass(frozen=True)
+class NFA:
+    """Nondeterministic automaton over edge labels.
+
+    ``delta``: label → [(state, state')] transitions; used to build the
+    product graph (v, q) whose reachability answers the RPQ.
+    """
+
+    num_states: int
+    delta: dict[int, list[tuple[int, int]]]
+    start: int
+    accept: tuple[int, ...]
+
+    @staticmethod
+    def star(label: int) -> "NFA":
+        """Q1 = a*"""
+        return NFA(1, {label: [(0, 0)]}, 0, (0,))
+
+    @staticmethod
+    def concat_star(a: int, b: int) -> "NFA":
+        """Q2 = a ∘ b*"""
+        return NFA(2, {a: [(0, 1)], b: [(1, 1)]}, 0, (1,))
+
+    @staticmethod
+    def chain(labels: Sequence[int]) -> "NFA":
+        """Q3 = l1 ∘ l2 ∘ … ∘ lk (fixed-length path template)."""
+        delta: dict[int, list[tuple[int, int]]] = {}
+        for j, lbl in enumerate(labels):
+            delta.setdefault(int(lbl), []).append((j, j + 1))
+        return NFA(len(labels) + 1, delta, 0, (len(labels),))
+
+
+class RPQ:
+    """Continuous RPQ evaluation via Diff-IFE on the NFA-product graph.
+
+    Base-graph updates are translated into product-graph updates (one product
+    edge per matching transition); the engine then maintains reachability
+    (min-hop semiring) from (source, start-state).
+    """
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        nfa: NFA,
+        sources: Sequence[int],
+        *,
+        max_iters: int = 64,
+        product_capacity: int | None = None,
+        **kw,
+    ) -> None:
+        self.base = graph
+        self.nfa = nfa
+        self.sources = [int(s) for s in sources]
+        n, src, dst, w, _ = product_graph(graph, nfa.delta, nfa.num_states)
+        cap = product_capacity
+        if cap is None:
+            # worst case: every base slot × max transitions per label
+            per = max((len(v) for v in nfa.delta.values()), default=1)
+            cap = max(16, graph.capacity * per)
+        self.pgraph = DynamicGraph(
+            n, list(zip(src.tolist(), dst.tolist(), w.tolist())), capacity=cap
+        )
+        init = _source_init(
+            [s * nfa.num_states + nfa.start for s in self.sources], n
+        )
+        cfg = _engine_cfg(len(sources), n, sr.min_hop(), max_iters=max_iters, **kw)
+        self.engine = DiffIFE(cfg, self.pgraph, init)
+
+    def _translate(self, updates) -> list[tuple[int, int, int, float, int]]:
+        out = []
+        for (u, v, lbl, w, sign) in updates:
+            for (q, q2) in self.nfa.delta.get(int(lbl), ()):  # non-matching labels: no-op
+                out.append(
+                    (
+                        int(u) * self.nfa.num_states + q,
+                        int(v) * self.nfa.num_states + q2,
+                        0,
+                        1.0,
+                        int(sign),
+                    )
+                )
+        return out
+
+    def apply_updates(self, updates):
+        self.base.apply_batch(updates)
+        pu = self._translate(updates)
+        if pu:
+            return self.engine.apply_updates(pu)
+        return self.engine.last_stats
+
+    def reachable(self) -> np.ndarray:
+        """bool [Q, V_base]: which base vertices match the RPQ per source."""
+        d = self.engine.answers().reshape(
+            len(self.sources), self.base.num_vertices, self.nfa.num_states
+        )
+        return np.isfinite(d[:, :, list(self.nfa.accept)]).any(axis=-1)
+
+    def nbytes(self) -> int:
+        return self.engine.nbytes()

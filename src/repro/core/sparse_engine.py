@@ -1,0 +1,179 @@
+"""Work-efficient host execution of Diff-IFE (the paper's pointer machine).
+
+The dense TPU engine (`core.engine`) sweeps O(E)-wide masked lanes — ideal
+for accelerators, but per-update wall clock is flat in |affected set|.  A
+GDBMS also serves small-update workloads from the host, where the paper's
+original pointer design wins: hash-map difference indexes, per-iteration
+frontier sets, and join work proportional to the touched neighbourhood.
+
+This module is that host path: same eager-merged change-point semantics,
+same JOD direct/upper-bound rules, numpy/dict state.  It reproduces the
+paper's Table-1 shape in *wall clock* (maintenance cost ∝ affected set, not
+graph size) and is cross-validated against both the dense engine and
+SCRATCH by property tests.
+
+Supports the min-family semirings (SPSP/SSSP, K-hop, WCC reachability) —
+the query classes the paper's scalability study runs.
+"""
+
+from __future__ import annotations
+
+import math
+from collections import defaultdict
+from typing import Sequence
+
+import numpy as np
+
+from repro.core.graph import DynamicGraph
+
+INF = float("inf")
+
+
+class SparseDiffIFE:
+    """Host CQP: JOD + eager merging with pointer data structures.
+
+    State per query q:
+      diffs[q][v]   sorted list of (iteration, value) change points
+    Graph adjacency lives in dicts of dicts (in/out), mirroring a GDBMS
+    adjacency-list index.
+    """
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        sources: Sequence[int],
+        *,
+        max_iters: int = 64,
+        khop: int | None = None,  # None = min_plus (weights); else hop query
+    ) -> None:
+        self.graph = graph
+        self.sources = [int(s) for s in sources]
+        self.max_iters = max_iters
+        self.khop = khop
+        self.in_nbrs: dict[int, dict[int, float]] = defaultdict(dict)
+        self.out_nbrs: dict[int, dict[int, float]] = defaultdict(dict)
+        for e in np.nonzero(graph.valid)[0]:
+            u, v, w = int(graph.src[e]), int(graph.dst[e]), float(graph.weight[e])
+            self.out_nbrs[u][v] = w
+            self.in_nbrs[v][u] = w
+        self.diffs: list[dict[int, list[tuple[int, float]]]] = [
+            defaultdict(list) for _ in self.sources
+        ]
+        self.work = 0  # aggregator re-runs (the paper's work metric)
+        for q, s in enumerate(self.sources):
+            self._initial(q, s)
+
+    # ------------------------------------------------------------- semiring
+    def _msg(self, val: float, w: float) -> float:
+        if self.khop is not None:
+            nxt = val + 1.0
+            return nxt if nxt <= self.khop else INF
+        return val + w
+
+    # ---------------------------------------------------------------- state
+    def _value_at(self, q: int, v: int, i: int) -> float:
+        """Latest change point ≤ i (implicit init: 0 at source, ∞ else)."""
+        best = 0.0 if v == self.sources[q] else INF
+        for (it, val) in self.diffs[q].get(v, ()):
+            if it <= i:
+                best = val
+            else:
+                break
+        return best
+
+    def _recompute(self, q: int, v: int, i: int) -> float:
+        """Rerun the aggregator (Min) for v at iteration i — the join is
+        computed on demand from in-neighbour states at i−1 (JOD §4)."""
+        self.work += 1
+        best = self._value_at(q, v, i - 1)  # carry
+        if v == self.sources[q]:
+            best = min(best, 0.0)
+        for u, w in self.in_nbrs.get(v, {}).items():
+            cand = self._msg(self._value_at(q, u, i - 1), w)
+            if cand < best:
+                best = cand
+        return best
+
+    def _set_point(self, q: int, v: int, i: int, val: float) -> None:
+        pts = self.diffs[q][v]
+        prev = self._value_at(q, v, i - 1)
+        # drop/replace any existing point at i, then insert if a true change
+        pts[:] = [(it, x) for (it, x) in pts if it != i]
+        if val != prev:
+            pts.append((i, val))
+            pts.sort()
+        if not pts:
+            del self.diffs[q][v]
+
+    # ------------------------------------------------------------ procedures
+    def _initial(self, q: int, s: int) -> None:
+        # the source's implicit 0 at iteration 0 feeds its out-neighbours
+        frontier = {s} | set(self.out_nbrs.get(s, ()))
+        for i in range(1, self.max_iters + 1):
+            nxt: set[int] = set()
+            for v in sorted(frontier):
+                new = self._recompute(q, v, i)
+                if new != self._value_at(q, v, i):
+                    self._set_point(q, v, i, new)
+                    nxt.add(v)
+                    nxt.update(self.out_nbrs.get(v, ()))
+            # values settled at i propagate to consumers at i+1
+            frontier = {v for v in nxt}
+            if not frontier:
+                break
+
+    def _horizon(self, q: int) -> int:
+        h = 0
+        for pts in self.diffs[q].values():
+            if pts:
+                h = max(h, pts[-1][0])
+        return h
+
+    def apply_updates(self, updates) -> None:
+        """One δE batch: update adjacency, then per-query sparse sweep."""
+        dirty: set[int] = set()
+        for (u, v, lbl, w, sign) in updates:
+            u, v = int(u), int(v)
+            if sign > 0:
+                self.out_nbrs[u][v] = float(w)
+                self.in_nbrs[v][u] = float(w)
+            else:
+                self.out_nbrs.get(u, {}).pop(v, None)
+                self.in_nbrs.get(v, {}).pop(u, None)
+            dirty.add(v)
+        self.graph.apply_batch(updates)
+
+        for q in range(len(self.sources)):
+            horizon = self._horizon(q)
+            frontier: set[int] = set()
+            i = 1
+            while i <= self.max_iters and (frontier or (dirty and i <= horizon + 1)):
+                sched = frontier | (dirty if i <= horizon + 1 else set())
+                nxt: set[int] = set()
+                for v in sorted(sched):
+                    old = self._value_at(q, v, i)
+                    new = self._recompute(q, v, i)
+                    if new != old:
+                        nxt.add(v)
+                        nxt.update(self.out_nbrs.get(v, ()))
+                    self._set_point(q, v, i, new)
+                horizon = max(horizon, self._horizon(q))
+                frontier = nxt
+                i += 1
+
+    # ------------------------------------------------------------------ api
+    def answers(self) -> np.ndarray:
+        v = self.graph.num_vertices
+        out = np.full((len(self.sources), v), np.inf, np.float32)
+        for q in range(len(self.sources)):
+            out[q, self.sources[q]] = 0.0
+            for vtx, pts in self.diffs[q].items():
+                if pts:
+                    out[q, vtx] = pts[-1][1]
+        return out
+
+    def nbytes(self) -> int:
+        return sum(len(p) for d in self.diffs for p in d.values()) * 8
+
+    def num_diffs(self) -> int:
+        return sum(len(p) for d in self.diffs for p in d.values())

@@ -1,0 +1,2 @@
+"""Data pipelines: synthetic LM tokens, graph generators, update streams,
+neighbour samplers, and the LDBC-like labelled graph generator for RPQs."""

@@ -1,0 +1,103 @@
+"""Multi-probe Bloom-filter query over packed u32 words (Prob-Drop, §5.1.2).
+
+The production layout is the packed bit array (M/32 u32 words — this is the
+size the memory accountant charges).  One kernel invocation answers a tile
+of (vertex, iteration) keys: k double-hashed probes per key, each a VMEM
+word gather + bit test, combined with a running AND.  Compared to the
+pure-JAX boolean-array fallback this avoids materializing [N, k] probe
+tensors in HBM and keeps the whole filter row resident in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+# numpy scalars embed as literals in the kernel (device constants would be
+# rejected as captured consts by pallas_call)
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_C3 = np.uint32(0x27D4EB2F)
+
+
+def _mix(x):
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= _C1
+    x ^= x >> 13
+    x *= _C2
+    x ^= x >> 16
+    return x
+
+
+def hash_pair(v, i, salt):
+    v = v.astype(jnp.uint32)
+    i = i.astype(jnp.uint32)
+    s = jnp.asarray(salt, jnp.uint32)
+    h1 = _mix(v * _C3 ^ _mix(i + s))
+    h2 = _mix(i * _C1 ^ _mix(v ^ (s * _C2))) | jnp.uint32(1)
+    return h1, h2
+
+
+def _kernel(words_ref, v_ref, i_ref, salt_ref, out_ref, *, num_hashes, num_bits):
+    words = words_ref[0, :]  # [M/32] u32, VMEM resident
+    v = v_ref[0, :]
+    it = i_ref[0, :]
+    salt = salt_ref[0]
+    h1, h2 = hash_pair(v, it, salt)
+    hit = jnp.ones(v.shape, dtype=jnp.bool_)
+    for j in range(num_hashes):  # k is small & static → unrolled
+        probe = (h1 + jnp.uint32(j) * h2) % jnp.uint32(num_bits)
+        word = words[(probe >> 5).astype(jnp.int32)]
+        bit = (word >> (probe & jnp.uint32(31))) & jnp.uint32(1)
+        hit &= bit == 1
+    out_ref[0, :] = hit
+
+
+@functools.partial(jax.jit, static_argnames=("num_hashes", "block_n", "interpret"))
+def bloom_query(
+    words: jnp.ndarray,  # u32 [Q, M/32] packed filters (one per query)
+    v: jnp.ndarray,  # int32 [Q, N] vertex ids
+    i: jnp.ndarray,  # int32 [Q, N] iterations
+    salt: jnp.ndarray,  # int32 [Q] per-filter salt
+    *,
+    num_hashes: int = 4,
+    block_n: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    q, mw = words.shape
+    _, n = v.shape
+    num_bits = mw * 32
+    bn = min(block_n, n)
+    npad = (bn - n % bn) % bn
+    if npad:
+        v = jnp.concatenate([v, jnp.zeros((q, npad), v.dtype)], 1)
+        i = jnp.concatenate([i, jnp.zeros((q, npad), i.dtype)], 1)
+    grid = (q, (n + npad) // bn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_hashes=num_hashes, num_bits=num_bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, mw), lambda iq, ib: (iq, 0)),
+            pl.BlockSpec((1, bn), lambda iq, ib: (iq, ib)),
+            pl.BlockSpec((1, bn), lambda iq, ib: (iq, ib)),
+            pl.BlockSpec((1,), lambda iq, ib: (iq,)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda iq, ib: (iq, ib)),
+        out_shape=jax.ShapeDtypeStruct((q, n + npad), jnp.bool_),
+        interpret=interpret,
+    )(words, v, i, salt)
+    return out[:, :n]
+
+
+def pack_bits(bits: jnp.ndarray) -> jnp.ndarray:
+    """bool [..., M] → u32 [..., M/32] (M must be a 32-multiple)."""
+    *lead, m = bits.shape
+    assert m % 32 == 0
+    b = bits.reshape(*lead, m // 32, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return (b << shifts).sum(axis=-1, dtype=jnp.uint32)

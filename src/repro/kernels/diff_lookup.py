@@ -1,0 +1,75 @@
+"""Batched latest-change-point-≤-i lookup over the dense difference store.
+
+The access path of AccessDᵢᵛWithDrops (paper §5.1): given per-key sorted
+iteration rows ``iters [N, S]`` (IMAX-padded) and values ``vals [N, S]``,
+find per key the latest stored iteration ≤ query ``i`` and its value.
+
+Branch-free: rows are sorted so the insertion point is a ≤-count; the value
+gather is a one-hot dot on the VPU (avoids a serializing dynamic gather).
+Grid: N/BN tiles; the S axis rides entirely in VMEM (S is small: 8–64).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+
+
+def _kernel(iters_ref, vals_ref, qi_ref, val_ref, it_ref, found_ref):
+    it = iters_ref[...]  # [BN, S]
+    vl = vals_ref[...]  # [BN, S]
+    qi = qi_ref[...]  # [BN]
+    le = (it <= qi[:, None]).astype(jnp.int32)
+    idx = jnp.sum(le, axis=1) - 1  # [-1 .. S-1]
+    found = idx >= 0
+    onehot = (jax.lax.iota(jnp.int32, it.shape[1])[None, :] == idx[:, None])
+    val = jnp.sum(jnp.where(onehot, vl, 0.0), axis=1)
+    fit = jnp.sum(jnp.where(onehot, it, 0), axis=1)
+    val_ref[...] = val
+    it_ref[...] = jnp.where(found, fit, -1)
+    found_ref[...] = found
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def diff_lookup(
+    iters: jnp.ndarray,  # int32 [N, S] sorted ascending, IMAX padded
+    vals: jnp.ndarray,  # f32 [N, S]
+    qi: jnp.ndarray,  # int32 [N] query iteration per key
+    *,
+    block_n: int = 256,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    n, s = iters.shape
+    bn = min(block_n, n)
+    npad = (bn - n % bn) % bn
+    if npad:
+        iters = jnp.concatenate([iters, jnp.full((npad, s), IMAX, iters.dtype)], 0)
+        vals = jnp.concatenate([vals, jnp.zeros((npad, s), vals.dtype)], 0)
+        qi = jnp.concatenate([qi, jnp.zeros((npad,), qi.dtype)], 0)
+    grid = ((n + npad) // bn,)
+    val, fit, found = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, s), lambda i: (i, 0)),
+            pl.BlockSpec((bn, s), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n + npad,), vals.dtype),
+            jax.ShapeDtypeStruct((n + npad,), jnp.int32),
+            jax.ShapeDtypeStruct((n + npad,), jnp.bool_),
+        ],
+        interpret=interpret,
+    )(iters, vals, qi)
+    return val[:n], fit[:n], found[:n]

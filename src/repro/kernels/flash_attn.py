@@ -1,0 +1,103 @@
+"""Chunked online-softmax attention (flash attention) for the LM archs.
+
+Used by 32k-prefill and training: O(Sq·Bk) VMEM instead of the O(Sq·Sk)
+HBM score matrix.  GQA is handled in the wrapper by mapping each query head
+to its KV head via the grid index (no KV duplication in HBM).
+
+Grid: (B, Hq, Sq/BQ, Sk/BK) — the minor (last) axis iterates sequentially on
+TPU, so the kernel accumulates over KV blocks with running max/sum scratch
+(the standard flash recurrence), initializing at k==0 and emitting the
+normalized output at the last KV block.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(
+    q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale, causal, bq, bk
+):
+    kv_idx = pl.program_id(3)
+    q_idx = pl.program_id(2)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # [BQ, D]
+    k = k_ref[0, 0].astype(jnp.float32)  # [BK, D]
+    v = v_ref[0, 0].astype(jnp.float32)  # [BK, D]
+    s = q @ k.T  # [BQ, BK] — MXU
+
+    if causal:
+        rows = q_idx * bq + jax.lax.iota(jnp.int32, bq)[:, None]
+        cols = kv_idx * bk + jax.lax.iota(jnp.int32, bk)[None, :]
+        s = jnp.where(rows >= cols, s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_cur = jnp.max(s, axis=1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[:, None])  # [BQ, BK]
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1)
+    acc_new = acc_prev * alpha[:, None] + p @ v  # MXU
+
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(kv_idx == pl.num_programs(3) - 1)
+    def _emit():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Sk, D]
+    v: jnp.ndarray,  # [B, Hkv, Sk, D]
+    *,
+    causal: bool = True,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0
+    group = hq // hkv  # GQA: query heads per KV head
+    bq, bk = min(block_q, sq), min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    scale = 1.0 / (d**0.5)
+    grid = (b, hq, sq // bq, sk // bk)
+    return pl.pallas_call(
+        functools.partial(
+            _kernel, scale=scale, causal=causal, bq=bq, bk=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+            # GQA: query head ih reads KV head ih // group
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda ib, ih, iq, ik: (ib, ih // group, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda ib, ih, iq, ik: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, hq, sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),  # running max m
+            pltpu.VMEM((bq,), jnp.float32),  # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),  # running numerator acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,39 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (the kernel body executes in Python
+on CPU for validation) and to False on TPU backends, where the compiled
+Mosaic kernel runs.  Callers can force either mode.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.bloom import bloom_query, pack_bits  # noqa: F401
+from repro.kernels.diff_lookup import diff_lookup  # noqa: F401
+from repro.kernels.ell_spmv import ell_spmv  # noqa: F401
+from repro.kernels.flash_attn import flash_attention  # noqa: F401
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def spmv(states, nbr, w, carry, *, semiring="min_plus", **kw):
+    kw.setdefault("interpret", default_interpret())
+    return ell_spmv(states, nbr, w, carry, semiring=semiring, **kw)
+
+
+def lookup(iters, vals, qi, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return diff_lookup(iters, vals, qi, **kw)
+
+
+def bloom(words, v, i, salt, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return bloom_query(words, v, i, salt, **kw)
+
+
+def attention(q, k, v, *, causal=True, **kw):
+    kw.setdefault("interpret", default_interpret())
+    return flash_attention(q, k, v, causal=causal, **kw)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ell_spmv_ref(states, nbr, w, carry, *, semiring: str) -> jnp.ndarray:
+    """states [Q, Vp], nbr/w [V, D], carry [Q, V] → [Q, V]."""
+    s = states[:, nbr]  # [Q, V, D]
+    if semiring == "min_plus":
+        red = jnp.min(s + w[None], axis=-1)
+        return jnp.minimum(red, carry)
+    if semiring == "min_hop":
+        red = jnp.min(s + 1.0, axis=-1)
+        return jnp.minimum(red, carry)
+    if semiring == "min_label":
+        red = jnp.min(s, axis=-1)
+        return jnp.minimum(red, carry)
+    if semiring == "pr_sum":
+        red = jnp.sum(s * w[None], axis=-1)
+        return red + carry
+    raise ValueError(semiring)
+
+
+def diff_lookup_ref(iters, vals, qi):
+    """iters/vals [N, S], qi [N] → (val [N], iter [N], found [N])."""
+    mask = iters <= qi[:, None]
+    idx = mask.sum(axis=1) - 1
+    found = idx >= 0
+    safe = jnp.maximum(idx, 0)
+    val = jnp.take_along_axis(vals, safe[:, None], axis=1)[:, 0]
+    fit = jnp.take_along_axis(iters, safe[:, None], axis=1)[:, 0]
+    return jnp.where(found, val, 0.0), jnp.where(found, fit, -1), found
+
+
+def bloom_query_ref(words, v, i, salt, *, num_hashes: int):
+    """Packed-word Bloom query, same double hashing as the kernel."""
+    from repro.kernels.bloom import hash_pair
+
+    num_bits = words.shape[-1] * 32
+    h1, h2 = hash_pair(v, i, salt[:, None])
+    j = jnp.arange(num_hashes, dtype=jnp.uint32)
+    probes = (h1[..., None] + j * h2[..., None]) % jnp.uint32(num_bits)  # [Q,N,k]
+    word = jnp.take_along_axis(
+        words[:, None, :], (probes >> 5).astype(jnp.int32), axis=-1
+    )
+    bit = (word >> (probes & jnp.uint32(31))) & jnp.uint32(1)
+    return (bit == 1).all(axis=-1)
+
+
+def attention_ref(q, k, v, *, causal: bool = True) -> jnp.ndarray:
+    """Naive softmax attention with GQA head mapping. [B,Hq,S,D]."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    kx = jnp.repeat(k, group, axis=1)
+    vx = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kx.astype(jnp.float32))
+    s = s / (d**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vx.astype(jnp.float32)).astype(q.dtype)

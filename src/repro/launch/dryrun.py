@@ -1,0 +1,152 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above MUST run before any other import (jax locks the device
+count at first init).  512 placeholder host devices back the production
+meshes: 16×16 ("data","model") single-pod and 2×16×16 ("pod","data","model")
+multi-pod.  No full-scale array is ever allocated — inputs are
+ShapeDtypeStructs; ``compiled.memory_analysis()`` proves the program fits
+and ``cost_analysis()`` + HLO collective parsing feed §Roofline.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax  # noqa: E402  (import order is the point)
+
+from repro.configs import ARCH_NAMES, get_arch
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh
+
+REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..", "reports", "dryrun")
+
+
+def _lm_extrapolated_costs(arch, cfg, shape_name, mesh) -> dict | None:
+    """Exact flop/byte/collective totals for scanned-layer LMs.
+
+    XLA's cost_analysis counts a scan body once, so the scanned full-L module
+    under-reports per-layer work by ~L×.  Lowering UNROLLED L=1 and L=2
+    variants is cheap, and their difference is exactly one layer's cost
+    (matmuls, grads, and that layer's optimizer share):
+        total(L) = c(1) + (L-1) · (c(2) - c(1)).
+    """
+    import dataclasses as dc
+
+    if arch.family != "lm":
+        return None
+    from repro.configs.lm_harness import build_lm_cell
+
+    costs = []
+    for nl in (1, 2):
+        c = dc.replace(cfg, num_layers=nl, scan_layers=False)
+        cell = build_lm_cell(c, shape_name, mesh, force_accum=1)
+        lowered = cell.lower()
+        compiled = lowered.compile()
+        r = hlo_analysis.analyse(cell.name, lowered, compiled, mesh.size, 0.0)
+        costs.append((r.hlo_flops, r.hlo_bytes, r.coll_bytes))
+    (f1, b1, c1), (f2, b2, c2) = costs
+    L = cfg.num_layers
+    return {
+        "hlo_flops": f1 + (L - 1) * (f2 - f1),
+        "hlo_bytes": b1 + (L - 1) * (b2 - b1),
+        "coll_bytes": c1 + (L - 1) * (c2 - c1),
+    }
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool, *, verbose=True) -> dict:
+    arch = get_arch(arch_name)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = arch.full()
+    t0 = time.time()
+    with mesh:
+        cell = arch.build_cell(cfg, shape_name, mesh)
+        lowered = cell.lower()
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        roof = hlo_analysis.analyse(
+            cell.name, lowered, compiled, mesh.size, cell.model_flops
+        )
+        fixed = _lm_extrapolated_costs(arch, cfg, shape_name, mesh)
+        if fixed is not None:
+            roof.hlo_flops = fixed["hlo_flops"]
+            roof.hlo_bytes = fixed["hlo_bytes"]
+            roof.coll_bytes = fixed["coll_bytes"]
+    rec = {
+        "arch": arch_name,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "num_devices": mesh.size,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": str(mem),
+        "per_device_bytes": roof.per_device_hbm_bytes,
+        "roofline": roof.to_dict(),
+        "status": "ok",
+    }
+    if verbose:
+        print(f"[dryrun] {cell.name} mesh={rec['mesh']} OK "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+        print(f"  memory_analysis: {mem}")
+        print(f"  cost: flops={roof.hlo_flops:.3e} bytes={roof.hlo_bytes:.3e} "
+              f"coll={roof.coll_bytes:.3e} bottleneck={roof.bottleneck}")
+    return rec
+
+
+def save(rec: dict) -> None:
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    key = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}".replace("/", "_")
+    with open(os.path.join(REPORT_DIR, key + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_NAMES + [None])
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    jobs = []
+    archs = ARCH_NAMES if (args.all or args.arch is None) else [args.arch]
+    for a in archs:
+        spec = get_arch(a)
+        shapes = [args.shape] if args.shape else list(spec.shapes)
+        for s in shapes:
+            for mp in {"pod": [False], "multipod": [True], "both": [False, True]}[args.mesh]:
+                jobs.append((a, s, mp))
+
+    failures = 0
+    for a, s, mp in jobs:
+        try:
+            rec = run_cell(a, s, mp)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            rec = {
+                "arch": a, "shape": s,
+                "mesh": "2x16x16" if mp else "16x16",
+                "status": "error", "error": f"{type(e).__name__}: {e}",
+                "traceback": traceback.format_exc()[-2000:],
+            }
+            print(f"[dryrun] {a}:{s} mesh={rec['mesh']} FAILED: {rec['error']}")
+            if not args.continue_on_error:
+                save(rec)
+                raise
+        save(rec)
+    print(f"[dryrun] done: {len(jobs) - failures}/{len(jobs)} ok")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""GNN architectures: PNA, GatedGCN (SpMM/SDDMM regime), DimeNet (triplet
+regime), EquiformerV2 (irrep/eSCN regime)."""

@@ -1,0 +1,110 @@
+"""Principal Neighbourhood Aggregation (arXiv:2004.05718).
+
+Per layer: edge messages from [h_u ‖ h_v ‖ e_uv] MLP, aggregated with
+{mean, max, min, std} and scaled by {identity, amplification, attenuation}
+(log-degree scalers), concatenated (12 × d) and projected back to d, with
+residual connection.  Config: n_layers=4, d_hidden=75.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn import common as g
+
+Array = jnp.ndarray
+
+AGGREGATORS = ("mean", "max", "min", "std")
+SCALERS = ("identity", "amplification", "attenuation")
+
+
+@dataclasses.dataclass(frozen=True)
+class PNAConfig:
+    name: str = "pna"
+    num_layers: int = 4
+    d_hidden: int = 75
+    d_in: int = 128
+    d_edge: int = 8
+    num_classes: int = 16
+    avg_deg_log: float = 2.0  # δ: E[log(deg+1)] over the training set
+
+
+def init_params(cfg: PNAConfig, rng: jax.Array) -> dict:
+    k = iter(jax.random.split(rng, 4 + 8 * cfg.num_layers))
+    d = cfg.d_hidden
+    n_agg = len(AGGREGATORS) * len(SCALERS)
+    p = {
+        "enc_w": jax.random.normal(next(k), (cfg.d_in, d)) * cfg.d_in**-0.5,
+        "enc_b": jnp.zeros((d,)),
+        "layers": [],
+        "head_w": jax.random.normal(next(k), (d, cfg.num_classes)) * d**-0.5,
+        "head_b": jnp.zeros((cfg.num_classes,)),
+    }
+    for _ in range(cfg.num_layers):
+        p["layers"].append(
+            {
+                # message MLP over [h_u, h_v, e]
+                "msg_w1": jax.random.normal(next(k), (2 * d + cfg.d_edge, d)) * (2 * d) ** -0.5,
+                "msg_b1": jnp.zeros((d,)),
+                "msg_w2": jax.random.normal(next(k), (d, d)) * d**-0.5,
+                "msg_b2": jnp.zeros((d,)),
+                # post-aggregation projection (12 aggregations ‖ self)
+                "upd_w": jax.random.normal(next(k), ((n_agg + 1) * d, d)) * ((n_agg + 1) * d) ** -0.5,
+                "upd_b": jnp.zeros((d,)),
+                "ln_g": jnp.ones((d,)),
+                "ln_b": jnp.zeros((d,)),
+            }
+        )
+    return p
+
+
+def _layer(cfg: PNAConfig, w: dict, h: Array, batch: g.GraphBatch) -> Array:
+    n = h.shape[0]
+    src, dst = batch.edge_src, batch.edge_dst
+    m_in = jnp.concatenate([h[src], h[dst], batch.edge_feat[:, : cfg.d_edge]], axis=-1)
+    m = g.mlp(m_in, [w["msg_w1"], w["msg_w2"]], [w["msg_b1"], w["msg_b2"]])
+    m = jnp.where(batch.edge_mask[:, None], m, 0.0)
+
+    deg = g.degrees(dst, batch.edge_mask, n)  # [N]
+    mean = jax.ops.segment_sum(m, dst, n) / jnp.maximum(deg, 1.0)[:, None]
+    mx = jax.ops.segment_max(jnp.where(batch.edge_mask[:, None], m, -1e30), dst, n)
+    mx = jnp.where(deg[:, None] > 0, mx, 0.0)
+    mn = jax.ops.segment_min(jnp.where(batch.edge_mask[:, None], m, 1e30), dst, n)
+    mn = jnp.where(deg[:, None] > 0, mn, 0.0)
+    sq = jax.ops.segment_sum(m * m, dst, n) / jnp.maximum(deg, 1.0)[:, None]
+    std = jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + 1e-5)
+
+    aggs = [mean, mx, mn, std]
+    logd = jnp.log(deg + 1.0)[:, None]
+    amp = logd / cfg.avg_deg_log
+    att = cfg.avg_deg_log / jnp.maximum(logd, 1e-3)
+    scaled = []
+    for a in aggs:
+        scaled += [a, a * amp, a * att]
+    z = jnp.concatenate(scaled + [h], axis=-1)
+    out = z @ w["upd_w"] + w["upd_b"]
+    out = _layer_norm(out, w["ln_g"], w["ln_b"])
+    return h + jax.nn.relu(out)
+
+
+def _layer_norm(x, gamma, beta, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * gamma + beta
+
+
+def forward(cfg: PNAConfig, params: dict, batch: g.GraphBatch) -> Array:
+    h = jax.nn.relu(batch.node_feat[:, : cfg.d_in] @ params["enc_w"] + params["enc_b"])
+    step = jax.checkpoint(lambda h_, w_: _layer(cfg, w_, h_, batch))  # remat:
+    # backward recomputes each layer; saved state is one [N, d] per layer
+    for w in params["layers"]:
+        h = step(h, w)
+    return h @ params["head_w"] + params["head_b"]
+
+
+def loss_fn(cfg: PNAConfig, params: dict, batch: g.GraphBatch) -> Array:
+    logits = forward(cfg, params, batch)
+    return g.node_classification_loss(logits, batch.labels, batch.node_mask)

@@ -1,0 +1,92 @@
+"""Mixture-of-experts layer: top-k routing with sort-based capacity dispatch.
+
+TPU-native dispatch: tokens are argsorted by expert id, sliced into per-expert
+capacity buckets ``[E, C, d]`` (dropped on overflow — capacity_factor sizes
+C), pushed through batched expert matmuls (one einsum on the MXU), and
+combined back with the router gates.  No host-side raggedness; everything is
+fixed-shape so it lowers for any mesh with experts sharded over ``model``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def topk_routing(logits: Array, k: int) -> tuple[Array, Array]:
+    """logits [T, E] → (gates [T, k] softmaxed over the top-k, idx [T, k])."""
+    gates, idx = jax.lax.top_k(logits, k)
+    gates = jax.nn.softmax(gates.astype(jnp.float32), axis=-1)
+    return gates, idx
+
+
+def dispatch_indices(idx: Array, num_experts: int, capacity: int):
+    """Compute per-(token, choice) slot assignment.
+
+    Returns (slot [T*k] int32 in [0, E*C) or -1 if dropped, order info for
+    combine).  Stable sort by expert id; position within the expert group is
+    the running rank; ranks ≥ C are dropped (classic capacity dropping).
+    """
+    tk = idx.size
+    flat = idx.reshape(-1)
+    order = jnp.argsort(flat, stable=True)  # token-choice ids sorted by expert
+    sorted_e = flat[order]
+    # rank within each expert group = index - start(group)
+    group_start = jnp.searchsorted(sorted_e, jnp.arange(num_experts), side="left")
+    rank = jnp.arange(tk) - group_start[sorted_e]
+    slot_sorted = jnp.where(rank < capacity, sorted_e * capacity + rank, -1)
+    # scatter back to token-choice order
+    slot = jnp.zeros((tk,), jnp.int32).at[order].set(slot_sorted.astype(jnp.int32))
+    return slot
+
+
+def moe_ffn(
+    x: Array,  # [T, d] tokens
+    router_w: Array,  # [d, E_pad]
+    we_g: Array,  # [E_pad, d, f]
+    we_i: Array,  # [E_pad, d, f]
+    we_o: Array,  # [E_pad, f, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    num_experts: int | None = None,  # logical count; E_pad-E are sharding
+    # padding (router logits masked to -inf, so they never receive tokens)
+) -> tuple[Array, Array]:
+    """Returns (output [T, d], aux load-balancing loss)."""
+    t, d = x.shape
+    e = router_w.shape[-1]  # padded
+    e_logical = num_experts or e
+    logits = (x @ router_w).astype(jnp.float32)
+    if e_logical < e:
+        logits = jnp.where(jnp.arange(e) < e_logical, logits, -1e30)
+    gates, idx = topk_routing(logits, top_k)  # [T, k]
+    capacity = max(1, int(capacity_factor * t * top_k / e_logical))
+
+    slot = dispatch_indices(idx, e, capacity)  # [T*k]
+    valid = slot >= 0
+    # dropped choices target a sacrificial trailing slot (sliced off below) so
+    # they can never clobber slot 0
+    safe_slot = jnp.where(valid, slot, e * capacity)
+
+    # dispatch: [E*C, d] buffer, dropped choices masked out
+    xk = jnp.repeat(x, top_k, axis=0)  # [T*k, d]
+    buf = jnp.zeros((e * capacity + 1, d), x.dtype)
+    buf = buf.at[safe_slot].set(xk)
+    h = buf[:-1].reshape(e, capacity, d)
+
+    # batched expert FFN (SwiGLU) — one MXU einsum per projection
+    a = jnp.einsum("ecd,edf->ecf", h, we_g)
+    b = jnp.einsum("ecd,edf->ecf", h, we_i)
+    y = jnp.einsum("ecf,efd->ecd", jax.nn.silu(a) * b, we_o).reshape(e * capacity, d)
+
+    # combine: gather each choice's slot output, weight by its gate
+    yk = y[jnp.where(valid, slot, 0)] * valid[:, None]  # [T*k, d]
+    out = (yk.reshape(t, top_k, d) * gates[..., None].astype(x.dtype)).sum(axis=1)
+
+    # Switch-style load-balance aux loss
+    me = jax.nn.softmax(logits, axis=-1).mean(axis=0)  # [E_pad]
+    ce = jnp.zeros((e,)).at[idx.reshape(-1)].add(1.0) / (t * top_k)
+    aux = e_logical * jnp.sum(me * ce)
+    return out.astype(x.dtype), aux

@@ -1,0 +1,1 @@
+"""RecSys: MIND multi-interest retrieval + the EmbeddingBag substrate."""

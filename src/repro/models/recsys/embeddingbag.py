@@ -1,0 +1,59 @@
+"""EmbeddingBag for JAX: the hot path of every recsys model.
+
+JAX has no native EmbeddingBag and no CSR sparse — lookups are explicit
+``jnp.take`` gathers and bag reduction is ``jax.ops.segment_sum`` (or a
+dense reshape-reduce when bags are fixed-length).  The table's row axis is
+the sharded ("table_rows" → model) dimension: each chip gathers its local
+rows and the partial bag sums meet in one reduce-scatter — the same
+communication pattern as a parameter-server embedding shard.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jnp.ndarray
+
+
+def embedding_bag_fixed(
+    table: Array,  # [R, D] (row-sharded)
+    indices: Array,  # int32 [B, L]  fixed-length bags
+    weights: Array | None = None,  # f32 [B, L] per-item weights
+    *,
+    mode: str = "sum",
+    valid: Array | None = None,  # bool [B, L] padding mask
+) -> Array:
+    """Fixed-length-bag lookup: gather [B, L, D] → reduce L. [B, D]"""
+    emb = jnp.take(table, indices, axis=0)  # [B, L, D]
+    if weights is not None:
+        emb = emb * weights[..., None]
+    if valid is not None:
+        emb = jnp.where(valid[..., None], emb, 0.0)
+    if mode == "sum":
+        return emb.sum(axis=1)
+    if mode == "mean":
+        n = (
+            valid.sum(axis=1, keepdims=True).astype(emb.dtype)
+            if valid is not None
+            else jnp.float32(indices.shape[1])
+        )
+        return emb.sum(axis=1) / jnp.maximum(n, 1.0)
+    raise ValueError(mode)
+
+
+def embedding_bag_ragged(
+    table: Array,  # [R, D]
+    indices: Array,  # int32 [T] flattened item ids
+    bag_ids: Array,  # int32 [T] which bag each item belongs to
+    num_bags: int,
+    *,
+    mode: str = "sum",
+) -> Array:
+    """Ragged bags via segment_sum (CSR-style offsets → bag_ids). [B, D]"""
+    emb = jnp.take(table, indices, axis=0)  # [T, D]
+    s = jax.ops.segment_sum(emb, bag_ids, num_bags)
+    if mode == "sum":
+        return s
+    n = jax.ops.segment_sum(jnp.ones_like(bag_ids, emb.dtype), bag_ids, num_bags)
+    return s / jnp.maximum(n, 1.0)[:, None]

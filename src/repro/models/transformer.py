@@ -1,0 +1,367 @@
+"""Decoder-only transformer family covering all five assigned LM archs.
+
+One parametric definition supports:
+  * GQA attention with optional QKV bias (qwen2-72b, llama3.2-1b)
+  * MLA — multi-head latent attention with compressed KV cache (minicpm3-4b)
+  * MoE FFN with shared experts (qwen2-moe-a2.7b)
+  * dense+MoE hybrid residual (arctic-480b)
+
+Layers are stacked ``[L, ...]`` and scanned (compact HLO at 80 layers) with
+optional remat.  Params carry logical axes ("embed", "heads", "mlp",
+"experts", "vocab", "layers") resolved to mesh axes by runtime.mesh_rules.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models.moe import moe_ffn
+
+Array = jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab_size: int
+    attention: str = "gqa"  # gqa | mla
+    qkv_bias: bool = False
+    # MLA dims (minicpm3)
+    q_rank: int = 0
+    kv_rank: int = 0
+    nope_dim: int = 0
+    rope_dim: int = 0
+    v_head_dim: int = 0
+    # MoE
+    moe: bool = False
+    num_experts: int = 0
+    num_experts_padded: int = 0  # pad expert arrays for sharding divisibility
+    top_k: int = 0
+    d_ff_expert: int = 0
+    d_ff_shared: int = 0  # qwen2-moe shared experts (0 = none)
+    dense_residual: bool = False  # arctic: dense FFN ∥ MoE
+    capacity_factor: float = 1.25
+    rope_theta: float = 10000.0
+    dtype: Any = jnp.bfloat16
+    remat: bool = True
+    # scan=True gives compact HLO (fast compiles); unrolled is required for
+    # truthful cost_analysis flop totals (XLA counts a scan body once) and
+    # exposes cross-layer fusion/overlap to the scheduler.
+    scan_layers: bool = True
+    attn_block_q: int = 512
+    attn_block_k: int = 1024
+
+    @property
+    def qk_dim(self) -> int:
+        return self.nope_dim + self.rope_dim if self.attention == "mla" else self.head_dim
+
+    @property
+    def v_dim(self) -> int:
+        return self.v_head_dim if self.attention == "mla" else self.head_dim
+
+    def num_params(self) -> int:
+        import numpy as np
+
+        specs = jax.eval_shape(lambda: init_params(self, jax.random.PRNGKey(0)))
+        return int(sum(np.prod(l.shape) for l in jax.tree.leaves(specs)))
+
+    def num_active_params(self) -> int:
+        """Activated params per token (MoE: top-k experts only)."""
+        n = self.num_params()
+        if not self.moe:
+            return n
+        per_expert = 3 * self.d_model * self.d_ff_expert
+        inactive = (self.num_experts - self.top_k) * per_expert * self.num_layers
+        return n - inactive
+
+
+# ------------------------------------------------------------------- params
+def init_params(cfg: TransformerConfig, rng: jax.Array) -> dict:
+    f = cm.ParamFactory(rng, dtype=cfg.dtype)
+    p: dict = {}
+    s: dict = {}
+    L, d = cfg.num_layers, cfg.d_model
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    lay: dict = {}
+    ls: dict = {}
+    f.param(lay, ls, "attn_norm", (L, d), ("layers", "embed"), scale=1.0)
+    if cfg.attention == "gqa":
+        f.param(lay, ls, "wq", (L, d, hq * dh), ("layers", "embed", "heads"))
+        f.param(lay, ls, "wk", (L, d, hkv * dh), ("layers", "embed", "heads"))
+        f.param(lay, ls, "wv", (L, d, hkv * dh), ("layers", "embed", "heads"))
+        f.param(lay, ls, "wo", (L, hq * dh, d), ("layers", "heads", "embed"))
+        if cfg.qkv_bias:
+            f.param(lay, ls, "bq", (L, hq * dh), ("layers", "heads"), zeros=True)
+            f.param(lay, ls, "bk", (L, hkv * dh), ("layers", "heads"), zeros=True)
+            f.param(lay, ls, "bv", (L, hkv * dh), ("layers", "heads"), zeros=True)
+    else:  # mla
+        qk, vd = cfg.nope_dim + cfg.rope_dim, cfg.v_head_dim
+        f.param(lay, ls, "wdq", (L, d, cfg.q_rank), ("layers", "embed", "mlp"))
+        f.param(lay, ls, "q_norm", (L, cfg.q_rank), ("layers", "mlp"), scale=1.0)
+        f.param(lay, ls, "wuq", (L, cfg.q_rank, hq * qk), ("layers", "mlp", "heads"))
+        f.param(lay, ls, "wdkv", (L, d, cfg.kv_rank + cfg.rope_dim), ("layers", "embed", "mlp"))
+        f.param(lay, ls, "kv_norm", (L, cfg.kv_rank), ("layers", "mlp"), scale=1.0)
+        f.param(lay, ls, "wuk", (L, cfg.kv_rank, hq * cfg.nope_dim), ("layers", "mlp", "heads"))
+        f.param(lay, ls, "wuv", (L, cfg.kv_rank, hq * vd), ("layers", "mlp", "heads"))
+        f.param(lay, ls, "wo", (L, hq * vd, d), ("layers", "heads", "embed"))
+    f.param(lay, ls, "mlp_norm", (L, d), ("layers", "embed"), scale=1.0)
+    if cfg.moe:
+        e, fe = cfg.num_experts_padded or cfg.num_experts, cfg.d_ff_expert
+        f.param(lay, ls, "router", (L, d, e), ("layers", "embed", "experts"))
+        f.param(lay, ls, "we_g", (L, e, d, fe), ("layers", "experts", "embed", "mlp"))
+        f.param(lay, ls, "we_i", (L, e, d, fe), ("layers", "experts", "embed", "mlp"))
+        f.param(lay, ls, "we_o", (L, e, fe, d), ("layers", "experts", "mlp", "embed"))
+        if cfg.d_ff_shared:
+            f.param(lay, ls, "ws_g", (L, d, cfg.d_ff_shared), ("layers", "embed", "mlp"))
+            f.param(lay, ls, "ws_i", (L, d, cfg.d_ff_shared), ("layers", "embed", "mlp"))
+            f.param(lay, ls, "ws_o", (L, cfg.d_ff_shared, d), ("layers", "mlp", "embed"))
+            f.param(lay, ls, "shared_gate", (L, d), ("layers", "embed"), zeros=True)
+    if (not cfg.moe) or cfg.dense_residual:
+        f.param(lay, ls, "wg", (L, d, cfg.d_ff), ("layers", "embed", "mlp"))
+        f.param(lay, ls, "wi", (L, d, cfg.d_ff), ("layers", "embed", "mlp"))
+        f.param(lay, ls, "wo_mlp", (L, cfg.d_ff, d), ("layers", "mlp", "embed"))
+    p["layers"] = lay
+    s["layers"] = ls
+    f.param(p, s, "embed", (cfg.vocab_size, d), ("vocab", "embed"), scale=1.0)
+    f.param(p, s, "final_norm", (d,), ("embed",), scale=1.0)
+    f.param(p, s, "lm_head", (d, cfg.vocab_size), ("embed", "vocab"))
+    init_params.last_specs = s
+    return p
+
+
+def param_specs(cfg: TransformerConfig) -> dict:
+    """Logical-axis tree matching init_params' structure (no allocation)."""
+    jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return init_params.last_specs
+
+
+# ------------------------------------------------------------------ attention
+def _attention(cfg: TransformerConfig, w: dict, x: Array, positions: Array,
+               cache=None, layer_idx=None):
+    """Returns (attn_out [B,S,d], new_cache_entry)."""
+    b, sq, d = x.shape
+    hq, hkv, dh = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+
+    if cfg.attention == "gqa":
+        q = x @ w["wq"]
+        k = x @ w["wk"]
+        v = x @ w["wv"]
+        if cfg.qkv_bias:
+            q, k, v = q + w["bq"], k + w["bk"], v + w["bv"]
+        q = q.reshape(b, sq, hq, dh).transpose(0, 2, 1, 3)
+        k = k.reshape(b, sq, hkv, dh).transpose(0, 2, 1, 3)
+        v = v.reshape(b, sq, hkv, dh).transpose(0, 2, 1, 3)
+        q = cm.apply_rope(q, positions[:, None, :], cfg.rope_theta)
+        k = cm.apply_rope(k, positions[:, None, :], cfg.rope_theta)
+        if cache is None:
+            out = cm.chunked_attention(
+                q, k, v, causal=True,
+                block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+            )
+            new_cache = (k, v)
+        else:
+            ck, cv = cache  # [B, Hkv, Smax, dh]
+            pos = positions[:, 0]  # decode: one token per row
+            ck = _cache_insert(ck, k, pos)
+            cv = _cache_insert(cv, v, pos)
+            if cm._ACTIVATION_MESH[0] is not None and "model" in cm._ACTIVATION_MESH[0].axis_names:
+                # seq-sharded KV + distributed-LSE combine (§Perf): the
+                # cache never crosses the ICI, only [B, Hq, D] stats do.
+                out = cm.dlse_decode_attention(q, ck, cv, pos[0] + 1)
+            else:
+                out = cm.chunked_attention(
+                    q, ck, cv, causal=False,
+                    q_offset=pos, kv_valid_len=pos[0] + 1,
+                    block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+                )
+            new_cache = (ck, cv)
+        out = out.transpose(0, 2, 1, 3).reshape(b, sq, hq * dh)
+        return out @ w["wo"], new_cache
+
+    # ----- MLA (minicpm3): compressed latent KV -----
+    qk, vd, nd, rd = cfg.qk_dim, cfg.v_head_dim, cfg.nope_dim, cfg.rope_dim
+    cq = cm.rms_norm(x @ w["wdq"], w["q_norm"])
+    q = (cq @ w["wuq"]).reshape(b, sq, hq, qk).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = cm.apply_rope(q_rope, positions[:, None, :], cfg.rope_theta)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    kv_low = x @ w["wdkv"]  # [B, S, kvr + rd]
+    ckv_new = cm.rms_norm(kv_low[..., : cfg.kv_rank], w["kv_norm"])
+    krope_new = cm.apply_rope(
+        kv_low[..., None, cfg.kv_rank:].transpose(0, 2, 1, 3), positions[:, None, :],
+        cfg.rope_theta,
+    )[:, 0]  # [B, S, rd] shared across heads
+
+    if cache is None:
+        ckv, krope, kv_len = ckv_new, krope_new, None
+        new_cache = (ckv_new, krope_new)
+    else:
+        ckv, krope = cache  # [B, Smax, kvr], [B, Smax, rd]
+        pos = positions[:, 0]
+        ckv = _cache_insert_seq(ckv, ckv_new, pos)
+        krope = _cache_insert_seq(krope, krope_new, pos)
+        kv_len = pos[0] + 1
+        new_cache = (ckv, krope)
+
+    if (
+        cache is not None
+        and cm._ACTIVATION_MESH[0] is not None
+        and "model" in cm._ACTIVATION_MESH[0].axis_names
+    ):
+        # decode with seq-sharded latents: expansion AND attention stay
+        # device-local; only [B, H, vd] softmax stats cross the ICI (§Perf)
+        out = cm.dlse_mla_decode_attention(
+            q, ckv, krope, w["wuk"], w["wuv"], kv_len,
+            nope_dim=nd, v_dim=vd,
+        )
+    else:
+        sk = ckv.shape[1]
+        k_nope = (ckv @ w["wuk"]).reshape(b, sk, hq, nd).transpose(0, 2, 1, 3)
+        v = (ckv @ w["wuv"]).reshape(b, sk, hq, vd).transpose(0, 2, 1, 3)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(krope[:, None], (b, hq, sk, rd))], axis=-1
+        )
+        out = cm.chunked_attention(
+            q, k, v, causal=(cache is None),
+            q_offset=positions[:, 0] if cache is not None else 0,
+            kv_valid_len=kv_len,
+            block_q=cfg.attn_block_q, block_k=cfg.attn_block_k,
+        )
+    out = out.transpose(0, 2, 1, 3).reshape(b, sq, hq * vd)
+    return out @ w["wo"], new_cache
+
+
+def _cache_insert(cache: Array, new: Array, pos: Array) -> Array:
+    """cache [B, H, Smax, D] ← new [B, H, 1, D] at per-batch position pos."""
+    b, h, smax, d = cache.shape
+    onehot = (jnp.arange(smax)[None] == pos[:, None])[:, None, :, None]
+    return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+def _cache_insert_seq(cache: Array, new: Array, pos: Array) -> Array:
+    """cache [B, Smax, D] ← new [B, 1, D] at per-batch position pos."""
+    b, smax, d = cache.shape
+    onehot = (jnp.arange(smax)[None] == pos[:, None])[:, :, None]
+    return jnp.where(onehot, new.astype(cache.dtype), cache)
+
+
+# ---------------------------------------------------------------------- MLP
+def _mlp(cfg: TransformerConfig, w: dict, x: Array) -> tuple[Array, Array]:
+    b, s, d = x.shape
+    aux = jnp.zeros((), jnp.float32)
+    out = jnp.zeros_like(x)
+    if cfg.moe:
+        flat = x.reshape(b * s, d)
+        moe_out, aux = moe_ffn(
+            flat, w["router"], w["we_g"], w["we_i"], w["we_o"],
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            num_experts=cfg.num_experts,
+        )
+        out = out + moe_out.reshape(b, s, d)
+        if cfg.d_ff_shared:
+            shared = cm.swiglu(x, w["ws_g"], w["ws_i"], w["ws_o"])
+            gate = jax.nn.sigmoid((x * w["shared_gate"]).sum(-1, keepdims=True))
+            out = out + gate.astype(x.dtype) * shared
+    if (not cfg.moe) or cfg.dense_residual:
+        out = out + cm.swiglu(x, w["wg"], w["wi"], w["wo_mlp"])
+    return out, aux
+
+
+# ------------------------------------------------------------------- forward
+def forward(
+    cfg: TransformerConfig,
+    params: dict,
+    tokens: Array,  # int32 [B, S]
+    *,
+    cache: Any = None,  # stacked per-layer cache (decode) or None
+    positions: Array | None = None,  # [B, S] absolute positions
+):
+    """Returns (logits [B, S, vocab], new_cache, aux_loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    x = params["embed"][tokens].astype(cfg.dtype)
+    x = cm.constrain(x, "batch", None, None)
+
+    def layer(carry, scanned):
+        h, aux = carry
+        w, cache_l = scanned
+        attn_in = cm.rms_norm(h, w["attn_norm"])
+        attn_out, new_cache_l = _attention(cfg, w, attn_in, positions, cache_l)
+        h = h + attn_out
+        mlp_out, aux_l = _mlp(cfg, w, cm.rms_norm(h, w["mlp_norm"]))
+        return (h + mlp_out, aux + aux_l), new_cache_l
+
+    layer_fn = jax.checkpoint(layer) if cfg.remat else layer
+    if cfg.scan_layers:
+        (x, aux), new_cache = jax.lax.scan(
+            layer_fn, (x, jnp.zeros((), jnp.float32)), (params["layers"], cache)
+        )
+    else:
+        carry = (x, jnp.zeros((), jnp.float32))
+        caches = []
+        for l in range(cfg.num_layers):
+            w_l = jax.tree.map(lambda a: a[l], params["layers"])
+            cache_l = jax.tree.map(lambda a: a[l], cache) if cache is not None else None
+            carry, cache_out = layer_fn(carry, (w_l, cache_l))
+            caches.append(cache_out)
+        x, aux = carry
+        new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    x = cm.rms_norm(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    # vocab-sharded logits: keeps the f32 softmax/CE working set at
+    # [B/dp, S, V/tp] per device instead of a replicated [B/dp, S, V]
+    logits = cm.constrain(logits, "batch", None, "vocab")
+    return logits, new_cache, aux
+
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    """Stacked decode cache (zeros); shapes match forward's scan."""
+    L = cfg.num_layers
+    if cfg.attention == "gqa":
+        shape = (L, batch, cfg.num_kv_heads, max_seq, cfg.head_dim)
+        return (jnp.zeros(shape, cfg.dtype), jnp.zeros(shape, cfg.dtype))
+    return (
+        jnp.zeros((L, batch, max_seq, cfg.kv_rank), cfg.dtype),
+        jnp.zeros((L, batch, max_seq, cfg.rope_dim), cfg.dtype),
+    )
+
+
+def cache_specs(cfg: TransformerConfig):
+    """Logical axes for the decode cache.
+
+    §Perf: kv_seq over model + distributed-LSE attention (GQA path) — the
+    cache fits (85 GB / 256 chips) AND never crosses the ICI; only
+    [B, Hq, D] softmax stats are psum'd.  (Batch-only sharding was measured
+    7.1× better on collectives but does not fit HBM; see EXPERIMENTS.md.)
+    """
+    if cfg.attention == "gqa":
+        ax = ("layers", "batch", None, "kv_seq", None)
+        return (ax, ax)
+    return (("layers", "batch", "kv_seq", None), ("layers", "batch", "kv_seq", None))
+
+
+def decode_step(cfg: TransformerConfig, params: dict, cache, tokens: Array, pos: Array):
+    """One-token decode: tokens [B], pos [B] → (logits [B, vocab], cache)."""
+    positions = pos[:, None]
+    logits, new_cache, _ = forward(
+        cfg, params, tokens[:, None], cache=cache, positions=positions
+    )
+    return logits[:, 0], new_cache
+
+
+def loss_fn(cfg: TransformerConfig, params: dict, tokens: Array, labels: Array):
+    logits, _, aux = forward(cfg, params, tokens)
+    return cm.cross_entropy_loss(logits, labels) + 0.01 * aux

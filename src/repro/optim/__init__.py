@@ -1,0 +1,4 @@
+"""Optimizers and distributed-optimization tricks."""
+
+from repro.optim.adamw import adamw_init, adamw_update  # noqa: F401
+from repro.optim.schedules import cosine_with_warmup  # noqa: F401

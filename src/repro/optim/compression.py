@@ -1,0 +1,52 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 stochastic-rounding quantization of gradients before the data-parallel
+all-reduce, with per-tensor scales and an error-feedback accumulator so the
+quantization bias does not accumulate across steps.  Under pjit the quantized
+tensors are what cross the ICI — 4× fewer collective bytes on the gradient
+reduce at the cost of one extra VPU pass.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray, rng: jax.Array):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    scaled = x / scale
+    noise = jax.random.uniform(rng, x.shape, minval=-0.5, maxval=0.5)
+    q = jnp.clip(jnp.round(scaled + noise), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_grads(grads, errors, rng: jax.Array):
+    """Returns (quantized tree, scales tree, new error-feedback tree)."""
+    leaves, treedef = jax.tree.flatten(grads)
+    err_leaves = jax.tree.leaves(errors) if errors is not None else [0.0] * len(leaves)
+    rngs = jax.random.split(rng, len(leaves))
+    qs, scales, new_errs = [], [], []
+    for g, e, r in zip(leaves, err_leaves, rngs):
+        corrected = g.astype(jnp.float32) + e
+        q, s = quantize_int8(corrected, r)
+        qs.append(q)
+        scales.append(s)
+        new_errs.append(corrected - dequantize_int8(q, s))
+    return (
+        jax.tree.unflatten(treedef, qs),
+        jax.tree.unflatten(treedef, scales),
+        jax.tree.unflatten(treedef, new_errs),
+    )
+
+
+def decompress_grads(qs, scales):
+    return jax.tree.map(dequantize_int8, qs, scales)
+
+
+def init_error_feedback(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)

@@ -1,0 +1,66 @@
+"""Elastic scaling: resize the data axis and reshard state deterministically.
+
+Losing a pod slice (or adding one back) changes the device count; training
+continues by rebuilding the mesh from surviving devices and resharding
+params/optimizer state onto it.  Because checkpoints store *global* arrays
+(see checkpoint.store), resharding is a device_put with the new sharding —
+no shard surgery.  The global batch is re-split across the new data extent;
+a fixed global batch keeps the optimizer trajectory comparable.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.runtime import mesh_rules
+
+
+def build_mesh(devices=None, *, data: int | None = None, model: int | None = None,
+               pod: int | None = None) -> Mesh:
+    """Build the largest rectangular mesh from the given devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    if pod:
+        shape = (pod, data or 1, model or 1)
+        axes = ("pod", "data", "model")
+    else:
+        if model is None:
+            model = min(n, int(np.sqrt(n)))
+            while n % model:
+                model -= 1
+        data = data or n // model
+        shape = (data, model)
+        axes = ("data", "model")
+    need = int(np.prod(shape))
+    assert need <= n, (shape, n)
+    arr = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(arr, axes)
+
+
+def reshard(tree, specs_tree, new_mesh: Mesh):
+    """Move state onto a new mesh per its logical-axis specs."""
+    shardings = mesh_rules.shardings_for(specs_tree, new_mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s), tree, shardings
+    )
+
+
+def shrink_after_failure(mesh: Mesh, failed_devices: set) -> Mesh:
+    """Rebuild the mesh without failed devices, shrinking the data axis."""
+    survivors = [d for d in mesh.devices.flat if d not in failed_devices]
+    model = mesh.devices.shape[-1]
+    data = len(survivors) // model
+    assert data >= 1, "not enough survivors for one model replica"
+    return build_mesh(survivors, data=data, model=model)
+
+
+def split_global_batch(global_batch: int, mesh: Mesh) -> int:
+    """Per-device batch under the current data extent (must divide)."""
+    dp = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            dp *= mesh.shape[ax]
+    assert global_batch % dp == 0, (global_batch, dp)
+    return global_batch // dp

@@ -1,0 +1,95 @@
+"""Fault-tolerant training supervisor: checkpoint/restart + failure injection.
+
+``Supervisor.run`` drives a step function under a restart policy: on device
+failure (real ``XlaRuntimeError`` or injected ``InjectedFault``) it restores
+the latest checkpoint, rebuilds program state (optionally on a shrunken
+mesh via ``elastic``), and resumes.  Deterministic data order is preserved
+by keying the input pipeline on the step counter, so a restart replays the
+exact failed step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import logging
+import time
+from typing import Callable
+
+from repro.checkpoint import CheckpointManager
+
+log = logging.getLogger("repro.fault")
+
+
+class InjectedFault(RuntimeError):
+    """Simulated device/host failure for tests and drills."""
+
+
+@dataclasses.dataclass
+class FaultPolicy:
+    max_restarts: int = 5
+    checkpoint_every: int = 50
+    backoff_s: float = 0.0  # delay before restart (0 in tests)
+
+
+@dataclasses.dataclass
+class StepResult:
+    state: object
+    metrics: dict
+
+
+class Supervisor:
+    """Wraps a training loop with checkpoint/restart fault handling."""
+
+    def __init__(
+        self,
+        ckpt: CheckpointManager,
+        policy: FaultPolicy = FaultPolicy(),
+        *,
+        fault_injector: Callable[[int], None] | None = None,
+        on_restart: Callable[[object, int], object] | None = None,
+    ) -> None:
+        self.ckpt = ckpt
+        self.policy = policy
+        self.fault_injector = fault_injector
+        self.on_restart = on_restart
+        self.restarts = 0
+        self.history: list[str] = []
+
+    def run(
+        self,
+        state,
+        step_fn: Callable[[object, int], StepResult],
+        *,
+        start_step: int = 0,
+        num_steps: int,
+    ):
+        """Run ``num_steps`` steps with checkpointing and restart-on-fault."""
+        step = start_step
+        while step < start_step + num_steps:
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(step)
+                res = step_fn(state, step)
+                state = res.state
+                if (step + 1) % self.policy.checkpoint_every == 0:
+                    self.ckpt.save(step + 1, state)
+                    self.history.append(f"ckpt@{step + 1}")
+                step += 1
+            except (InjectedFault, RuntimeError) as e:  # XlaRuntimeError ⊂ RuntimeError
+                self.restarts += 1
+                self.history.append(f"fault@{step}:{type(e).__name__}")
+                log.warning("step %d failed (%s); restart %d", step, e, self.restarts)
+                if self.restarts > self.policy.max_restarts:
+                    raise
+                if self.policy.backoff_s:
+                    time.sleep(self.policy.backoff_s)
+                try:
+                    state, restored_step = self.ckpt.restore_latest(state)
+                    step = restored_step
+                except FileNotFoundError:
+                    step = start_step  # no checkpoint yet → restart from scratch
+                if self.on_restart is not None:
+                    state = self.on_restart(state, step)
+                self.history.append(f"resume@{step}")
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,94 @@
+"""Logical-axis → mesh-axis rules (MaxText-style) and sharding helpers.
+
+Model code annotates every param/activation dim with a *logical* axis name;
+this module resolves those names against the active mesh so the same model
+lowers on the single-pod (16, 16) ("data", "model") mesh, the multi-pod
+(2, 16, 16) ("pod", "data", "model") mesh, or any smoke-test mesh.  Axes
+absent from the mesh resolve to replicated.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name → preferred mesh axes, first present wins; tuples shard one
+# logical dim over multiple mesh axes.
+DEFAULT_RULES: dict[str, tuple] = {
+    "batch": (("pod", "data"), ("data",)),  # DP over pod×data
+    "layers": ((),),  # scanned; never sharded
+    "embed": (("data",),),  # FSDP param shard
+    "heads": (("model",),),  # TP
+    "mlp": (("model",),),
+    "vocab": (("model",),),
+    "experts": (("model",),),  # EP
+    "kv_seq": (("model",),),  # decode cache: sequence-parallel KV
+    "table_rows": (("model",),),  # recsys embedding rows
+    "graph_nodes": (("model",),),  # GNN node states
+    "graph_edges": (("pod", "data"), ("data",)),  # edge-parallel
+    "q_vertices": (("pod", "data"), ("data",)),  # DC: concurrent queries
+    "dc_vertices": (("model",),),  # DC: vertex/store axis
+    # beyond-paper (§Perf): query axis over the WHOLE mesh → neighbour-state
+    # gathers become device-local; only scalar horizon/frontier reductions
+    # cross the ICI.  Queries are the paper's scalability axis, so this is
+    # the natural embarrassingly-parallel decomposition.
+    "q_all": (("pod", "data", "model"), ("data", "model")),
+    "dc_local": ((),),  # vertex axis replicated (per-device full graph)
+    "seq": ((),),  # activations: seq replicated (no SP by default)
+}
+
+
+def resolve_axis(logical: str | None, mesh: Mesh) -> tuple | None:
+    if logical is None:
+        return None
+    options = DEFAULT_RULES.get(logical, ((),))
+    for opt in options:
+        if isinstance(opt, tuple) and len(opt) and isinstance(opt[0], tuple):
+            opt = opt[0]
+        if all(a in mesh.axis_names for a in opt):
+            if len(opt) == 0:
+                return None
+            return opt if len(opt) > 1 else opt[0]
+    return None
+
+
+def logical_to_spec(axes: tuple, mesh: Mesh) -> P:
+    """('layers','embed','heads') → PartitionSpec for this mesh."""
+    used: set = set()
+    parts = []
+    for ax in axes:
+        r = resolve_axis(ax, mesh)
+        # one mesh axis may appear at most once in a spec
+        if r is None:
+            parts.append(None)
+            continue
+        rs = r if isinstance(r, tuple) else (r,)
+        if any(a in used for a in rs):
+            parts.append(None)
+            continue
+        used.update(rs)
+        parts.append(r)
+    return P(*parts)
+
+
+def _is_axes_leaf(x) -> bool:
+    return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
+
+
+def shardings_for(specs_tree, mesh: Mesh):
+    """Map a tree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, logical_to_spec(axes, mesh)),
+        specs_tree,
+        is_leaf=_is_axes_leaf,
+    )
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def shard_batch_spec(mesh: Mesh) -> P:
+    ax = resolve_axis("batch", mesh)
+    return P(ax) if ax is not None else P()

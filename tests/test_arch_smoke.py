@@ -1,0 +1,164 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+asserting output shapes and no NaNs.  Full configs are exercised only via
+the dry-run (ShapeDtypeStructs, no allocation)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_arch
+
+LM_ARCHS = ["qwen2-72b", "minicpm3-4b", "llama3.2-1b", "qwen2-moe-a2.7b", "arctic-480b"]
+GNN_ARCHS = ["pna", "gatedgcn", "dimenet", "equiformer-v2"]
+
+
+def test_registry_complete():
+    assert len(ARCH_NAMES) == 11  # 10 assigned + diff-ife
+    for name in ARCH_NAMES:
+        arch = get_arch(name)
+        assert arch.shapes, name
+        assert callable(arch.full) and callable(arch.smoke)
+
+
+@pytest.mark.parametrize("name", LM_ARCHS)
+def test_lm_smoke_forward_and_train(name):
+    from repro.configs.lm_harness import make_train_step
+    from repro.models import transformer as tf
+    from repro.optim import adamw_init
+
+    arch = get_arch(name)
+    cfg = arch.smoke()
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+    labels = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 24)), jnp.int32)
+
+    logits, _, _ = tf.forward(cfg, params, tokens)
+    assert logits.shape == (2, 24, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all()), "NaN in logits"
+
+    step = jax.jit(make_train_step(cfg))
+    p2, o2, metrics = step(params, adamw_init(params), tokens, labels)
+    assert bool(jnp.isfinite(metrics["loss"])), "NaN loss"
+    # params actually moved
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved
+
+    # decode smoke: one token against a cache
+    cache = tf.init_cache(cfg, 2, 8)
+    lg, cache2 = tf.decode_step(cfg, params, cache, tokens[:, 0], jnp.zeros((2,), jnp.int32))
+    assert lg.shape == (2, cfg.vocab_size) and bool(jnp.isfinite(lg).all())
+
+
+@pytest.mark.parametrize("name", GNN_ARCHS)
+def test_gnn_smoke_train(name):
+    from repro.models.gnn import common as g
+
+    arch = get_arch(name)
+    cfg = arch.smoke()
+    rng = np.random.default_rng(1)
+    geometric = name in ("dimenet", "equiformer-v2")
+    batch = g.random_graph_batch(
+        rng, 48, 160, getattr(cfg, "d_in", 16), edge_feat_dim=8,
+        num_classes=getattr(cfg, "num_classes", 8), geometric=geometric,
+    )
+    if name == "pna":
+        from repro.models.gnn import pna as m
+        loss_fn = lambda p: m.loss_fn(cfg, p, batch)
+        out = m.forward(cfg, m.init_params(cfg, jax.random.PRNGKey(0)), batch)
+        assert out.shape == (48, cfg.num_classes)
+    elif name == "gatedgcn":
+        from repro.models.gnn import gatedgcn as m
+        loss_fn = lambda p: m.loss_fn(cfg, p, batch)
+        out = m.forward(cfg, m.init_params(cfg, jax.random.PRNGKey(0)), batch)
+        assert out.shape == (48, cfg.num_classes)
+    elif name == "dimenet":
+        from repro.models.gnn import dimenet as m
+        tri = m.build_triplets(
+            np.asarray(batch.edge_src), np.asarray(batch.edge_dst),
+            np.asarray(batch.edge_mask), 1024,
+        )
+        tri = tuple(jnp.asarray(t) for t in tri)
+        loss_fn = lambda p: m.loss_fn(cfg, p, batch, tri)
+        out = m.forward(cfg, m.init_params(cfg, jax.random.PRNGKey(0)), batch, tri)
+        assert out.shape == (48, cfg.num_targets)
+    else:
+        from repro.models.gnn import equiformer_v2 as m
+        loss_fn = lambda p: m.loss_fn(cfg, p, batch)
+        out = m.forward(cfg, m.init_params(cfg, jax.random.PRNGKey(0)), batch)
+        assert out.shape == (48, cfg.num_targets)
+    assert bool(jnp.isfinite(out).all()), "NaN in forward"
+
+    if name == "pna":
+        from repro.models.gnn import pna as m
+    elif name == "gatedgcn":
+        from repro.models.gnn import gatedgcn as m
+    params = None
+    # one grad step sanity: loss finite, grads finite
+    mod_params = loss_fn.__closure__  # noqa: F841 (documentation only)
+    import repro.models.gnn as _  # noqa: F401
+
+    # generic: re-init params through the arch's own module
+    init = {
+        "pna": "pna", "gatedgcn": "gatedgcn", "dimenet": "dimenet",
+        "equiformer-v2": "equiformer_v2",
+    }[name]
+    mod = __import__(f"repro.models.gnn.{init}", fromlist=["init_params"])
+    p0 = mod.init_params(cfg, jax.random.PRNGKey(0))
+    l, grads = jax.value_and_grad(loss_fn)(p0)
+    assert bool(jnp.isfinite(l))
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(grads))
+
+
+def test_mind_smoke_train_and_serve():
+    from repro.models.recsys import mind as m
+
+    arch = get_arch("mind")
+    cfg = arch.smoke()
+    params = m.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    beh = jnp.asarray(rng.integers(0, cfg.num_items, (8, cfg.seq_len)), jnp.int32)
+    valid = jnp.ones((8, cfg.seq_len), bool)
+    tgt = jnp.asarray(rng.integers(0, cfg.num_items, 8), jnp.int32)
+    neg = jnp.asarray(rng.integers(0, cfg.num_items, (8, 20)), jnp.int32)
+    loss = m.loss_fn(cfg, params, beh, valid, tgt, neg)
+    assert bool(jnp.isfinite(loss))
+    interests = m.user_interests(cfg, params, beh, valid)
+    assert interests.shape == (8, cfg.n_interests, cfg.embed_dim)
+    assert bool(jnp.isfinite(interests).all())
+    scores = m.retrieval_scores(cfg, params, beh[:1], valid[:1],
+                                jnp.arange(cfg.num_items, dtype=jnp.int32))
+    assert scores.shape == (1, cfg.num_items)
+
+
+def test_diff_ife_smoke_cell_runs_with_real_arrays():
+    """The dc arch's maintain cell executes on a 1×1 mesh with real arrays."""
+    from repro.configs.diff_ife import ARCH, _engine_cfg
+    from repro.core import engine as eng
+    from repro.launch.mesh import make_smoke_mesh
+
+    z = ARCH.smoke()
+    cfg = _engine_cfg(z)
+    rng = np.random.default_rng(0)
+    e = z.num_edges
+    src = jnp.asarray(rng.integers(0, z.num_vertices, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, z.num_vertices, e), jnp.int32)
+    g = eng.GraphArrays(
+        src=src, dst=dst,
+        weight=jnp.asarray(rng.integers(1, 10, e), jnp.float32),
+        valid=jnp.ones((e,), bool),
+        out_degree=jnp.zeros((z.num_vertices,), jnp.int32),
+        in_degree=jnp.zeros((z.num_vertices,), jnp.int32),
+    )
+    init = jnp.full((z.num_queries, z.num_vertices), jnp.inf, jnp.float32)
+    init = init.at[jnp.arange(z.num_queries), jnp.arange(z.num_queries)].set(0.0)
+    state = eng.make_state(cfg, init, e)
+    state2, stats = jax.jit(lambda s, g_, d: eng.maintain(cfg, s, g_, d))(
+        state, g, jnp.ones((z.num_vertices,), bool)
+    )
+    assert int(stats.iters_run) > 0
+    assert bool(jnp.isfinite(state2.cur[jnp.isfinite(state2.cur)]).all())

@@ -1,0 +1,45 @@
+"""Distributed-LSE decode attention == chunked reference (multi-device).
+
+Runs in a subprocess so it can claim 8 host devices regardless of how the
+test session initialized jax.
+"""
+
+import subprocess
+import sys
+
+
+def test_dlse_matches_chunked_subprocess():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro.models import common as cm
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+b, hq, hkv, s, d = 4, 8, 2, 64, 16
+q = jnp.asarray(rng.standard_normal((b, hq, 1, d)), jnp.float32)
+ck = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+cv = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+valid = jnp.int32(37)
+ref = cm.chunked_attention(q, ck, cv, causal=False, q_offset=36,
+                           kv_valid_len=valid, block_q=8, block_k=16)
+with mesh:
+    with cm.activation_mesh(mesh):
+        got = jax.jit(cm.dlse_decode_attention, in_shardings=(
+            NamedSharding(mesh, P("data", None, None, None)),
+            NamedSharding(mesh, P("data", None, "model", None)),
+            NamedSharding(mesh, P("data", None, "model", None)),
+            NamedSharding(mesh, P()),
+        ))(q, ck, cv, valid)
+err = float(jnp.abs(ref - got).max())
+assert err < 1e-5, err
+print("DLSE_OK", err)
+"""
+    out = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"},
+        cwd=__file__.rsplit("/tests/", 1)[0],
+    )
+    assert "DLSE_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,128 @@
+"""The paper's running example (Fig. 2 / Table 3) plus basic engine checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import dropping as dr
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.core.scratch import scratch_like
+
+
+def fig2_graph() -> DynamicGraph:
+    # a=0, b=1, c=2, d=3, e=4
+    edges = [
+        (0, 1, 30.0),
+        (1, 2, 10.0),
+        (2, 3, 10.0),
+        (0, 3, 20.0),
+        (3, 4, 10.0),
+        (0, 4, 10.0),
+        (3, 2, 20.0),
+    ]
+    return DynamicGraph(5, edges, capacity=16)
+
+
+FIG2_UPDATES = [
+    # G1: (a, d) weight 20 → 100
+    [(0, 3, 0, 100.0, +1)],
+    # G2: (b, c) weight 10 → 100
+    [(1, 2, 0, 100.0, +1)],
+]
+
+# ground-truth SSSP distances from a after each version (hand-checked
+# against Table 3's difference trace)
+DIST_G0 = np.array([0.0, 30.0, 40.0, 20.0, 10.0])
+DIST_G1 = np.array([0.0, 30.0, 40.0, 50.0, 10.0])
+DIST_G2 = np.array([0.0, 30.0, 120.0, 100.0, 10.0])
+
+
+@pytest.mark.parametrize("mode", ["vdc", "jod"])
+def test_fig2_trace(mode):
+    eng = q.sssp(fig2_graph(), sources=[0], mode=mode, max_iters=16)
+    np.testing.assert_allclose(eng.answers()[0], DIST_G0)
+    eng.apply_updates(FIG2_UPDATES[0])
+    np.testing.assert_allclose(eng.answers()[0], DIST_G1)
+    eng.apply_updates(FIG2_UPDATES[1])
+    np.testing.assert_allclose(eng.answers()[0], DIST_G2)
+
+
+def test_fig2_jod_stores_fewer_diffs_than_vdc():
+    jod = q.sssp(fig2_graph(), sources=[0], mode="jod", max_iters=16)
+    vdc = q.sssp(fig2_graph(), sources=[0], mode="vdc", max_iters=16)
+    for batch in FIG2_UPDATES:
+        jod.apply_updates(batch)
+        vdc.apply_updates(batch)
+    assert jod.nbytes() < vdc.nbytes()
+    np.testing.assert_allclose(jod.answers(), vdc.answers())
+
+
+@pytest.mark.parametrize(
+    "drop_cfg",
+    [
+        dr.DropConfig(mode="det", selection="random", p=0.5, seed=3),
+        dr.DropConfig(mode="prob", selection="random", p=0.5, seed=3, bloom_bits=1 << 12),
+        dr.DropConfig(mode="det", selection="degree", p=0.5, tau_min=2, tau_max=3, seed=3),
+        dr.DropConfig(mode="prob", selection="degree", p=0.5, tau_min=2, tau_max=3, seed=3, bloom_bits=1 << 12),
+    ],
+)
+def test_fig2_with_dropping_matches_scratch(drop_cfg):
+    eng = q.sssp(fig2_graph(), sources=[0], mode="jod", max_iters=16, drop=drop_cfg)
+    np.testing.assert_allclose(eng.answers()[0], DIST_G0)
+    eng.apply_updates(FIG2_UPDATES[0])
+    np.testing.assert_allclose(eng.answers()[0], DIST_G1)
+    eng.apply_updates(FIG2_UPDATES[1])
+    np.testing.assert_allclose(eng.answers()[0], DIST_G2)
+
+
+def test_deletion():
+    eng = q.sssp(fig2_graph(), sources=[0], max_iters=16)
+    # delete (a, e): e now reached via d (a→d 20, d→e 10 → 30)
+    eng.apply_updates([(0, 4, 0, 10.0, -1)])
+    np.testing.assert_allclose(eng.answers()[0], [0.0, 30.0, 40.0, 20.0, 30.0])
+    # delete (a, d) too: d via b→c→d = 50, e via d = 60
+    eng.apply_updates([(0, 3, 0, 20.0, -1)])
+    np.testing.assert_allclose(eng.answers()[0], [0.0, 30.0, 40.0, 50.0, 60.0])
+
+
+def test_scratch_agrees():
+    eng = q.sssp(fig2_graph(), sources=[0, 1], max_iters=16)
+    sc = scratch_like(eng.cfg, fig2_graph(), eng.state.init)
+    for batch in FIG2_UPDATES:
+        eng.apply_updates(batch)
+        sc.apply_updates(batch)
+        np.testing.assert_allclose(eng.answers(), sc.answers())
+
+
+def test_khop_and_wcc_and_pagerank_run():
+    g = fig2_graph()
+    kh = q.khop(fig2_graph(), sources=[0], k=2)
+    reach = q.khop_reachable(kh)[0]
+    assert reach.tolist() == [True, True, True, True, True]
+    kh.apply_updates([(0, 1, 0, 30.0, -1), (0, 3, 0, 20.0, -1), (0, 4, 0, 10.0, -1)])
+    assert q.khop_reachable(kh)[0].tolist() == [True, False, False, False, False]
+
+    sym = [(int(u), int(v), 1.0) for u, v in [(0, 1), (1, 0), (2, 3), (3, 2)]]
+    w = q.wcc(DynamicGraph(5, sym, capacity=32), max_iters=16)
+    assert w.answers()[0].tolist() == [0.0, 0.0, 2.0, 2.0, 4.0]
+    w.apply_updates([(1, 2, 0, 1.0, +1), (2, 1, 0, 1.0, +1)])
+    assert w.answers()[0].tolist() == [0.0, 0.0, 0.0, 0.0, 4.0]
+
+    pr = q.pagerank(fig2_graph(), iters=10)
+    before = pr.answers()[0].copy()
+    assert np.all(np.isfinite(before)) and before.min() > 0
+    pr.apply_updates([(4, 0, 0, 1.0, +1)])
+    after = pr.answers()[0]
+    assert not np.allclose(before, after)  # e gained an out-edge → a gains rank
+
+
+def test_rpq_q1_star():
+    # labels: 1 = Knows.  a -K> b -K> c, a -X> d
+    edges = [(0, 1, 1.0, 1), (1, 2, 1.0, 1), (0, 3, 1.0, 2)]
+    g = DynamicGraph(4, edges, capacity=16)
+    rpq = q.RPQ(g, q.NFA.star(1), sources=[0])
+    assert rpq.reachable()[0].tolist() == [True, True, True, False]
+    rpq.apply_updates([(2, 3, 1, 1.0, +1)])  # c -K> d
+    assert rpq.reachable()[0].tolist() == [True, True, True, True]
+    rpq.apply_updates([(1, 2, 1, 1.0, -1)])  # remove b -K> c
+    assert rpq.reachable()[0].tolist() == [True, True, False, False]

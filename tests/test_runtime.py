@@ -1,0 +1,180 @@
+"""Substrate tests: checkpoint atomicity/roundtrip, fault recovery, elastic
+resharding, straggler detection, mesh rules, optimizer, compression."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
+from repro.checkpoint.store import latest_step
+from repro.optim import adamw_init, adamw_update
+from repro.runtime.fault import FaultPolicy, InjectedFault, StepResult, Supervisor
+from repro.runtime.straggler import StragglerDetector
+
+
+def _tree():
+    return {
+        "w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((5,), jnp.int32)},
+    }
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    d = str(tmp_path)
+    tree = _tree()
+    save_checkpoint(d, 7, tree)
+    got, step = restore_checkpoint(d, jax.tree.map(jnp.zeros_like, tree))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_checkpoint_atomic_no_tmp_left(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    save_checkpoint(d, 2, _tree())
+    entries = os.listdir(d)
+    assert not any(e.endswith(".tmp") for e in entries)
+    assert latest_step(d) == 2
+
+
+def test_checkpoint_manager_gc_and_async(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_write=True)
+    for s in (10, 20, 30, 40):
+        mgr.save(s, _tree())
+    mgr.wait()
+    steps = sorted(os.listdir(str(tmp_path)))
+    assert steps == ["step_00000030", "step_00000040"]
+
+
+def test_fault_supervisor_restores_and_replays(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=3, async_write=False)
+    fired = {"done": False}
+
+    def injector(step):
+        if step == 7 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("boom")
+
+    sup = Supervisor(mgr, FaultPolicy(checkpoint_every=5), fault_injector=injector)
+    executed = []
+
+    def step_fn(state, step):
+        executed.append(step)
+        return StepResult(state={"x": state["x"] + 1}, metrics={})
+
+    state, last = sup.run({"x": jnp.zeros(())}, step_fn, num_steps=10)
+    assert last == 10
+    assert sup.restarts == 1
+    # steps 5 and 6 replayed after restoring the step-5 checkpoint
+    assert executed.count(5) == 2 and executed.count(6) == 2
+    assert float(state["x"]) == 10.0  # deterministic replay → correct count
+    assert any(e.startswith("fault@7") for e in sup.history)
+
+
+def test_straggler_detector_flags_outlier():
+    det = StragglerDetector(threshold=2.0, warmup=2)
+    flagged = [det.observe(i, 0.1) for i in range(5)]
+    assert not any(flagged)
+    assert det.observe(5, 0.5) is True
+    assert det.events and det.events[0].step == 5
+    # EWMA not poisoned by the straggler
+    assert det.ewma < 0.2
+
+
+def test_elastic_reshard_roundtrip():
+    from repro.runtime import elastic
+
+    mesh8 = elastic.build_mesh(jax.devices()[:1], data=1, model=1)
+    tree = {"emb": jnp.arange(32, dtype=jnp.float32).reshape(8, 4)}
+    specs = {"emb": ("vocab", "embed")}
+    out = elastic.reshard(tree, specs, mesh8)
+    np.testing.assert_array_equal(out["emb"], tree["emb"])
+    assert elastic.split_global_batch(256, mesh8) == 256
+
+
+def test_mesh_rules_resolution():
+    from repro.runtime import mesh_rules
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    spec = mesh_rules.logical_to_spec(("layers", "embed", "heads"), mesh)
+    assert spec == jax.sharding.PartitionSpec(None, "data", "model")
+    # duplicate mesh axis collapses to None
+    spec = mesh_rules.logical_to_spec(("embed", "embed"), mesh)
+    assert spec == jax.sharding.PartitionSpec("data", None)
+    # pod axis resolves only on the multipod mesh
+    spec = mesh_rules.logical_to_spec(("batch",), mesh)
+    assert spec == jax.sharding.PartitionSpec("data")
+
+
+def test_adamw_decreases_quadratic():
+    params = {"w": jnp.full((4,), 5.0)}
+    state = adamw_init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state, _ = adamw_update(params, grads, state, lr=5e-2, weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 1.0
+
+
+def test_gradient_compression_error_feedback():
+    from repro.optim.compression import (
+        compress_grads,
+        decompress_grads,
+        init_error_feedback,
+    )
+
+    rng = jax.random.PRNGKey(0)
+    g = {"w": jnp.linspace(-1, 1, 1024)}
+    err = init_error_feedback(g)
+    # accumulated dequantized grads ≈ accumulated true grads (EF property)
+    acc_q = jnp.zeros(1024)
+    acc_t = jnp.zeros(1024)
+    for i in range(20):
+        rng, sub = jax.random.split(rng)
+        q, s, err = compress_grads(g, err, sub)
+        acc_q = acc_q + decompress_grads(q, s)["w"]
+        acc_t = acc_t + g["w"]
+    rel = float(jnp.abs(acc_q - acc_t).max() / jnp.abs(acc_t).max())
+    assert rel < 0.05, rel
+
+
+def test_landmark_index_and_pruned_scratch():
+    from repro.core.graph import DynamicGraph
+    from repro.core.landmark import ScratchLandmark
+    from repro.core.queries import sssp
+    from repro.data.graphgen import powerlaw_graph
+
+    v = 64
+    edges = powerlaw_graph(v, 256, seed=6)
+    queries = [(0, 9), (3, 40), (11, 2)]
+    lm = ScratchLandmark(DynamicGraph(v, edges, capacity=2048), queries,
+                         num_landmarks=5, max_iters=32)
+    ref = sssp(DynamicGraph(v, edges, capacity=2048), [s for s, _ in queries],
+               max_iters=32)
+    want = ref.answers()[np.arange(3), [t for _, t in queries]]
+    np.testing.assert_allclose(lm.answers(), want)
+    # and after updates
+    lm.apply_updates([(0, 40, 0, 1.0, +1)])
+    ref.apply_updates([(0, 40, 0, 1.0, +1)])
+    want = ref.answers()[np.arange(3), [t for _, t in queries]]
+    np.testing.assert_allclose(lm.answers(), want)
+
+
+def test_neighbor_sampler_shapes_and_reachability():
+    from repro.data.sampler import CSRGraph, sample_subgraph
+
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 100, 500).astype(np.int32)
+    dst = rng.integers(0, 100, 500).astype(np.int32)
+    g = CSRGraph.from_edges(src, dst, 100)
+    sub = sample_subgraph(g, np.asarray([1, 2, 3]), (4, 3),
+                          max_nodes=64, max_edges=128, rng=rng)
+    assert sub.node_ids.shape == (64,) and sub.edge_src.shape == (128,)
+    n = int(sub.node_mask.sum())
+    e = int(sub.edge_mask.sum())
+    assert n >= 3 and e > 0
+    # all edges reference in-range local ids
+    assert sub.edge_src[:e].max() < n and sub.edge_dst[:e].max() < n

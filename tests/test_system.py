@@ -1,0 +1,90 @@
+"""End-to-end behaviour: the paper's main experiment at reduced scale.
+
+A continuous query processor registering 6 SPSP queries on a power-law
+graph, ingesting 20 single-edge batches (mixed ins/del), with every system
+configuration (VDC / JOD / Det-Drop / Prob-Drop × Degree) agreeing with
+SCRATCH, and the memory ordering VDC > JOD > dropped configurations holding.
+"""
+
+import numpy as np
+
+from repro.core import dropping as dr
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.core.scratch import scratch_like
+from repro.data.graphgen import powerlaw_graph, update_stream
+
+
+def _workload(seed=0, v=48, e=180, batches=20):
+    g_edges = powerlaw_graph(v, e, seed=seed, weighted=True)
+    stream = update_stream(g_edges, v, num_batches=batches, batch_size=1,
+                           delete_fraction=0.25, seed=seed + 1)
+    return g_edges, stream
+
+
+CONFIGS = {
+    "vdc": dict(mode="vdc"),
+    "jod": dict(mode="jod"),
+    "det-degree": dict(
+        mode="jod",
+        drop=dr.DropConfig(mode="det", selection="degree", p=0.5, tau_min=2, tau_max=12, seed=1),
+    ),
+    "prob-degree": dict(
+        mode="jod",
+        drop=dr.DropConfig(mode="prob", selection="degree", p=0.5, tau_min=2, tau_max=12, seed=1, bloom_bits=1 << 13),
+    ),
+}
+
+
+def test_continuous_queries_end_to_end():
+    edges, stream = _workload()
+    v = 48
+    sources = [0, 5, 11, 17, 23, 31]
+    engines = {
+        name: q.sssp(DynamicGraph(v, edges, capacity=1024), sources, max_iters=48, **kw)
+        for name, kw in CONFIGS.items()
+    }
+    ref_cfg = engines["jod"].cfg
+    scratch = scratch_like(ref_cfg, DynamicGraph(v, edges, capacity=1024), engines["jod"].state.init)
+
+    for batch in stream:
+        for eng in engines.values():
+            eng.apply_updates(batch)
+        scratch.apply_updates(batch)
+        want = scratch.answers()
+        for name, eng in engines.items():
+            np.testing.assert_array_equal(eng.answers(), want, err_msg=name)
+
+    nbytes = {name: eng.nbytes() for name, eng in engines.items()}
+    assert nbytes["jod"] < nbytes["vdc"], nbytes  # JOD drops δJ entirely
+    # dropped configs store fewer D-diffs than plain JOD
+    assert int(engines["det-degree"].state.dstore.count.sum()) <= int(
+        engines["jod"].state.dstore.count.sum()
+    )
+    # differential work ≪ scratch work (the paper's core claim, Table 1)
+    jod_work = int(engines["jod"].last_stats.scheduled)
+    scratch_work = int(scratch.last_stats.scheduled)
+    assert jod_work < scratch_work
+
+
+def test_memory_budget_scalability_shape():
+    """More queries → more diff bytes; dropping reduces stored diffs at same Q."""
+    edges, stream = _workload(seed=3)
+    v = 48
+    byts = {}
+    for nq in (2, 6):
+        eng = q.sssp(DynamicGraph(v, edges, capacity=1024), list(range(nq)), max_iters=48)
+        for batch in stream[:5]:
+            eng.apply_updates(batch)
+        byts[nq] = eng.nbytes()
+    assert byts[6] > byts[2]
+
+    dropped = q.sssp(
+        DynamicGraph(v, edges, capacity=1024),
+        list(range(6)),
+        max_iters=48,
+        drop=dr.DropConfig(mode="prob", selection="degree", p=0.9, tau_min=2, tau_max=10, seed=0, bloom_bits=1 << 10),
+    )
+    for batch in stream[:5]:
+        dropped.apply_updates(batch)
+    assert int(dropped.state.dstore.count.sum()) < byts[6] // 8
