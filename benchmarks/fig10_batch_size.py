@@ -1,9 +1,9 @@
-"""Figure 10 (Appendix A): batch-size sweep — VDC/SCRATCH time ratio.
+"""Figure 10 (Appendix A): batch-size sweep — DC/SCRATCH time ratio.
 
 The paper: DC is dramatically faster at batch size 1 and loses to SCRATCH
 as batches grow past ~100K edges.  We sweep batch size at a fixed total
-update count and report the ratio (algorithmic work ratio as `derived` —
-the machine-neutral signal).
+update count on the JOD engine and report the ratio (algorithmic work
+ratio as `derived` — the machine-neutral signal).
 """
 
 from __future__ import annotations
@@ -31,7 +31,7 @@ def main() -> None:
         t_sc = run_stream(sc, stream)
         work_ratio = int(eng.last_stats.scheduled) / max(int(sc.last_stats.scheduled), 1)
         emit(f"fig10/batch{bs}", t_dc / len(stream),
-             f"vdc_over_scratch_time={t_dc / max(t_sc, 1e-9):.2f};work_ratio={work_ratio:.3f}")
+             f"dc_over_scratch_time={t_dc / max(t_sc, 1e-9):.2f};work_ratio={work_ratio:.3f}")
 
 
 if __name__ == "__main__":

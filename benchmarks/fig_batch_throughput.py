@@ -1,0 +1,73 @@
+"""Batched-update CQP throughput: donated-buffer batched step vs per-update.
+
+Not a paper figure — the repo-native throughput study motivating the batched
+pipeline (DBSP/Graphsurge-style: batch deltas through one compiled dataflow).
+For each backend (COO segment-reduce vs Pallas ELL-SpMV) and batch size B,
+a fixed update log is streamed through ``apply_updates_batched``; B=1 via
+the per-update host path is the baseline.  ``us_per_call`` is µs per update;
+``derived`` carries updates/sec and the speedup over the per-update path.
+
+Off-TPU the ELL rows run the kernel in interpret mode (a correctness
+fallback an order of magnitude slower than the segment-reduce), so on CPU
+the machine-neutral signal is the COO speedup column; on TPU the compiled
+Mosaic kernel makes the ELL rows the headline.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, paper_workload
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+
+
+def _engine(initial, v, backend, batch):
+    return q.sssp(
+        DynamicGraph(v, initial, capacity=len(initial) * 4 + 64),
+        [0, 1, 2, 3],
+        max_iters=32,
+        backend=backend,
+        batch_capacity=batch,
+    )
+
+
+def main() -> None:
+    v = 128
+    initial, stream = paper_workload(
+        v=v, e=512, num_batches=48, batch_size=1, delete_fraction=0.2, seed=4
+    )
+    log = [u for batch in stream for u in batch]
+
+    for backend in ("coo", "ell"):
+        # per-update baseline (host path, one dispatch per update)
+        eng = _engine(initial, v, backend, 1)
+        t0 = time.perf_counter()
+        for u in log:
+            eng.apply_updates([u])
+        t_seq = time.perf_counter() - t0
+        base = eng.answers()
+        emit(
+            f"fig_batch/{backend}/per_update",
+            t_seq * 1e6 / len(log),
+            f"upd_per_s={len(log) / t_seq:.1f}",
+        )
+
+        for b in (4, 16):
+            eng = _engine(initial, v, backend, b)
+            eng.apply_updates_batched(log[:b], batch_size=b)  # compile warmup
+            rest = log[b:]
+            t0 = time.perf_counter()
+            eng.apply_updates_batched(rest, batch_size=b)
+            t_bat = time.perf_counter() - t0
+            assert (eng.answers() == base).all(), "batched != sequential answers"
+            emit(
+                f"fig_batch/{backend}/batch{b}",
+                t_bat * 1e6 / len(rest),
+                f"upd_per_s={len(rest) / t_bat:.1f};"
+                f"speedup_vs_per_update={(t_seq / len(log)) / (t_bat / len(rest)):.2f}",
+            )
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.fig9_landmark",
     "benchmarks.fig10_batch_size",
     "benchmarks.fig12_deletions",
+    "benchmarks.fig_batch_throughput",
 ]
 
 

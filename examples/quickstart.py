@@ -2,6 +2,10 @@
 differential maintenance beat from-scratch re-execution.
 
     PYTHONPATH=src python examples/quickstart.py
+
+For the throughput-oriented batched pipeline (B updates per dispatch, ELL
+kernel backend) see ``examples/batched_cqp.py`` and the serving driver
+``python -m repro.launch.cqp_serve --smoke``.
 """
 
 import numpy as np

@@ -44,15 +44,22 @@ import numpy as np
 
 from repro.core import diffstore as ds
 from repro.core import dropping as dr
-from repro.core.graph import DynamicGraph, GraphSnapshot
+from repro.core.graph import DynamicGraph, EllIndex, EllOverflow, GraphSnapshot
 from repro.core.semiring import Semiring, reduce_pair
+from repro.kernels.ell_spmv import ell_spmv
 
 Array = jnp.ndarray
 
 
 # --------------------------------------------------------------------------- graph arrays
 class GraphArrays(NamedTuple):
-    """Fixed-shape device view of the graph (COO + degrees)."""
+    """Fixed-shape device view of the graph (COO + degrees).
+
+    With ``backend="ell"`` the bucketed in-adjacency (``nbr``/``ell_w``,
+    shape [V, D]) rides along for the Pallas SpMV; the COO arrays stay — the
+    frontier push, the VDC join store and the δE dirty propagation are edge-
+    indexed and keep using them.
+    """
 
     src: Array  # int32 [E]
     dst: Array  # int32 [E]
@@ -60,13 +67,25 @@ class GraphArrays(NamedTuple):
     valid: Array  # bool [E]
     out_degree: Array  # int32 [V]
     in_degree: Array  # int32 [V]
+    nbr: Array | None = None  # int32 [V, D] in-neighbour ids (== V padding)
+    ell_w: Array | None = None  # f32 [V, D] edge weights
 
     @property
     def num_vertices(self) -> int:
         return self.out_degree.shape[0]
 
+    @property
+    def ell_width(self) -> int:
+        return 0 if self.nbr is None else int(self.nbr.shape[1])
+
     @classmethod
-    def from_snapshot(cls, s: GraphSnapshot) -> "GraphArrays":
+    def from_snapshot(
+        cls, s: GraphSnapshot, *, backend: str = "coo", ell_min_width: int = 0
+    ) -> "GraphArrays":
+        nbr = ell_w = None
+        if backend == "ell":
+            nbr_np, w_np, _ = s.to_ell(min_width=ell_min_width)
+            nbr, ell_w = jnp.asarray(nbr_np), jnp.asarray(w_np)
         return cls(
             src=jnp.asarray(s.src, jnp.int32),
             dst=jnp.asarray(s.dst, jnp.int32),
@@ -74,6 +93,8 @@ class GraphArrays(NamedTuple):
             valid=jnp.asarray(s.valid),
             out_degree=jnp.asarray(s.out_degree, jnp.int32),
             in_degree=jnp.asarray(s.in_degree, jnp.int32),
+            nbr=nbr,
+            ell_w=ell_w,
         )
 
 
@@ -92,12 +113,23 @@ class EngineConfig:
     # deletions retune every sibling message (dirty mask covers them).
     weight_from_degree: bool = False
     alpha: float = 0.85
+    # Aggregator backend: "coo" = masked segment-reduce over the edge list;
+    # "ell" = the Pallas bucketed-ELL SpMV kernel (JOD only — the kernel *is*
+    # the fused Join+Min; interpret-mode fallback runs it off-TPU).
+    backend: str = "coo"
+    ell_block_v: int = 128
+    # None → interpret off-TPU, compiled Mosaic on TPU (kernels.ops default).
+    interpret: bool | None = None
 
     def __post_init__(self):
         if self.mode not in ("vdc", "jod"):
             raise ValueError(f"unknown mode {self.mode!r}")
         if self.mode == "vdc" and self.drop.enabled():
             raise ValueError("partial dropping composes with JOD only (paper §5)")
+        if self.backend not in ("coo", "ell"):
+            raise ValueError(f"unknown backend {self.backend!r}")
+        if self.backend == "ell" and self.mode != "jod":
+            raise ValueError("backend='ell' realizes JOD; VDC reads the J store")
 
 
 class EngineState(NamedTuple):
@@ -154,8 +186,47 @@ def aggregate(cfg: EngineConfig, msgs: Array, cur: Array, g: GraphArrays) -> Arr
     return jnp.float32(sr.base) + agg
 
 
+def _ell_weights(cfg: EngineConfig, g: GraphArrays) -> Array:
+    """ELL weight tile; degree-derived weights are re-gathered every step so
+    a δE batch retunes every sibling message without rewriting [V, D] cells."""
+    if cfg.weight_from_degree:
+        outd = jnp.concatenate(
+            [jnp.maximum(g.out_degree, 1), jnp.ones((1,), jnp.int32)]
+        )  # index V (padding sentinel) → 1; its state is the identity 0 anyway
+        return jnp.float32(cfg.alpha) / outd[g.nbr].astype(jnp.float32)
+    return g.ell_w
+
+
+def _interpret(cfg: EngineConfig) -> bool:
+    if cfg.interpret is not None:
+        return cfg.interpret
+    return jax.default_backend() != "tpu"
+
+
+def ell_step(cfg: EngineConfig, cur: Array, g: GraphArrays) -> Array:
+    """One exact IFE step through the Pallas bucketed-ELL SpMV (JOD fused)."""
+    sr = cfg.semiring
+    q = cur.shape[0]
+    states = jnp.concatenate(
+        [cur, jnp.full((q, 1), sr.identity, cur.dtype)], axis=1
+    )  # padding rows gather the reduce identity at index V
+    carry = cur if sr.carry_prev else jnp.full_like(cur, sr.base)
+    return ell_spmv(
+        states,
+        g.nbr,
+        _ell_weights(cfg, g),
+        carry,
+        semiring=sr.kernel_name,
+        block_v=cfg.ell_block_v,
+        interpret=_interpret(cfg),
+        hop_cap=sr.hop_cap,
+    )
+
+
 def ife_step(cfg: EngineConfig, cur: Array, g: GraphArrays) -> Array:
     """One exact IFE step D_{i-1} → D_i (join recomputed — the JOD path)."""
+    if cfg.backend == "ell":
+        return ell_step(cfg, cur, g)
     return aggregate(cfg, edge_messages(cfg, cur, g), cur, g)
 
 
@@ -430,6 +501,73 @@ def nbytes_accounted(cfg: EngineConfig, state: EngineState) -> int:
     return total
 
 
+# --------------------------------------------------------------------------- batched updates
+class UpdateBatch(NamedTuple):
+    """Fixed-shape device encoding of ≤ B resolved edge updates.
+
+    One row per touched edge slot, holding the slot's *final* contents after
+    the whole chunk (the host coalesces, so duplicate-index scatter order
+    never matters).  Padding rows carry out-of-range indices — slot == E_cap,
+    vertex == V, ell_row == V — and are dropped by the scatters / sliced off
+    the dirty mask.  The shape ``[B]`` is the jit cache key: every chunk of a
+    long update log reuses one compiled program.
+    """
+
+    slot: Array  # int32 [B] — edge slot; E_cap padding
+    src: Array  # int32 [B] — final slot source
+    dst: Array  # int32 [B] — final slot destination
+    weight: Array  # f32  [B] — final slot weight
+    valid: Array  # bool [B] — final slot validity
+    dirty_v: Array  # int32 [B] — endpoint to dirty (δE direct rule); V padding
+    touched_src: Array  # int32 [B] — update source (degree-retune rule); V padding
+    ell_row: Array  # int32 [B] — ELL cell writes (backend="ell"); V padding
+    ell_col: Array  # int32 [B]
+    ell_nbr: Array  # int32 [B]
+    ell_w: Array  # f32  [B]
+
+
+def batched_step(
+    cfg: EngineConfig, state: EngineState, g: GraphArrays, upd: UpdateBatch
+) -> tuple[EngineState, GraphArrays, MaintainStats]:
+    """Fold one δE chunk into the graph arrays and run ONE maintenance sweep.
+
+    This is the device-side twin of ``DiffIFE.apply_updates``: edge scatter,
+    degree refresh, dirty-mask construction and the ``lax.while_loop`` sweep
+    compile into a single program.  ``DiffIFE`` jits it with donated
+    ``(state, g)`` so the stores update in place (no per-update host round
+    trip, no buffer churn); host work per chunk is an O(B) encode.
+    """
+    v = cfg.num_vertices
+    src = g.src.at[upd.slot].set(upd.src, mode="drop")
+    dst = g.dst.at[upd.slot].set(upd.dst, mode="drop")
+    weight = g.weight.at[upd.slot].set(upd.weight, mode="drop")
+    valid = g.valid.at[upd.slot].set(upd.valid, mode="drop")
+    # degrees recomputed from the edge list — O(E) on-device, far below one
+    # sweep iteration, and immune to host/device drift
+    live = valid.astype(jnp.int32)
+    out_degree = jax.ops.segment_sum(live, src, num_segments=v)
+    in_degree = jax.ops.segment_sum(live, dst, num_segments=v)
+    nbr, ell_w = g.nbr, g.ell_w
+    if cfg.backend == "ell":
+        nbr = nbr.at[upd.ell_row, upd.ell_col].set(upd.ell_nbr, mode="drop")
+        ell_w = ell_w.at[upd.ell_row, upd.ell_col].set(upd.ell_w, mode="drop")
+    g2 = GraphArrays(src, dst, weight, valid, out_degree, in_degree, nbr, ell_w)
+
+    dirty = jnp.zeros(v + 1, bool).at[upd.dirty_v].set(True)[:v]
+    if cfg.weight_from_degree:
+        # outdeg(u) changed → every out-message of u retunes (δE dirty rule)
+        tsrc = jnp.zeros(v + 1, bool).at[upd.touched_src].set(True)[:v]
+        hit = (tsrc[g2.src] & g2.valid).astype(jnp.int32)
+        dirty = dirty | (jax.ops.segment_max(hit, g2.dst, num_segments=v) > 0)
+
+    new_state, stats = maintain(cfg, state, g2, dirty)
+    return new_state, g2, stats
+
+
+def _sum_stats(a: MaintainStats, b: MaintainStats) -> MaintainStats:
+    return MaintainStats(*(x + y for x, y in zip(a, b)))
+
+
 # --------------------------------------------------------------------------- host-facing wrapper
 class DiffIFE:
     """Continuous-query processor: owns the dynamic graph + engine state.
@@ -437,6 +575,21 @@ class DiffIFE:
     ``DiffIFE`` is the host driver (the GDBMS's continuous query processor);
     all device work happens in the pure functions above, jitted per graph
     capacity so update batches never recompile.
+
+    Two ingestion paths:
+
+    * :meth:`apply_updates` — per-batch host path: mutate the host graph,
+      re-upload the device view, run one sweep.  Simple, but each batch pays
+      a host round trip + full graph transfer.
+    * :meth:`apply_updates_batched` — the throughput path: updates are folded
+      in fixed-shape chunks of ``batch_capacity`` through the donated-buffer
+      :func:`batched_step`, so the jit cache is hit once per chunk and the
+      graph/stores never leave the device.
+
+    With ``cfg.backend == "ell"`` the bucketed in-adjacency rides along; its
+    width ``D`` is kept fixed across updates (host :class:`EllIndex` mirror)
+    and grows geometrically — with a one-off re-trace — only when a vertex's
+    in-degree outruns it.
     """
 
     def __init__(
@@ -444,34 +597,138 @@ class DiffIFE:
         cfg: EngineConfig,
         graph: DynamicGraph,
         init: np.ndarray | Array,
+        *,
+        batch_capacity: int = 32,
     ) -> None:
         self.cfg = cfg
         self.graph = graph
-        self.g = GraphArrays.from_snapshot(graph.snapshot())
+        self.batch_capacity = int(batch_capacity)
+        self._ell_width = 0
+        self._ell_index: EllIndex | None = None
+        self.g = self._device_graph(graph.snapshot())
         self.state = make_state(cfg, jnp.asarray(init, jnp.float32), graph.capacity)
         self._maintain = jax.jit(partial(maintain, cfg))
+        self._step = jax.jit(partial(batched_step, cfg), donate_argnums=(0, 1))
         self.last_stats: MaintainStats | None = None
         # initial computation: every vertex dirty, empty store
         self._run(np.ones(cfg.num_vertices, dtype=bool))
+
+    # ------------------------------------------------------------ device views
+    def _device_graph(self, snap: GraphSnapshot) -> GraphArrays:
+        if self.cfg.backend == "ell":
+            g = GraphArrays.from_snapshot(
+                snap, backend="ell", ell_min_width=self._ell_width
+            )
+            self._ell_width = g.ell_width
+            self._ell_index = EllIndex(snap, self._ell_width)
+            return g
+        return GraphArrays.from_snapshot(snap)
 
     def _run(self, dirty: np.ndarray) -> None:
         self.state, stats = self._maintain(self.state, self.g, jnp.asarray(dirty))
         self.last_stats = jax.tree.map(jax.device_get, stats)
 
-    def apply_updates(self, updates) -> MaintainStats:
-        """Ingest one δE batch and maintain all registered queries."""
-        touched = self.graph.apply_batch(updates)
-        snap = self.graph.snapshot()
-        self.g = GraphArrays.from_snapshot(snap)
+    def _dirty_mask(self, touched, snap: GraphSnapshot) -> np.ndarray:
         dirty = np.zeros(self.cfg.num_vertices, dtype=bool)
         for (u, v) in touched:
             dirty[v] = True
             if self.cfg.weight_from_degree:
                 # outdeg(src) changed → every out-message of src retunes
                 dirty[snap.dst[(snap.src == u) & snap.valid]] = True
-        self._run(dirty)
+        return dirty
+
+    # ------------------------------------------------------------- ingestion
+    def apply_updates(self, updates) -> MaintainStats:
+        """Ingest one δE batch and maintain all registered queries."""
+        touched = self.graph.apply_batch(updates)
+        snap = self.graph.snapshot()
+        self.g = self._device_graph(snap)
+        self._run(self._dirty_mask(touched, snap))
         return self.last_stats
 
+    def apply_updates_batched(
+        self, updates, batch_size: int | None = None
+    ) -> MaintainStats:
+        """Stream a δE log through the donated-buffer batched step.
+
+        The log is folded in fixed-shape chunks of ``batch_size`` (default:
+        ``batch_capacity``); per chunk ONE jitted call scatters the edge
+        slots, refreshes degrees, builds the dirty mask on device and runs
+        the maintenance sweep.  Returns the cumulative stats over the log.
+        """
+        b = int(batch_size if batch_size is not None else self.batch_capacity)
+        updates = list(updates)
+        total = zeros_stats()
+        for lo in range(0, len(updates), b):
+            ops = self.graph.apply_batch_resolved(updates[lo : lo + b])
+            if not ops:
+                continue
+            ell_writes: list = []
+            if self.cfg.backend == "ell":
+                try:
+                    ell_writes = self._ell_index.writes_for(ops)
+                except EllOverflow:
+                    # a vertex outran the fixed D: grow geometrically and fall
+                    # back to a full-view sweep for this chunk (one re-trace)
+                    self._ell_width = max(8, self._ell_width * 2)
+                    snap = self.graph.snapshot()
+                    self.g = self._device_graph(snap)
+                    touched = [(u, v) for (_k, _s, u, v, _w) in ops]
+                    self._run(self._dirty_mask(touched, snap))
+                    total = _sum_stats(total, self.last_stats)
+                    continue
+            upd = self._encode_chunk(ops, ell_writes, b)
+            self.state, self.g, stats = self._step(self.state, self.g, upd)
+            # accumulate on device — one host sync per log, not per chunk
+            total = _sum_stats(total, stats)
+        self.last_stats = jax.tree.map(jax.device_get, total)
+        return self.last_stats
+
+    def _encode_chunk(self, ops, ell_writes, b: int) -> UpdateBatch:
+        """Host O(B) encode of resolved ops → fixed-shape UpdateBatch."""
+        if len(ops) > b:
+            raise ValueError(f"chunk of {len(ops)} ops exceeds capacity {b}")
+        cap, v = self.graph.capacity, self.cfg.num_vertices
+        slot = np.full(b, cap, np.int32)
+        src = np.zeros(b, np.int32)
+        dst = np.zeros(b, np.int32)
+        weight = np.zeros(b, np.float32)
+        valid = np.zeros(b, bool)
+        dirty_v = np.full(b, v, np.int32)
+        touched_src = np.full(b, v, np.int32)
+        ell_row = np.full(b, v, np.int32)
+        ell_col = np.zeros(b, np.int32)
+        ell_nbr = np.zeros(b, np.int32)
+        ell_wv = np.zeros(b, np.float32)
+        # final slot contents come from the already-updated host graph, so a
+        # delete+reinsert of one slot inside a chunk coalesces to one row
+        for j, s in enumerate(dict.fromkeys(op[1] for op in ops)):
+            slot[j] = s
+            src[j] = self.graph.src[s]
+            dst[j] = self.graph.dst[s]
+            weight[j] = self.graph.weight[s]
+            valid[j] = self.graph.valid[s]
+        for j, (_kind, _s, u, d, _w) in enumerate(ops):
+            dirty_v[j] = d
+            touched_src[j] = u
+        for j, wr in enumerate(ell_writes):
+            ell_row[j], ell_col[j] = wr.row, wr.col
+            ell_nbr[j], ell_wv[j] = wr.nbr_val, wr.w_val
+        return UpdateBatch(
+            slot=jnp.asarray(slot),
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            weight=jnp.asarray(weight),
+            valid=jnp.asarray(valid),
+            dirty_v=jnp.asarray(dirty_v),
+            touched_src=jnp.asarray(touched_src),
+            ell_row=jnp.asarray(ell_row),
+            ell_col=jnp.asarray(ell_col),
+            ell_nbr=jnp.asarray(ell_nbr),
+            ell_w=jnp.asarray(ell_wv),
+        )
+
+    # ------------------------------------------------------------------- api
     def answers(self) -> np.ndarray:
         return np.asarray(answers(self.cfg, self.state))
 

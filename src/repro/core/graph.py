@@ -22,6 +22,11 @@ import numpy as np
 # An update is (u, v, label, weight, +1|-1) as in the paper §3.1.
 Update = tuple[int, int, int, float, int]
 
+# A resolved op is (kind, slot, u, v, weight) where kind ∈ {"insert",
+# "update", "delete"}: the slot-level effect of one accepted update
+# ("update" = weight change in place; no-op deletions are filtered out).
+ResolvedOp = tuple[str, int, int, int, float]
+
 NO_LABEL = 0
 
 
@@ -49,17 +54,21 @@ class GraphSnapshot:
     def degrees_total(self) -> np.ndarray:
         return self.out_degree + self.in_degree
 
-    def to_ell(self, pad_to_multiple: int = 8) -> tuple[np.ndarray, np.ndarray, int]:
+    def to_ell(
+        self, pad_to_multiple: int = 8, min_width: int = 0
+    ) -> tuple[np.ndarray, np.ndarray, int]:
         """In-adjacency in ELL layout (for the Pallas kernel).
 
         Returns ``(nbr, w)`` with shape ``[V, D]`` where ``D`` is the max
         in-degree rounded up; padded slots have ``nbr == V`` (a sentinel row;
         callers pad the state vector with the reduce identity at index V).
+        ``min_width`` lets the continuous processor keep ``D`` fixed across
+        update batches (a ``D`` change means a re-trace of the jitted sweep).
         """
         v = self.num_vertices
         live = self.valid
         indeg = np.bincount(self.dst[live], minlength=v)
-        d = int(indeg.max()) if v else 0
+        d = max(int(indeg.max()) if v else 0, min_width)
         d = max(pad_to_multiple, ((d + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple)
         nbr = np.full((v, d), v, dtype=np.int32)
         w = np.zeros((v, d), dtype=np.float32)
@@ -140,7 +149,13 @@ class DynamicGraph:
         accepted).  Endpoints — not slots — are returned because a later
         insert in the same batch may recycle a freed slot.
         """
-        touched: list[tuple[int, int]] = []
+        return [(u, v) for (_kind, _slot, u, v, _w) in self.apply_batch_resolved(updates)]
+
+    def apply_batch_resolved(self, updates: Iterable[Update]) -> list[ResolvedOp]:
+        """Apply one δE batch, returning the slot-level effect of every
+        accepted update (the device mirror the batched engine step scatters).
+        """
+        ops: list[ResolvedOp] = []
         for (u, v, lbl, w, sign) in updates:
             u, v, lbl = int(u), int(v), int(lbl)
             key = (u, v, lbl)
@@ -148,6 +163,7 @@ class DynamicGraph:
                 if key in self._slot:
                     i = self._slot[key]
                     self.weight[i] = float(w)
+                    ops.append(("update", i, u, v, float(w)))
                 else:
                     if not self._free:
                         raise MemoryError("edge capacity exhausted")
@@ -158,6 +174,7 @@ class DynamicGraph:
                     self._slot[key] = i
                     self.out_degree[u] += 1
                     self.in_degree[v] += 1
+                    ops.append(("insert", i, u, v, float(w)))
             else:
                 if key not in self._slot:
                     continue  # deleting a non-existent edge is a no-op
@@ -166,9 +183,9 @@ class DynamicGraph:
                 self._free.append(i)
                 self.out_degree[u] -= 1
                 self.in_degree[v] -= 1
-            touched.append((u, v))
+                ops.append(("delete", i, u, v, float(w)))
         self.version += 1
-        return touched
+        return ops
 
     def degree_percentile(self, pct: float) -> float:
         """Degree threshold at the given percentile (paper: τ_max = 80th)."""
@@ -177,6 +194,76 @@ class DynamicGraph:
 
     def degrees_total(self) -> np.ndarray:
         return self.out_degree + self.in_degree
+
+
+@dataclasses.dataclass
+class EllWrite:
+    """One ELL cell assignment: ``nbr[row, col] = nbr_val; w[row, col] = w_val``."""
+
+    row: int
+    col: int
+    nbr_val: int
+    w_val: float
+
+
+class EllOverflow(Exception):
+    """A row ran out of ELL columns — the caller must rebuild at a wider D."""
+
+
+class EllIndex:
+    """Host mirror of the device ELL buffers (``GraphSnapshot.to_ell``).
+
+    Tracks the (row = dst, col) cell of every live edge slot plus per-row free
+    columns, so a δE batch becomes O(B) scatter writes on the device instead
+    of an O(V·D) host rebuild + transfer.  Construction replays the exact fill
+    order of :meth:`GraphSnapshot.to_ell` (ascending live slot index), so a
+    freshly-built index agrees cell-for-cell with ``to_ell`` output.
+    """
+
+    def __init__(self, snap: GraphSnapshot, width: int) -> None:
+        self.v = snap.num_vertices
+        self.width = int(width)
+        self.col_of: dict[int, tuple[int, int]] = {}  # edge slot → (row, col)
+        self.fill = np.zeros(self.v, dtype=np.int64)
+        self.free: dict[int, list[int]] = {}
+        for e in np.nonzero(snap.valid)[0]:
+            t = int(snap.dst[e])
+            if self.fill[t] >= self.width:
+                raise EllOverflow(f"in-degree of vertex {t} exceeds width {self.width}")
+            self.col_of[int(e)] = (t, int(self.fill[t]))
+            self.fill[t] += 1
+
+    def _alloc(self, row: int) -> int:
+        cols = self.free.get(row)
+        if cols:
+            return cols.pop()
+        if self.fill[row] >= self.width:
+            raise EllOverflow(f"in-degree of vertex {row} exceeds width {self.width}")
+        col = int(self.fill[row])
+        self.fill[row] += 1
+        return col
+
+    def writes_for(self, ops: Sequence[ResolvedOp]) -> list[EllWrite]:
+        """Translate resolved slot ops into coalesced ELL cell writes.
+
+        Raises :class:`EllOverflow` when an insert exceeds the fixed width;
+        the index is then stale and must be rebuilt from the (already
+        updated) host graph at a larger width.
+        """
+        writes: dict[tuple[int, int], EllWrite] = {}
+        for (kind, slot, u, v, w) in ops:
+            if kind == "delete":
+                row, col = self.col_of.pop(slot)
+                self.free.setdefault(row, []).append(col)
+                writes[(row, col)] = EllWrite(row, col, self.v, 0.0)
+            elif kind == "insert":
+                col = self._alloc(v)
+                self.col_of[slot] = (v, col)
+                writes[(v, col)] = EllWrite(v, col, u, float(w))
+            else:  # weight update in place
+                row, col = self.col_of[slot]
+                writes[(row, col)] = EllWrite(row, col, u, float(w))
+        return list(writes.values())
 
 
 def product_graph(

@@ -54,13 +54,21 @@ def _engine_cfg(
 
 # --------------------------------------------------------------------------- SSSP / SPSP
 def sssp(
-    graph: DynamicGraph, sources: Sequence[int], *, max_iters: int = 64, **kw
+    graph: DynamicGraph,
+    sources: Sequence[int],
+    *,
+    max_iters: int = 64,
+    batch_capacity: int = 32,
+    **kw,
 ) -> DiffIFE:
     """Q concurrent single-source shortest-distance fields (Bellman-Ford IFE)."""
     cfg = _engine_cfg(
         len(sources), graph.num_vertices, sr.min_plus(), max_iters=max_iters, **kw
     )
-    return DiffIFE(cfg, graph, _source_init(sources, graph.num_vertices))
+    return DiffIFE(
+        cfg, graph, _source_init(sources, graph.num_vertices),
+        batch_capacity=batch_capacity,
+    )
 
 
 def spsp_answers(engine: DiffIFE, targets: Sequence[int]) -> np.ndarray:
@@ -71,13 +79,21 @@ def spsp_answers(engine: DiffIFE, targets: Sequence[int]) -> np.ndarray:
 
 # --------------------------------------------------------------------------- K-hop
 def khop(
-    graph: DynamicGraph, sources: Sequence[int], k: int = 5, **kw
+    graph: DynamicGraph,
+    sources: Sequence[int],
+    k: int = 5,
+    *,
+    batch_capacity: int = 32,
+    **kw,
 ) -> DiffIFE:
     """Vertices within ≤ k hops of each source; iterations bounded by k."""
     cfg = _engine_cfg(
         len(sources), graph.num_vertices, sr.min_hop(float(k)), max_iters=k, **kw
     )
-    return DiffIFE(cfg, graph, _source_init(sources, graph.num_vertices))
+    return DiffIFE(
+        cfg, graph, _source_init(sources, graph.num_vertices),
+        batch_capacity=batch_capacity,
+    )
 
 
 def khop_reachable(engine: DiffIFE) -> np.ndarray:
@@ -85,18 +101,25 @@ def khop_reachable(engine: DiffIFE) -> np.ndarray:
 
 
 # --------------------------------------------------------------------------- WCC
-def wcc(graph: DynamicGraph, *, max_iters: int = 128, **kw) -> DiffIFE:
+def wcc(
+    graph: DynamicGraph, *, max_iters: int = 128, batch_capacity: int = 32, **kw
+) -> DiffIFE:
     """Weakly connected components: min-label propagation on the symmetrized
     graph (caller supplies a graph with both edge directions)."""
     v = graph.num_vertices
     init = np.arange(v, dtype=np.float32)[None, :]
     cfg = _engine_cfg(1, v, sr.min_label(), max_iters=max_iters, **kw)
-    return DiffIFE(cfg, graph, init)
+    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity)
 
 
 # --------------------------------------------------------------------------- PageRank
 def pagerank(
-    graph: DynamicGraph, *, iters: int = 10, alpha: float = 0.85, **kw
+    graph: DynamicGraph,
+    *,
+    iters: int = 10,
+    alpha: float = 0.85,
+    batch_capacity: int = 32,
+    **kw,
 ) -> DiffIFE:
     """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2)."""
     v = graph.num_vertices
@@ -110,7 +133,7 @@ def pagerank(
         alpha=alpha,
         **kw,
     )
-    return DiffIFE(cfg, graph, init)
+    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity)
 
 
 # --------------------------------------------------------------------------- RPQ
@@ -162,6 +185,7 @@ class RPQ:
         *,
         max_iters: int = 64,
         product_capacity: int | None = None,
+        batch_capacity: int = 32,
         **kw,
     ) -> None:
         self.base = graph
@@ -180,7 +204,7 @@ class RPQ:
             [s * nfa.num_states + nfa.start for s in self.sources], n
         )
         cfg = _engine_cfg(len(sources), n, sr.min_hop(), max_iters=max_iters, **kw)
-        self.engine = DiffIFE(cfg, self.pgraph, init)
+        self.engine = DiffIFE(cfg, self.pgraph, init, batch_capacity=batch_capacity)
 
     def _translate(self, updates) -> list[tuple[int, int, int, float, int]]:
         out = []

@@ -54,12 +54,12 @@ class Scratch:
         self.cfg = cfg
         self.graph = graph
         self.init = jnp.asarray(init, jnp.float32)
-        self.g = GraphArrays.from_snapshot(graph.snapshot())
+        self.g = GraphArrays.from_snapshot(graph.snapshot(), backend=cfg.backend)
         self._answers, self.last_stats = scratch_run(cfg, self.g, self.init)
 
     def apply_updates(self, updates) -> ScratchStats:
         self.graph.apply_batch(updates)
-        self.g = GraphArrays.from_snapshot(self.graph.snapshot())
+        self.g = GraphArrays.from_snapshot(self.graph.snapshot(), backend=self.cfg.backend)
         self._answers, self.last_stats = scratch_run(self.cfg, self.g, self.init)
         return self.last_stats
 

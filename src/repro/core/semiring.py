@@ -40,6 +40,14 @@ class Semiring:
     carry_prev: bool = True
     # Additive per-vertex base applied after the reduction (PageRank teleport).
     base: float = 0.0
+    # Hop truncation for min_hop: messages past this hop count collapse to the
+    # identity (K-hop queries).  inf = no truncation.
+    hop_cap: float = float("inf")
+
+    @property
+    def kernel_name(self) -> str:
+        """Name of this semiring in the Pallas ELL-SpMV kernel."""
+        return {"pagerank": "pr_sum"}.get(self.name, self.name)
 
 
 def min_plus() -> Semiring:
@@ -66,7 +74,12 @@ def min_hop(max_hops: float = jnp.inf) -> Semiring:
         return jnp.where(cand > max_hops, jnp.inf, cand)
 
     return Semiring(
-        name="min_hop", reduce="min", msg=msg, identity=float(jnp.inf), carry_prev=True
+        name="min_hop",
+        reduce="min",
+        msg=msg,
+        identity=float(jnp.inf),
+        carry_prev=True,
+        hop_cap=float(max_hops),
     )
 
 

@@ -32,7 +32,9 @@ from jax.experimental import pallas as pl
 SEMIRINGS = ("min_plus", "min_hop", "min_label", "pr_sum")
 
 
-def _kernel(states_ref, nbr_ref, w_ref, carry_ref, out_ref, *, semiring: str):
+def _kernel(
+    states_ref, nbr_ref, w_ref, carry_ref, out_ref, *, semiring: str, hop_cap: float
+):
     nbr = nbr_ref[...]  # [BV, D] int32
     w = w_ref[...]  # [BV, D] f32
     row = states_ref[0, :]  # [Vp] f32 (VMEM-resident state row)
@@ -44,6 +46,8 @@ def _kernel(states_ref, nbr_ref, w_ref, carry_ref, out_ref, *, semiring: str):
         out = jnp.minimum(red, carry_ref[0, :])
     elif semiring == "min_hop":
         msgs = s + 1.0
+        if hop_cap != float("inf"):  # K-hop truncation, baked in at trace time
+            msgs = jnp.where(msgs > hop_cap, jnp.inf, msgs)
         red = jnp.min(msgs, axis=1)
         out = jnp.minimum(red, carry_ref[0, :])
     elif semiring == "min_label":
@@ -59,7 +63,9 @@ def _kernel(states_ref, nbr_ref, w_ref, carry_ref, out_ref, *, semiring: str):
     out_ref[0, :] = out
 
 
-@functools.partial(jax.jit, static_argnames=("semiring", "block_v", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("semiring", "block_v", "interpret", "hop_cap")
+)
 def ell_spmv(
     states: jnp.ndarray,  # [Q, Vp]  (Vp = V + 1, identity at index V)
     nbr: jnp.ndarray,  # [V, D]
@@ -69,6 +75,7 @@ def ell_spmv(
     semiring: str = "min_plus",
     block_v: int = 128,
     interpret: bool = True,
+    hop_cap: float = float("inf"),
 ) -> jnp.ndarray:
     assert semiring in SEMIRINGS
     q, vp = states.shape
@@ -83,7 +90,7 @@ def ell_spmv(
         carry = jnp.concatenate([carry, jnp.zeros((q, vpad), carry.dtype)], 1)
     grid = (q, (v + vpad) // bv)
     out = pl.pallas_call(
-        functools.partial(_kernel, semiring=semiring),
+        functools.partial(_kernel, semiring=semiring, hop_cap=hop_cap),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, vp), lambda iq, iv: (iq, 0)),  # full state row

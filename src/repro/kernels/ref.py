@@ -5,14 +5,18 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def ell_spmv_ref(states, nbr, w, carry, *, semiring: str) -> jnp.ndarray:
+def ell_spmv_ref(
+    states, nbr, w, carry, *, semiring: str, hop_cap: float = float("inf")
+) -> jnp.ndarray:
     """states [Q, Vp], nbr/w [V, D], carry [Q, V] → [Q, V]."""
     s = states[:, nbr]  # [Q, V, D]
     if semiring == "min_plus":
         red = jnp.min(s + w[None], axis=-1)
         return jnp.minimum(red, carry)
     if semiring == "min_hop":
-        red = jnp.min(s + 1.0, axis=-1)
+        msgs = s + 1.0
+        msgs = jnp.where(msgs > hop_cap, jnp.inf, msgs)
+        red = jnp.min(msgs, axis=-1)
         return jnp.minimum(red, carry)
     if semiring == "min_label":
         red = jnp.min(s, axis=-1)

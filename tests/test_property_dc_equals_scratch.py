@@ -8,7 +8,9 @@ dropping may only cost recomputation, never correctness.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis (requirements.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dropping as dr
 from repro.core import queries as q

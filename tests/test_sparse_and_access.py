@@ -2,7 +2,9 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis (requirements.txt)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import dropping as dr
 from repro.core import queries as q
