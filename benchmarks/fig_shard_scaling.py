@@ -1,0 +1,71 @@
+"""Device-count scaling of the vertex-sharded sweep (fig7-style axis).
+
+Each shard count runs in its own subprocess — the emulated host device count
+is fixed at XLA init — serving the same smoke workload through
+``repro.launch.cqp_serve --mesh data``.  Reported per row:
+
+* ``us_per_call`` — steady-state p50 maintenance latency per update chunk
+* ``derived``     — peak accounted diff-store bytes per device (the paper's
+  Table-1 per-machine memory axis): should shrink ~linearly with shard
+  count while the global total stays flat.
+
+Override the sweep with ``SHARD_SWEEP=1,8`` (comma-separated device counts).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import emit
+
+V, E, UPDATES, BATCH = 64, 192, 48, 8
+
+
+def run_one(devices: int) -> dict:
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    # drop any inherited device-count flag (e.g. the CI job's =8): the
+    # subprocess's --emulate-devices must be the only one XLA sees
+    env["XLA_FLAGS"] = " ".join(
+        f
+        for f in env.get("XLA_FLAGS", "").split()
+        if not f.startswith("--xla_force_host_platform_device_count")
+    )
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    cmd = [
+        sys.executable, "-m", "repro.launch.cqp_serve",
+        "--v", str(V), "--e", str(E), "--queries", "4",
+        "--updates", str(UPDATES), "--batch", str(BATCH),
+        "--max-iters", "16", "--backend", "coo", "--json",
+        "--emulate-devices", str(devices),
+        "--mesh", "none" if devices == 1 else "data",
+    ]
+    out = subprocess.run(
+        cmd, env=env, capture_output=True, text=True, timeout=560
+    )
+    if out.returncode != 0:
+        raise RuntimeError(f"devices={devices} failed:\n{out.stdout}{out.stderr}")
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def main() -> None:
+    sweep = [int(x) for x in os.environ.get("SHARD_SWEEP", "1,2,4,8").split(",")]
+    for n in sweep:
+        r = run_one(n)
+        emit(
+            f"fig_shard/devices{n}",
+            r["p50_ms"] * 1e3,
+            f"per_device_bytes={r['peak_diff_bytes_per_device']};"
+            f"total_bytes={r['peak_diff_bytes']};"
+            f"updates_per_sec={r['updates_per_sec']:.1f}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -176,6 +176,24 @@ def remove_at(store: DiffStore, i: Array | int, mask: Array) -> DiffStore:
     return DiffStore(out_iters, out_vals, out_count)
 
 
+def gather_rows(store: DiffStore, idx: Array) -> DiffStore:
+    """Reindex the key axis (second-to-last): result row ``k`` is input row
+    ``idx[k]``; ``idx[k] < 0`` yields an empty row.
+
+    Used when the vertex-sharded edge layout regrows (``ShardIndex``
+    overflow): VDC's per-edge J store rows must follow their edge slots to
+    the new cell assignment, with cells that never held a live edge left
+    empty (the ``j0`` implicit-init fallback is then correct for them).
+    """
+    idx = jnp.asarray(idx, jnp.int32)
+    safe = jnp.maximum(idx, 0)
+    ok = idx >= 0
+    iters = jnp.where(ok[..., None], jnp.take(store.iters, safe, axis=-2), IMAX)
+    vals = jnp.where(ok[..., None], jnp.take(store.vals, safe, axis=-2), 0.0)
+    count = jnp.where(ok, jnp.take(store.count, safe, axis=-1), 0)
+    return DiffStore(iters, vals, count)
+
+
 def nbytes_used(store: DiffStore, bytes_per_entry: int = 8) -> Array:
     """Accountant view: live entries × (4B iter + 4B state) — matches the
     paper's difference-count-based memory metering."""

@@ -107,11 +107,16 @@ def select_to_drop(
     raise ValueError(f"unknown selection {cfg.selection!r}")
 
 
-def register(state: DropState, i: Array | int, mask: Array) -> DropState:
+def register(
+    state: DropState, i: Array | int, mask: Array, v_offset: Array | int = 0
+) -> DropState:
     """Record dropped VT pairs (v, i) where ``mask`` [Q, V].
 
     ``i`` may be a scalar iteration or a per-(q, v) array (evictions drop
-    each row's own oldest iteration).
+    each row's own oldest iteration).  ``v_offset`` maps the mask's local
+    vertex axis to global vertex ids (vertex-sharded sweep: each shard
+    registers only its own partition, hashed by global id so the Bloom bit
+    pattern is independent of sharding).
     """
     hi = jnp.where(mask, jnp.asarray(i, jnp.int32), -1).max()
     max_iter = jnp.maximum(state.max_iter, hi)
@@ -126,7 +131,9 @@ def register(state: DropState, i: Array | int, mask: Array) -> DropState:
         )
     if state.flt is not None:
         qn, vn = mask.shape
-        v_ids = jnp.broadcast_to(jnp.arange(vn, dtype=jnp.int32)[None, :], (qn, vn))
+        v_ids = v_offset + jnp.broadcast_to(
+            jnp.arange(vn, dtype=jnp.int32)[None, :], (qn, vn)
+        )
         it = jnp.broadcast_to(jnp.asarray(i, jnp.int32), (qn, vn))
         salt = jnp.arange(qn, dtype=jnp.int32)[:, None]
         flt = bloom_lib.insert(state.flt, v_ids, it, mask, salt=salt)
@@ -145,13 +152,19 @@ def unregister(state: DropState, i: Array | int, mask: Array) -> DropState:
     return state
 
 
-def dropped_at(state: DropState, i: Array | int, num_vertices: int) -> Array:
-    """Mask [Q, V]: was a diff for (v, i) dropped? (Prob: may false-positive.)"""
+def dropped_at(
+    state: DropState, i: Array | int, num_vertices: int, v_offset: Array | int = 0
+) -> Array:
+    """Mask [Q, V]: was a diff for (v, i) dropped? (Prob: may false-positive.)
+
+    ``num_vertices`` is the extent of the (possibly shard-local) vertex axis;
+    ``v_offset`` shifts it to global ids for the Bloom probe.
+    """
     if state.det is not None:
         return ds.has_at(state.det, jnp.asarray(i, jnp.int32))
     if state.flt is not None:
         qn = state.flt.bits.shape[0]
-        v_ids = jnp.broadcast_to(
+        v_ids = v_offset + jnp.broadcast_to(
             jnp.arange(num_vertices, dtype=jnp.int32)[None, :], (qn, num_vertices)
         )
         it = jnp.full((qn, num_vertices), i, dtype=jnp.int32)

@@ -30,6 +30,15 @@ Maintenance is a bounded forward sweep over IFE iterations.  Per iteration i:
 The sweep ends when the frontier is empty and i exceeds the stored horizon
 (max change-point iteration), bounded by ``max_iters``.  Every step is pure
 and fixed-shape → one ``lax.while_loop`` jits/lowers for the production mesh.
+
+**Vertex-sharded sweep** (DESIGN.md §8): every per-vertex carry — diff-store
+rows, DroppedVT/Bloom state, frontier/dirty masks, repair counts — partitions
+by destination vertex over the mesh ``data`` axis (``maintain_sharded`` /
+``batched_step_sharded`` run the same ``_sweep_body`` under ``shard_map``).
+Cross-shard edges are handled by all-gathering the O(V) exact front ``cur``
+once per iteration: messages are formed shard-locally against the gathered
+row, so the COO segment-reduce and the ELL kernel both run unchanged on
+their local partition, and the termination check becomes a ``psum``.
 """
 
 from __future__ import annotations
@@ -41,14 +50,28 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import bloom as bloom_lib
 from repro.core import diffstore as ds
 from repro.core import dropping as dr
-from repro.core.graph import DynamicGraph, EllIndex, EllOverflow, GraphSnapshot
+from repro.core.graph import (
+    DynamicGraph,
+    EllIndex,
+    EllOverflow,
+    GraphSnapshot,
+    ShardIndex,
+    ShardOverflow,
+)
 from repro.core.semiring import Semiring, reduce_pair
 from repro.kernels.ell_spmv import ell_spmv
 
 Array = jnp.ndarray
+
+# Mesh axis the sweep shards over (vertex partition).  The ``model`` axis is
+# reserved for a future Q-axis model-parallel split.
+DATA_AXIS = "data"
 
 
 # --------------------------------------------------------------------------- graph arrays
@@ -150,11 +173,14 @@ class MaintainStats(NamedTuple):
     removed: Array  # int32 — change points deleted (cancelled +/- pairs)
     dropped: Array  # int32 — change points dropped instead of stored
     jwritten: Array  # int32 — J change points upserted (vdc)
+    det_overflow: Array  # int32 — dropped VT records lost to Det-Drop store
+    # evictions THIS sweep: each one is a (v, i) the engine can no longer
+    # repair on access, so a nonzero value flags answers at risk of staleness
 
 
 def zeros_stats() -> MaintainStats:
     z = jnp.zeros((), jnp.int32)
-    return MaintainStats(z, z, z, z, z, z, z, z)
+    return MaintainStats(z, z, z, z, z, z, z, z, z)
 
 
 # --------------------------------------------------------------------------- IFE primitives
@@ -172,14 +198,27 @@ def edge_messages(cfg: EngineConfig, states: Array, g: GraphArrays) -> Array:
     return jnp.where(g.valid[None, :], msgs, sr.identity)
 
 
-def aggregate(cfg: EngineConfig, msgs: Array, cur: Array, g: GraphArrays) -> Array:
-    """D_i from J_i (+ carry of D_{i-1}): the Min/Sum operator. [Q, V]"""
+def aggregate(
+    cfg: EngineConfig,
+    msgs: Array,
+    cur: Array,
+    g: GraphArrays,
+    *,
+    dst: Array | None = None,
+    num_segments: int | None = None,
+) -> Array:
+    """D_i from J_i (+ carry of D_{i-1}): the Min/Sum operator. [Q, V]
+
+    The sharded sweep passes shard-local destination ids and segment count;
+    out-of-range ids (foreign/padding edges) are dropped by the segment op.
+    """
     sr = cfg.semiring
-    v = cfg.num_vertices
+    dst = g.dst if dst is None else dst
+    v = cfg.num_vertices if num_segments is None else num_segments
     if sr.reduce == "min":
-        seg = jax.vmap(lambda m: jax.ops.segment_min(m, g.dst, num_segments=v))
+        seg = jax.vmap(lambda m: jax.ops.segment_min(m, dst, num_segments=v))
     else:
-        seg = jax.vmap(lambda m: jax.ops.segment_sum(m, g.dst, num_segments=v))
+        seg = jax.vmap(lambda m: jax.ops.segment_sum(m, dst, num_segments=v))
     agg = seg(msgs)
     if sr.carry_prev:
         return reduce_pair(sr, agg, cur)
@@ -203,19 +242,26 @@ def _interpret(cfg: EngineConfig) -> bool:
     return jax.default_backend() != "tpu"
 
 
-def ell_step(cfg: EngineConfig, cur: Array, g: GraphArrays) -> Array:
-    """One exact IFE step through the Pallas bucketed-ELL SpMV (JOD fused)."""
+def ell_step(
+    cfg: EngineConfig, cur: Array, g: GraphArrays, *, carry: Array | None = None
+) -> Array:
+    """One exact IFE step through the Pallas bucketed-ELL SpMV (JOD fused).
+
+    ``cur`` is the full state row the kernel gathers from; ``carry`` (default
+    ``cur``) is the shard-local slice matching ``g.nbr``'s rows.
+    """
     sr = cfg.semiring
     q = cur.shape[0]
+    loc = cur if carry is None else carry
     states = jnp.concatenate(
         [cur, jnp.full((q, 1), sr.identity, cur.dtype)], axis=1
-    )  # padding rows gather the reduce identity at index V
-    carry = cur if sr.carry_prev else jnp.full_like(cur, sr.base)
+    )  # padding cells gather the reduce identity at the sentinel index
+    kcarry = loc if sr.carry_prev else jnp.full_like(loc, sr.base)
     return ell_spmv(
         states,
         g.nbr,
         _ell_weights(cfg, g),
-        carry,
+        kcarry,
         semiring=sr.kernel_name,
         block_v=cfg.ell_block_v,
         interpret=_interpret(cfg),
@@ -223,19 +269,57 @@ def ell_step(cfg: EngineConfig, cur: Array, g: GraphArrays) -> Array:
     )
 
 
-def ife_step(cfg: EngineConfig, cur: Array, g: GraphArrays) -> Array:
-    """One exact IFE step D_{i-1} → D_i (join recomputed — the JOD path)."""
+def ife_step(
+    cfg: EngineConfig,
+    cur: Array,
+    g: GraphArrays,
+    *,
+    carry: Array | None = None,
+    dst: Array | None = None,
+    num_segments: int | None = None,
+) -> Array:
+    """One exact IFE step D_{i-1} → D_i (join recomputed — the JOD path).
+
+    ``cur`` is the full [Q, V] front; under the sharded sweep the optional
+    ``carry``/``dst``/``num_segments`` restrict the output to the local
+    vertex partition.
+    """
     if cfg.backend == "ell":
-        return ell_step(cfg, cur, g)
-    return aggregate(cfg, edge_messages(cfg, cur, g), cur, g)
+        return ell_step(cfg, cur, g, carry=carry)
+    return aggregate(
+        cfg,
+        edge_messages(cfg, cur, g),
+        cur if carry is None else carry,
+        g,
+        dst=dst,
+        num_segments=num_segments,
+    )
 
 
-def push_frontier(changed: Array, g: GraphArrays) -> Array:
-    """Out-neighbour mask of changed vertices (δD direct rule). [Q, V]"""
-    v = changed.shape[-1]
+def push_frontier(
+    changed: Array,
+    g: GraphArrays,
+    *,
+    dst: Array | None = None,
+    num_segments: int | None = None,
+) -> Array:
+    """Out-neighbour mask of changed vertices (δD direct rule).
+
+    ``changed`` spans the full vertex axis (sources are global); the output
+    covers ``num_segments`` destinations (the local partition when sharded).
+    """
+    dst = g.dst if dst is None else dst
+    v = changed.shape[-1] if num_segments is None else num_segments
     hit = (changed[:, g.src] & g.valid[None, :]).astype(jnp.int32)
-    out = jax.vmap(lambda h: jax.ops.segment_max(h, g.dst, num_segments=v))(hit)
+    out = jax.vmap(lambda h: jax.ops.segment_max(h, dst, num_segments=v))(hit)
     return out > 0
+
+
+def _local_dst(dst: Array, off: Array, num_local: int) -> Array:
+    """Map global destination ids to the local partition; foreign/padding
+    ids collapse to ``num_local`` (out of range → dropped by segment ops)."""
+    dl = dst - off
+    return jnp.where((dl >= 0) & (dl < num_local), dl, num_local)
 
 
 # --------------------------------------------------------------------------- maintenance
@@ -263,11 +347,13 @@ def stored_horizon(store: ds.DiffStore) -> Array:
 
 class _Carry(NamedTuple):
     i: Array
-    cur: Array  # exact D_{i-1}
+    cur: Array  # exact D_{i-1} (local partition when sharded)
     cur_old: Array  # pre-update trajectory value at i-1 (store-lookup based)
     stale_old: Array  # bool [Q,V]: old trajectory obscured by a dropped diff
     frontier: Array  # bool [Q,V]: δD direct-rule schedule for iteration i
-    changed_prev: Array  # bool [Q,V]: value changed at i-1 (feeds J updates)
+    changed_prev: Array  # bool [Q,V]: value changed at i-1 (feeds J updates;
+    # sharded VDC carries it FULL-width — the gather from the previous
+    # iteration's frontier push is reused instead of re-gathered)
     dstore: ds.DiffStore
     jstore: ds.DiffStore | None
     drop: dr.DropState
@@ -275,6 +361,8 @@ class _Carry(NamedTuple):
     horizon: Array  # int32 — running max change-point iteration (upper bound;
     # removals may leave it stale high, costing at most a few empty sweeps,
     # but avoids a full iters-store scan per iteration)
+    live: Array  # bool — work remains (frontier ∪ dirty nonempty, globally);
+    # precomputed in the body so the sharded cond stays collective-free
     stats: MaintainStats
 
 
@@ -284,12 +372,26 @@ def _sweep_body(
     dirty: Array,
     init: Array,
     old_dstore: ds.DiffStore,
+    axis: str | None,
     c: _Carry,
 ) -> _Carry:
     i = c.i
+    num_local = c.cur.shape[-1]  # V, or V/n under shard_map
     q_ids = jnp.arange(cfg.num_queries, dtype=jnp.int32)[:, None]
-    v_ids = jnp.arange(cfg.num_vertices, dtype=jnp.int32)[None, :]
-    degree = (g.out_degree + g.in_degree)[None, :].astype(jnp.float32)
+    if axis is None:
+        off = jnp.int32(0)
+        cur_full = c.cur  # the exact front IS the full row
+        dst = g.dst
+        outd_local = g.out_degree
+    else:
+        off = jax.lax.axis_index(axis).astype(jnp.int32) * num_local
+        # the one O(V) exchange per iteration: the exact front, gathered so
+        # cross-shard edges form their messages against remote sources
+        cur_full = jax.lax.all_gather(c.cur, axis, axis=1, tiled=True)
+        dst = _local_dst(g.dst, off, num_local)
+        outd_local = jax.lax.dynamic_slice_in_dim(g.out_degree, off, num_local)
+    v_ids = off + jnp.arange(num_local, dtype=jnp.int32)[None, :]
+    degree = (outd_local + g.in_degree)[None, :].astype(jnp.float32)
 
     # -- δE direct + upper-bound rules: dirty endpoints rerun at every live i.
     sched = c.frontier | dirty[None, :]
@@ -298,7 +400,7 @@ def _sweep_body(
     #    (AccessDᵢᵛWithDrops, forward form).  Prob-Drop may false-positive
     #    here → spurious but safe recompute.
     dropped_here = (
-        dr.dropped_at(c.drop, i, cfg.num_vertices)
+        dr.dropped_at(c.drop, i, num_local, v_offset=off)
         if cfg.drop.enabled()
         else jnp.zeros_like(sched)
     )
@@ -309,23 +411,26 @@ def _sweep_body(
         # Maintain J at iteration i before reading it: an edge's message
         # changes when its source changed at i-1, or the edge itself (or a
         # sibling in-edge of its target) was touched by δE.
-        live_msgs = edge_messages(cfg, c.cur, g)
+        live_msgs = edge_messages(cfg, cur_full, g)
         jprev, _, jfound = ds.lookup_le(c.jstore, i)
         j0 = edge_messages(cfg, init, g)  # implicit J from D_0
         jprev = jnp.where(jfound, jprev, j0)
         # NOTE: deliberately NOT masked by g.valid — a deleted edge must
         # overwrite its stored message with the identity.
-        jdirty = c.changed_prev[:, g.src] | dirty[g.dst][None, :]
+        dirty_pad = jnp.concatenate([dirty, jnp.zeros((1,), bool)])
+        jdirty = c.changed_prev[:, g.src] | dirty_pad[dst][None, :]
         jwrite = jdirty & (live_msgs != jprev)
         jstore, _, _ = ds.upsert(c.jstore, i, jwrite, live_msgs)
         # VDC path: the aggregator *reads* the materialized J difference sets.
         jval, _, jfound2 = ds.lookup_le(jstore, i)
         msgs = jnp.where(jfound2, jval, j0)
-        new = aggregate(cfg, msgs, c.cur, g)
+        new = aggregate(cfg, msgs, c.cur, g, dst=dst, num_segments=num_local)
         jwritten = c.stats.jwritten + jwrite.sum(dtype=jnp.int32)
     else:
         jstore = c.jstore
-        new = ife_step(cfg, c.cur, g)
+        new = ife_step(
+            cfg, cur_full, g, carry=c.cur, dst=dst, num_segments=num_local
+        )
         jwritten = c.stats.jwritten
 
     # -- pre-update trajectory at i (for δ detection), from the frozen store.
@@ -357,17 +462,38 @@ def _sweep_body(
 
     drop_state = c.drop
     if cfg.drop.enabled():
-        drop_state = dr.register(drop_state, i, to_drop)
-        drop_state = dr.register(drop_state, evicted_iter, evicted)
+        drop_state = dr.register(drop_state, i, to_drop, v_offset=off)
+        drop_state = dr.register(drop_state, evicted_iter, evicted, v_offset=off)
         # a dropped record is stale once the point is stored or vanished
         drop_state = dr.unregister(drop_state, i, to_store | vanish)
+        if axis is not None:
+            # per-shard inserts merge back into the shared structures: OR the
+            # Bloom bits (psum of bools), pmax the horizon anchor, psum the
+            # overflow delta — all scalars/filters stay replicated.
+            if drop_state.flt is not None:
+                bits = jax.lax.psum(
+                    drop_state.flt.bits.astype(jnp.int32), axis
+                ) > 0
+                drop_state = drop_state._replace(flt=drop_state.flt._replace(bits))
+            drop_state = drop_state._replace(
+                det_overflow=c.drop.det_overflow
+                + jax.lax.psum(drop_state.det_overflow - c.drop.det_overflow, axis),
+                max_iter=jax.lax.pmax(drop_state.max_iter, axis),
+            )
 
     # -- advance exact/old trajectories, schedule next iteration.
     recompute = sched | repair
     cur_next = jnp.where(
         recompute, new, jnp.where(has_cur, cur_stored_val, c.cur)
     )
-    frontier_next = push_frontier(changed, g) | changed  # carry: own next value
+    changed_full = (
+        changed
+        if axis is None
+        else jax.lax.all_gather(changed, axis, axis=1, tiled=True)
+    )
+    frontier_next = (
+        push_frontier(changed_full, g, dst=dst, num_segments=num_local) | changed
+    )  # | changed: carry a changed vertex's own next value
 
     stats = MaintainStats(
         iters_run=c.stats.iters_run + 1,
@@ -378,22 +504,129 @@ def _sweep_body(
         removed=c.stats.removed + vanish.sum(dtype=jnp.int32),
         dropped=c.stats.dropped + to_drop.sum(dtype=jnp.int32),
         jwritten=jwritten,
+        det_overflow=c.stats.det_overflow,  # folded in after the loop
     )
-    horizon = jnp.where(to_store.any(), jnp.maximum(c.horizon, i), c.horizon)
+    any_store = to_store.any()
+    live_next = frontier_next.any() | dirty.any()
+    if axis is not None:
+        any_store = jax.lax.psum(any_store.astype(jnp.int32), axis) > 0
+        live_next = jax.lax.psum(live_next.astype(jnp.int32), axis) > 0
+    horizon = jnp.where(any_store, jnp.maximum(c.horizon, i), c.horizon)
     return _Carry(
         i=i + 1,
         cur=cur_next,
         cur_old=old_i,
         stale_old=stale,
         frontier=frontier_next,
-        changed_prev=changed,
+        # sharded VDC reuses this iteration's gathered mask next iteration
+        changed_prev=changed_full if cfg.mode == "vdc" else changed,
         dstore=dstore,
         jstore=jstore,
         drop=drop_state,
         repair_counts=c.repair_counts + repair.astype(jnp.int32),
         horizon=horizon,
+        live=live_next,
         stats=stats,
     )
+
+
+def _maintain_core(
+    cfg: EngineConfig,
+    state: EngineState,
+    g: GraphArrays,
+    dirty: Array,
+    *,
+    axis: str | None = None,
+) -> tuple[EngineState, MaintainStats]:
+    """The maintenance while_loop, shared by the single-device path
+    (``axis=None``) and the per-shard body under ``shard_map``.
+
+    In sharded mode every per-vertex argument arrives as its local partition;
+    loop-control scalars (``live``, ``horizon``, ``drop.max_iter``) are kept
+    replicated by collectives in the body, so ``cond`` itself runs no
+    communication and all shards take identical trip counts.
+    """
+    old_dstore = state.dstore  # frozen pre-maintenance snapshot (functional)
+    if axis is None:
+        init_full = state.init
+        live0 = dirty.any()
+        horizon0 = stored_horizon(state.dstore)
+    else:
+        init_full = jax.lax.all_gather(state.init, axis, axis=1, tiled=True)
+        live0 = jax.lax.psum(dirty.any().astype(jnp.int32), axis) > 0
+        horizon0 = jax.lax.pmax(stored_horizon(state.dstore), axis)
+
+    body = partial(_sweep_body, cfg, g, dirty, init_full, old_dstore, axis)
+
+    def cond(c: _Carry) -> Array:
+        # Continue while work is scheduled (frontier/dirty) AND the sweep can
+        # still mutate the store.  Mutations happen only at i ≤ horizon+1:
+        # an in-neighbour change point at j feeds a consumer at j+1 (upper
+        # bound rule), and fresh writes at i extend the horizon to ≥ i, so a
+        # still-converging new trajectory keeps the loop alive while a
+        # permanently-diverged-from-old frontier (no mutations) drains at
+        # horizon+1 instead of max_iters.  i==1 always runs when anything is
+        # dirty (δE direct rule).  The horizon rides the carry (one store
+        # scan per maintain, not per iteration).
+        horizon = c.horizon
+        if cfg.drop.enabled():
+            # dropped change points still anchor the upper-bound rule (and
+            # must be swept past so `cur` picks up their repaired values)
+            horizon = jnp.maximum(horizon, c.drop.max_iter)
+        return (
+            (c.i <= jnp.int32(cfg.max_iters))
+            & c.live
+            & ((c.i == 1) | (c.i <= horizon + 1))
+        )
+
+    num_local = state.cur.shape[-1]
+    zeros = jnp.zeros((cfg.num_queries, num_local), bool)
+    c0 = _Carry(
+        i=jnp.int32(1),
+        cur=state.init,
+        cur_old=state.init,
+        stale_old=zeros,
+        frontier=zeros,
+        changed_prev=(
+            jnp.zeros((cfg.num_queries, cfg.num_vertices), bool)
+            if cfg.mode == "vdc"
+            else zeros
+        ),
+        dstore=state.dstore,
+        jstore=state.jstore,
+        drop=state.drop,
+        repair_counts=state.repair_counts,
+        horizon=horizon0,
+        live=live0,
+        stats=zeros_stats(),
+    )
+    c = jax.lax.while_loop(cond, body, c0)
+    stats = c.stats
+    if axis is not None:
+        # per-shard partial sums → global; iters_run is already replicated
+        stats = stats._replace(
+            scheduled=jax.lax.psum(stats.scheduled, axis),
+            changed=jax.lax.psum(stats.changed, axis),
+            repairs=jax.lax.psum(stats.repairs, axis),
+            written=jax.lax.psum(stats.written, axis),
+            removed=jax.lax.psum(stats.removed, axis),
+            dropped=jax.lax.psum(stats.dropped, axis),
+            jwritten=jax.lax.psum(stats.jwritten, axis),
+        )
+    # Det-Drop record loss this sweep (replicated in sharded mode: the body
+    # psums the per-shard eviction deltas into the carried counter).
+    stats = stats._replace(
+        det_overflow=c.drop.det_overflow - state.drop.det_overflow
+    )
+    new_state = EngineState(
+        dstore=c.dstore,
+        jstore=c.jstore,
+        drop=c.drop,
+        init=state.init,
+        cur=c.cur,
+        repair_counts=c.repair_counts,
+    )
+    return new_state, stats
 
 
 def maintain(
@@ -409,57 +642,158 @@ def maintain(
     initial computation pass ``dirty = ones`` with an empty store — the sweep
     then *is* the static IFE run, recording change points as it goes.
     """
-    old_dstore = state.dstore  # frozen pre-maintenance snapshot (functional)
+    return _maintain_core(cfg, state, g, dirty, axis=None)
 
-    def body(c: _Carry) -> _Carry:
-        return _sweep_body(cfg, g, dirty, state.init, old_dstore, c)
 
-    def cond(c: _Carry) -> Array:
-        # Continue while work is scheduled (frontier/dirty) AND the sweep can
-        # still mutate the store.  Mutations happen only at i ≤ horizon+1:
-        # an in-neighbour change point at j feeds a consumer at j+1 (upper
-        # bound rule), and fresh writes at i extend the horizon to ≥ i, so a
-        # still-converging new trajectory keeps the loop alive while a
-        # permanently-diverged-from-old frontier (no mutations) drains at
-        # horizon+1 instead of max_iters.  i==1 always runs when anything is
-        # dirty (δE direct rule).  The horizon rides the carry (one store
-        # scan per maintain, not per iteration).
-        live = c.frontier.any() | dirty.any()
-        horizon = c.horizon
-        if cfg.drop.enabled():
-            # dropped change points still anchor the upper-bound rule (and
-            # must be swept past so `cur` picks up their repaired values)
-            horizon = jnp.maximum(horizon, c.drop.max_iter)
-        return (
-            (c.i <= jnp.int32(cfg.max_iters))
-            & live
-            & ((c.i == 1) | (c.i <= horizon + 1))
+# --------------------------------------------------------------------------- sharded sweep
+def _store_pspec() -> ds.DiffStore:
+    """Partition spec for a [Q, K, S] diff store: keys sharded, rest whole."""
+    return ds.DiffStore(
+        iters=P(None, DATA_AXIS, None),
+        vals=P(None, DATA_AXIS, None),
+        count=P(None, DATA_AXIS),
+    )
+
+
+def _state_pspecs(state: EngineState) -> EngineState:
+    """EngineState partition specs: every per-vertex (and, for VDC, per-edge-
+    cell) axis shards over ``data``; scalars and Bloom bits stay replicated."""
+    drop = state.drop
+    return EngineState(
+        dstore=_store_pspec(),
+        jstore=None if state.jstore is None else _store_pspec(),
+        drop=dr.DropState(
+            det=None if drop.det is None else _store_pspec(),
+            flt=None
+            if drop.flt is None
+            else bloom_lib.BloomFilter(P(), drop.flt.num_hashes),
+            det_overflow=P(),
+            max_iter=P(),
+        ),
+        init=P(None, DATA_AXIS),
+        cur=P(None, DATA_AXIS),
+        repair_counts=P(None, DATA_AXIS),
+    )
+
+
+def _graph_pspecs(g: GraphArrays) -> GraphArrays:
+    """GraphArrays partition specs for the vertex-sharded edge layout:
+    edge cells and in-rows shard by destination; out-degrees replicate
+    (message weights gather them at arbitrary global sources)."""
+    return GraphArrays(
+        src=P(DATA_AXIS),
+        dst=P(DATA_AXIS),
+        weight=P(DATA_AXIS),
+        valid=P(DATA_AXIS),
+        out_degree=P(),
+        in_degree=P(DATA_AXIS),
+        nbr=None if g.nbr is None else P(DATA_AXIS, None),
+        ell_w=None if g.ell_w is None else P(DATA_AXIS, None),
+    )
+
+
+def _stats_pspecs() -> MaintainStats:
+    return MaintainStats(*([P()] * len(MaintainStats._fields)))
+
+
+def maintain_sharded(
+    cfg: EngineConfig,
+    mesh: Mesh,
+    state: EngineState,
+    g: GraphArrays,
+    dirty: Array,
+) -> tuple[EngineState, MaintainStats]:
+    """``maintain`` with every per-vertex carry partitioned over the mesh
+    ``data`` axis.  ``g`` must be in the :class:`ShardIndex` edge layout
+    (cells grouped by destination shard) and V divisible by the axis size."""
+    sspec = _state_pspecs(state)
+    fn = shard_map(
+        partial(_maintain_core, cfg, axis=DATA_AXIS),
+        mesh=mesh,
+        in_specs=(sspec, _graph_pspecs(g), P(DATA_AXIS)),
+        out_specs=(sspec, _stats_pspecs()),
+        check_rep=False,
+    )
+    return fn(state, g, dirty)
+
+
+def _batched_core_sharded(
+    cfg: EngineConfig,
+    state: EngineState,
+    g: GraphArrays,
+    upd: UpdateBatch,
+    *,
+    axis: str,
+) -> tuple[EngineState, GraphArrays, MaintainStats]:
+    """Per-shard body of the donated-buffer batched step: the (replicated)
+    UpdateBatch is scattered to the owning shards — each shard localizes the
+    chunk's indices and drops the rows it does not own — then the sharded
+    sweep runs in the same dispatch."""
+    es = g.src.shape[0]  # edge cells per shard
+    num_local = state.cur.shape[-1]  # vertices per shard
+    v = cfg.num_vertices
+    shard = jax.lax.axis_index(axis).astype(jnp.int32)
+    off = shard * num_local
+
+    # edge-cell scatter: upd.slot is the linear ShardIndex cell (shard·C + pos)
+    slot = upd.slot - shard * es
+    slot = jnp.where((slot >= 0) & (slot < es), slot, es)  # foreign → dropped
+    src = g.src.at[slot].set(upd.src, mode="drop")
+    dst = g.dst.at[slot].set(upd.dst, mode="drop")
+    weight = g.weight.at[slot].set(upd.weight, mode="drop")
+    valid = g.valid.at[slot].set(upd.valid, mode="drop")
+
+    # degrees recomputed from the (distributed) edge list: out-degrees need a
+    # cross-shard psum (any shard may hold out-edges of any source); in-
+    # degrees are a shard-local property of the owned destination block.
+    live = valid.astype(jnp.int32)
+    out_degree = jax.lax.psum(
+        jax.ops.segment_sum(live, src, num_segments=v), axis
+    )
+    dst_l = _local_dst(dst, off, num_local)
+    in_degree = jax.ops.segment_sum(live, dst_l, num_segments=num_local)
+
+    nbr, ell_w = g.nbr, g.ell_w
+    if cfg.backend == "ell":
+        row = upd.ell_row - off
+        row = jnp.where((row >= 0) & (row < num_local), row, num_local)
+        nbr = nbr.at[row, upd.ell_col].set(upd.ell_nbr, mode="drop")
+        ell_w = ell_w.at[row, upd.ell_col].set(upd.ell_w, mode="drop")
+    g2 = GraphArrays(src, dst, weight, valid, out_degree, in_degree, nbr, ell_w)
+
+    dv = upd.dirty_v - off
+    dv = jnp.where((dv >= 0) & (dv < num_local), dv, num_local)
+    dirty = jnp.zeros(num_local + 1, bool).at[dv].set(True)[:num_local]
+    if cfg.weight_from_degree:
+        # outdeg(u) changed → every out-message of u retunes (δE dirty rule)
+        tsrc = jnp.zeros(v + 1, bool).at[upd.touched_src].set(True)[:v]
+        hit = (tsrc[src] & valid).astype(jnp.int32)
+        dirty = dirty | (
+            jax.ops.segment_max(hit, dst_l, num_segments=num_local) > 0
         )
 
-    c0 = _Carry(
-        i=jnp.int32(1),
-        cur=state.init,
-        cur_old=state.init,
-        stale_old=jnp.zeros((cfg.num_queries, cfg.num_vertices), bool),
-        frontier=jnp.zeros((cfg.num_queries, cfg.num_vertices), bool),
-        changed_prev=jnp.zeros((cfg.num_queries, cfg.num_vertices), bool),
-        dstore=state.dstore,
-        jstore=state.jstore,
-        drop=state.drop,
-        repair_counts=state.repair_counts,
-        horizon=stored_horizon(state.dstore),
-        stats=zeros_stats(),
+    new_state, stats = _maintain_core(cfg, state, g2, dirty, axis=axis)
+    return new_state, g2, stats
+
+
+def batched_step_sharded(
+    cfg: EngineConfig,
+    mesh: Mesh,
+    state: EngineState,
+    g: GraphArrays,
+    upd: UpdateBatch,
+) -> tuple[EngineState, GraphArrays, MaintainStats]:
+    """Sharded twin of :func:`batched_step`: one dispatch scatters a δE chunk
+    to the owning shards and runs the vertex-sharded maintenance sweep."""
+    sspec, gspec = _state_pspecs(state), _graph_pspecs(g)
+    fn = shard_map(
+        partial(_batched_core_sharded, cfg, axis=DATA_AXIS),
+        mesh=mesh,
+        in_specs=(sspec, gspec, UpdateBatch(*([P()] * len(UpdateBatch._fields)))),
+        out_specs=(sspec, gspec, _stats_pspecs()),
+        check_rep=False,
     )
-    c = jax.lax.while_loop(cond, body, c0)
-    new_state = EngineState(
-        dstore=c.dstore,
-        jstore=c.jstore,
-        drop=c.drop,
-        init=state.init,
-        cur=c.cur,
-        repair_counts=c.repair_counts,
-    )
-    return new_state, c.stats
+    return fn(state, g, upd)
 
 
 def reassemble(
@@ -499,6 +833,38 @@ def nbytes_accounted(cfg: EngineConfig, state: EngineState) -> int:
     if cfg.drop.enabled():
         total += int(state.drop.nbytes_accounted())
     return total
+
+
+def nbytes_per_shard(
+    cfg: EngineConfig, state: EngineState, num_shards: int
+) -> list[int]:
+    """Accounted difference bytes resident on each shard of the vertex
+    partition (the paper's Table-1 per-machine memory axis): diff-store and
+    DroppedVT rows live with their owning vertex block, VDC's J rows with
+    their owning edge-cell block; Bloom bits are replicated per shard."""
+    q = cfg.num_queries
+    per = (
+        np.asarray(state.dstore.count).reshape(q, num_shards, -1).sum(axis=(0, 2))
+        * 8
+    )
+    if state.jstore is not None:
+        per = per + (
+            np.asarray(state.jstore.count)
+            .reshape(q, num_shards, -1)
+            .sum(axis=(0, 2))
+            * 8
+        )
+    if cfg.drop.enabled():
+        if state.drop.det is not None:
+            per = per + (
+                np.asarray(state.drop.det.count)
+                .reshape(q, num_shards, -1)
+                .sum(axis=(0, 2))
+                * 4
+            )
+        else:
+            per = per + int(state.drop.flt.nbytes_accounted)
+    return [int(x) for x in per]
 
 
 # --------------------------------------------------------------------------- batched updates
@@ -590,6 +956,15 @@ class DiffIFE:
     width ``D`` is kept fixed across updates (host :class:`EllIndex` mirror)
     and grows geometrically — with a one-off re-trace — only when a vertex's
     in-degree outruns it.
+
+    With ``mesh`` given (data axis > 1), every per-vertex carry partitions by
+    destination vertex over the mesh ``data`` axis and both ingestion paths
+    dispatch through ``shard_map`` (:func:`maintain_sharded` /
+    :func:`batched_step_sharded`); the edge list moves into the
+    :class:`ShardIndex` cell layout (cells grouped by owning shard, host
+    mirror kept in sync per chunk) and grows geometrically per shard — with
+    a one-off re-trace, and a J-store row permutation under VDC — when a
+    shard's cells run out.
     """
 
     def __init__(
@@ -599,22 +974,44 @@ class DiffIFE:
         init: np.ndarray | Array,
         *,
         batch_capacity: int = 32,
+        mesh: Mesh | None = None,
     ) -> None:
         self.cfg = cfg
         self.graph = graph
         self.batch_capacity = int(batch_capacity)
+        self.mesh = mesh
+        self.num_shards = int(mesh.shape[DATA_AXIS]) if mesh is not None else 1
+        if self.num_shards > 1 and cfg.num_vertices % self.num_shards:
+            raise ValueError(
+                f"num_vertices {cfg.num_vertices} not divisible by the mesh "
+                f"data axis ({self.num_shards})"
+            )
         self._ell_width = 0
         self._ell_index: EllIndex | None = None
+        self._shard_index: ShardIndex | None = None
         self.g = self._device_graph(graph.snapshot())
-        self.state = make_state(cfg, jnp.asarray(init, jnp.float32), graph.capacity)
-        self._maintain = jax.jit(partial(maintain, cfg))
-        self._step = jax.jit(partial(batched_step, cfg), donate_argnums=(0, 1))
+        num_rows = (
+            self.num_shards * self._shard_index.shard_capacity
+            if self._shard_index is not None
+            else graph.capacity
+        )
+        self.state = make_state(cfg, jnp.asarray(init, jnp.float32), num_rows)
+        if self.num_shards > 1:
+            self._maintain = jax.jit(partial(maintain_sharded, cfg, mesh))
+            self._step = jax.jit(
+                partial(batched_step_sharded, cfg, mesh), donate_argnums=(0, 1)
+            )
+        else:
+            self._maintain = jax.jit(partial(maintain, cfg))
+            self._step = jax.jit(partial(batched_step, cfg), donate_argnums=(0, 1))
         self.last_stats: MaintainStats | None = None
         # initial computation: every vertex dirty, empty store
         self._run(np.ones(cfg.num_vertices, dtype=bool))
 
     # ------------------------------------------------------------ device views
     def _device_graph(self, snap: GraphSnapshot) -> GraphArrays:
+        if self.num_shards > 1:
+            return self._device_graph_sharded(snap)
         if self.cfg.backend == "ell":
             g = GraphArrays.from_snapshot(
                 snap, backend="ell", ell_min_width=self._ell_width
@@ -623,6 +1020,63 @@ class DiffIFE:
             self._ell_index = EllIndex(snap, self._ell_width)
             return g
         return GraphArrays.from_snapshot(snap)
+
+    def _device_graph_sharded(self, snap: GraphSnapshot) -> GraphArrays:
+        if self._shard_index is None:
+            self._shard_index = ShardIndex(snap, self.num_shards)
+        src, dst, w, valid = self._shard_index.edge_arrays(snap)
+        nbr = ell_w = None
+        if self.cfg.backend == "ell":
+            # ELL rows are keyed by destination, so the [V, D] view shards
+            # row-wise as-is; neighbour ids stay global (the kernel gathers
+            # from the all-gathered state row).
+            nbr_np, w_np, width = snap.to_ell(min_width=self._ell_width)
+            self._ell_width = width
+            self._ell_index = EllIndex(snap, width)
+            nbr, ell_w = jnp.asarray(nbr_np), jnp.asarray(w_np)
+        return GraphArrays(
+            src=jnp.asarray(src),
+            dst=jnp.asarray(dst),
+            weight=jnp.asarray(w),
+            valid=jnp.asarray(valid),
+            out_degree=jnp.asarray(snap.out_degree, jnp.int32),
+            in_degree=jnp.asarray(snap.in_degree, jnp.int32),
+            nbr=nbr,
+            ell_w=ell_w,
+        )
+
+    def _shard_sync(self, ops, snap: GraphSnapshot | None = None) -> list | None:
+        """Fold resolved ops into the shard index; regrow on overflow.
+
+        Returns the coalesced cell writes, or None when the index had to be
+        rebuilt (the caller must then re-upload the full edge layout).  The
+        snapshot is only needed on the overflow path — callers without one at
+        hand (the per-chunk batched loop) let it be taken lazily there, so
+        the hot path stays O(B) on the host."""
+        try:
+            return self._shard_index.writes_for(ops)
+        except ShardOverflow:
+            self._regrow_shards(snap if snap is not None else self.graph.snapshot())
+            return None
+
+    def _regrow_shards(self, snap: GraphSnapshot) -> None:
+        """Rebuild the shard layout at 2× per-shard capacity (one re-trace).
+
+        VDC's per-edge-cell J store follows its edges to the new cells; cells
+        without a surviving edge start empty (the implicit-``j0`` fallback is
+        exact for both fresh inserts and vacated cells)."""
+        old = self._shard_index
+        self._shard_index = ShardIndex(
+            snap, self.num_shards, min_capacity=old.shard_capacity * 2
+        )
+        if self.state.jstore is not None:
+            size = self.num_shards * self._shard_index.shard_capacity
+            idx = np.full(size, -1, np.int32)
+            for slot, lin in self._shard_index.cell_of.items():
+                idx[lin] = old.cell_of.get(slot, -1)
+            self.state = self.state._replace(
+                jstore=ds.gather_rows(self.state.jstore, jnp.asarray(idx))
+            )
 
     def _run(self, dirty: np.ndarray) -> None:
         self.state, stats = self._maintain(self.state, self.g, jnp.asarray(dirty))
@@ -640,11 +1094,23 @@ class DiffIFE:
     # ------------------------------------------------------------- ingestion
     def apply_updates(self, updates) -> MaintainStats:
         """Ingest one δE batch and maintain all registered queries."""
-        touched = self.graph.apply_batch(updates)
+        ops = self.graph.apply_batch_resolved(updates)
         snap = self.graph.snapshot()
+        if self.num_shards > 1:
+            self._shard_sync(ops, snap)  # keep cell assignments stable (VDC)
         self.g = self._device_graph(snap)
+        touched = [(u, v) for (_k, _s, u, v, _w) in ops]
         self._run(self._dirty_mask(touched, snap))
         return self.last_stats
+
+    def _full_sweep_fallback(self, ops, total: MaintainStats) -> MaintainStats:
+        """Re-upload the full device graph and run one host-path sweep (the
+        once-per-growth escape hatch of the batched stream)."""
+        snap = self.graph.snapshot()
+        self.g = self._device_graph(snap)
+        touched = [(u, v) for (_k, _s, u, v, _w) in ops]
+        self._run(self._dirty_mask(touched, snap))
+        return _sum_stats(total, self.last_stats)
 
     def apply_updates_batched(
         self, updates, batch_size: int | None = None
@@ -663,6 +1129,14 @@ class DiffIFE:
             ops = self.graph.apply_batch_resolved(updates[lo : lo + b])
             if not ops:
                 continue
+            shard_writes = None
+            if self.num_shards > 1:
+                shard_writes = self._shard_sync(ops)
+                if shard_writes is None:
+                    # a shard's cells overflowed: layout regrown (jstore rows
+                    # permuted), one full-view sweep for this chunk
+                    total = self._full_sweep_fallback(ops, total)
+                    continue
             ell_writes: list = []
             if self.cfg.backend == "ell":
                 try:
@@ -671,24 +1145,25 @@ class DiffIFE:
                     # a vertex outran the fixed D: grow geometrically and fall
                     # back to a full-view sweep for this chunk (one re-trace)
                     self._ell_width = max(8, self._ell_width * 2)
-                    snap = self.graph.snapshot()
-                    self.g = self._device_graph(snap)
-                    touched = [(u, v) for (_k, _s, u, v, _w) in ops]
-                    self._run(self._dirty_mask(touched, snap))
-                    total = _sum_stats(total, self.last_stats)
+                    total = self._full_sweep_fallback(ops, total)
                     continue
-            upd = self._encode_chunk(ops, ell_writes, b)
+            upd = self._encode_chunk(ops, ell_writes, b, shard_writes)
             self.state, self.g, stats = self._step(self.state, self.g, upd)
             # accumulate on device — one host sync per log, not per chunk
             total = _sum_stats(total, stats)
         self.last_stats = jax.tree.map(jax.device_get, total)
         return self.last_stats
 
-    def _encode_chunk(self, ops, ell_writes, b: int) -> UpdateBatch:
+    def _encode_chunk(self, ops, ell_writes, b: int, shard_writes=None) -> UpdateBatch:
         """Host O(B) encode of resolved ops → fixed-shape UpdateBatch."""
         if len(ops) > b:
             raise ValueError(f"chunk of {len(ops)} ops exceeds capacity {b}")
-        cap, v = self.graph.capacity, self.cfg.num_vertices
+        v = self.cfg.num_vertices
+        cap = (
+            self.num_shards * self._shard_index.shard_capacity
+            if shard_writes is not None
+            else self.graph.capacity
+        )
         slot = np.full(b, cap, np.int32)
         src = np.zeros(b, np.int32)
         dst = np.zeros(b, np.int32)
@@ -700,14 +1175,21 @@ class DiffIFE:
         ell_col = np.zeros(b, np.int32)
         ell_nbr = np.zeros(b, np.int32)
         ell_wv = np.zeros(b, np.float32)
-        # final slot contents come from the already-updated host graph, so a
-        # delete+reinsert of one slot inside a chunk coalesces to one row
-        for j, s in enumerate(dict.fromkeys(op[1] for op in ops)):
-            slot[j] = s
-            src[j] = self.graph.src[s]
-            dst[j] = self.graph.dst[s]
-            weight[j] = self.graph.weight[s]
-            valid[j] = self.graph.valid[s]
+        if shard_writes is not None:
+            # sharded layout: coalesced cell writes carry the final contents
+            for j, wr in enumerate(shard_writes):
+                slot[j] = wr.lin
+                src[j], dst[j] = wr.src, wr.dst
+                weight[j], valid[j] = wr.weight, wr.valid
+        else:
+            # final slot contents come from the already-updated host graph, so
+            # a delete+reinsert of one slot inside a chunk coalesces to one row
+            for j, s in enumerate(dict.fromkeys(op[1] for op in ops)):
+                slot[j] = s
+                src[j] = self.graph.src[s]
+                dst[j] = self.graph.dst[s]
+                weight[j] = self.graph.weight[s]
+                valid[j] = self.graph.valid[s]
         for j, (_kind, _s, u, d, _w) in enumerate(ops):
             dirty_v[j] = d
             touched_src[j] = u
@@ -734,3 +1216,10 @@ class DiffIFE:
 
     def nbytes(self) -> int:
         return nbytes_accounted(self.cfg, self.state)
+
+    def nbytes_per_device(self) -> list[int]:
+        """Accounted bytes per shard of the vertex partition (unsharded: one
+        entry — the whole store)."""
+        if self.num_shards == 1:
+            return [self.nbytes()]
+        return nbytes_per_shard(self.cfg, self.state, self.num_shards)

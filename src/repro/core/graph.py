@@ -266,6 +266,123 @@ class EllIndex:
         return list(writes.values())
 
 
+@dataclasses.dataclass
+class ShardWrite:
+    """One sharded edge-cell assignment at linear index ``lin``
+    (= shard · shard_capacity + position within the shard's cell range)."""
+
+    lin: int
+    src: int
+    dst: int
+    weight: float
+    valid: bool
+
+
+class ShardOverflow(Exception):
+    """A destination shard ran out of edge cells — rebuild at a larger
+    per-shard capacity (the index is stale once this is raised)."""
+
+
+class ShardIndex:
+    """Host mirror of the vertex-sharded edge layout (mesh ``data`` axis).
+
+    Shard ``k`` of ``n`` owns the contiguous vertex block
+    ``[k·V/n, (k+1)·V/n)`` and every edge whose DESTINATION falls in it, laid
+    out in a fixed-capacity cell range ``[k·C, (k+1)·C)`` so a δE chunk
+    becomes one device-side scatter into the owning shards (the engine's
+    ``shard_map`` splits the ``[n·C]`` edge arrays along the cell axis).
+    Plays the same role for the sharded COO view that :class:`EllIndex`
+    plays for the ELL view; deletions keep the cell's endpoints (the VDC
+    J-store identity-overwrite rule still needs the old destination) and
+    recycle the cell through a per-shard free list.
+    """
+
+    def __init__(
+        self, snap: GraphSnapshot, num_shards: int, *, min_capacity: int = 0
+    ) -> None:
+        v, n = snap.num_vertices, int(num_shards)
+        if v % n:
+            raise ValueError(f"num_vertices {v} not divisible by {n} shards")
+        self.num_shards = n
+        self.vertices_per_shard = v // n
+        live = np.nonzero(snap.valid)[0]
+        counts = np.bincount(
+            snap.dst[live] // self.vertices_per_shard, minlength=n
+        )
+        cap = max(
+            int(counts.max(initial=0)),
+            -(-snap.capacity // n),  # even spread of the host capacity
+            int(min_capacity),
+            8,
+        )
+        self.shard_capacity = -(-cap // 8) * 8
+        self.cell_of: dict[int, int] = {}  # edge slot → linear cell index
+        self.dead: dict[int, tuple[int, int]] = {}  # freed cell → endpoints
+        self.fill = np.zeros(n, dtype=np.int64)
+        self.free: dict[int, list[int]] = {}
+        for e in live:  # ascending slot order, like EllIndex / to_ell
+            sh = int(snap.dst[e]) // self.vertices_per_shard
+            self.cell_of[int(e)] = sh * self.shard_capacity + int(self.fill[sh])
+            self.fill[sh] += 1
+
+    def _alloc(self, shard: int) -> int:
+        cells = self.free.get(shard)
+        if cells:
+            return cells.pop()
+        if self.fill[shard] >= self.shard_capacity:
+            raise ShardOverflow(
+                f"shard {shard} edge cells exhausted at {self.shard_capacity}"
+            )
+        lin = shard * self.shard_capacity + int(self.fill[shard])
+        self.fill[shard] += 1
+        return lin
+
+    def writes_for(self, ops: Sequence[ResolvedOp]) -> list[ShardWrite]:
+        """Translate resolved slot ops into coalesced sharded-cell writes.
+
+        Raises :class:`ShardOverflow` when an insert exceeds a shard's fixed
+        capacity; the index is then stale and must be rebuilt from the
+        (already updated) host graph.
+        """
+        writes: dict[int, ShardWrite] = {}
+        for (kind, slot, u, v, w) in ops:
+            if kind == "delete":
+                lin = self.cell_of.pop(slot)
+                self.free.setdefault(lin // self.shard_capacity, []).append(lin)
+                self.dead[lin] = (u, v)
+                writes[lin] = ShardWrite(lin, u, v, float(w), False)
+            elif kind == "insert":
+                lin = self._alloc(v // self.vertices_per_shard)
+                self.cell_of[slot] = lin
+                self.dead.pop(lin, None)
+                writes[lin] = ShardWrite(lin, u, v, float(w), True)
+            else:  # weight update in place
+                lin = self.cell_of[slot]
+                writes[lin] = ShardWrite(lin, u, v, float(w), True)
+        return list(writes.values())
+
+    def edge_arrays(
+        self, snap: GraphSnapshot
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Sharded-layout COO arrays ``[n · shard_capacity]`` from a snapshot."""
+        size = self.num_shards * self.shard_capacity
+        src = np.zeros(size, dtype=np.int32)
+        dst = np.zeros(size, dtype=np.int32)
+        w = np.zeros(size, dtype=np.float32)
+        valid = np.zeros(size, dtype=bool)
+        for slot, lin in self.cell_of.items():
+            src[lin] = snap.src[slot]
+            dst[lin] = snap.dst[slot]
+            w[lin] = snap.weight[slot]
+            valid[lin] = snap.valid[slot]
+        # freed cells keep their last endpoints, matching the scatter path
+        # (writes_for) and the unsharded snapshot: the VDC identity-overwrite
+        # rule still needs a deleted edge's old destination to look dirty.
+        for lin, (u, v) in self.dead.items():
+            src[lin], dst[lin] = u, v
+        return src, dst, w, valid
+
+
 def product_graph(
     g: DynamicGraph | GraphSnapshot,
     nfa_delta: dict[int, list[tuple[int, int]]],

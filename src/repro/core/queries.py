@@ -59,6 +59,7 @@ def sssp(
     *,
     max_iters: int = 64,
     batch_capacity: int = 32,
+    mesh=None,
     **kw,
 ) -> DiffIFE:
     """Q concurrent single-source shortest-distance fields (Bellman-Ford IFE)."""
@@ -67,7 +68,7 @@ def sssp(
     )
     return DiffIFE(
         cfg, graph, _source_init(sources, graph.num_vertices),
-        batch_capacity=batch_capacity,
+        batch_capacity=batch_capacity, mesh=mesh,
     )
 
 
@@ -84,6 +85,7 @@ def khop(
     k: int = 5,
     *,
     batch_capacity: int = 32,
+    mesh=None,
     **kw,
 ) -> DiffIFE:
     """Vertices within ≤ k hops of each source; iterations bounded by k."""
@@ -92,7 +94,7 @@ def khop(
     )
     return DiffIFE(
         cfg, graph, _source_init(sources, graph.num_vertices),
-        batch_capacity=batch_capacity,
+        batch_capacity=batch_capacity, mesh=mesh,
     )
 
 
@@ -102,14 +104,15 @@ def khop_reachable(engine: DiffIFE) -> np.ndarray:
 
 # --------------------------------------------------------------------------- WCC
 def wcc(
-    graph: DynamicGraph, *, max_iters: int = 128, batch_capacity: int = 32, **kw
+    graph: DynamicGraph, *, max_iters: int = 128, batch_capacity: int = 32,
+    mesh=None, **kw
 ) -> DiffIFE:
     """Weakly connected components: min-label propagation on the symmetrized
     graph (caller supplies a graph with both edge directions)."""
     v = graph.num_vertices
     init = np.arange(v, dtype=np.float32)[None, :]
     cfg = _engine_cfg(1, v, sr.min_label(), max_iters=max_iters, **kw)
-    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity)
+    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity, mesh=mesh)
 
 
 # --------------------------------------------------------------------------- PageRank
@@ -119,6 +122,7 @@ def pagerank(
     iters: int = 10,
     alpha: float = 0.85,
     batch_capacity: int = 32,
+    mesh=None,
     **kw,
 ) -> DiffIFE:
     """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2)."""
@@ -133,7 +137,7 @@ def pagerank(
         alpha=alpha,
         **kw,
     )
-    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity)
+    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity, mesh=mesh)
 
 
 # --------------------------------------------------------------------------- RPQ

@@ -67,8 +67,8 @@ def _kernel(
     jax.jit, static_argnames=("semiring", "block_v", "interpret", "hop_cap")
 )
 def ell_spmv(
-    states: jnp.ndarray,  # [Q, Vp]  (Vp = V + 1, identity at index V)
-    nbr: jnp.ndarray,  # [V, D]
+    states: jnp.ndarray,  # [Q, Vp]  (identity sentinel at index Vp - 1)
+    nbr: jnp.ndarray,  # [V, D]  (global ids into the state row; Vp-1 padding)
     w: jnp.ndarray,  # [V, D]
     carry: jnp.ndarray,  # [Q, V]  (prev states for min-*, teleport for pr)
     *,
@@ -77,15 +77,21 @@ def ell_spmv(
     interpret: bool = True,
     hop_cap: float = float("inf"),
 ) -> jnp.ndarray:
+    """Unsharded: Vp = V + 1.  Under the vertex-sharded sweep each shard
+    passes its LOCAL adjacency rows (V = V_global / n) against the full
+    all-gathered state row (Vp = V_global + 1) — the gather indices stay
+    global, so the kernel body is identical; only the output extent shrinks.
+    """
     assert semiring in SEMIRINGS
     q, vp = states.shape
     v, d = nbr.shape
-    assert vp == v + 1 and carry.shape == (q, v)
+    assert vp >= v + 1 and carry.shape == (q, v)
+    sentinel = vp - 1  # identity slot padded ELL cells gather from
     bv = min(block_v, v)
     # pad V to a BV multiple; padded rows gather from the identity slot
     vpad = (bv - v % bv) % bv
     if vpad:
-        nbr = jnp.concatenate([nbr, jnp.full((vpad, d), v, nbr.dtype)], 0)
+        nbr = jnp.concatenate([nbr, jnp.full((vpad, d), sentinel, nbr.dtype)], 0)
         w = jnp.concatenate([w, jnp.zeros((vpad, d), w.dtype)], 0)
         carry = jnp.concatenate([carry, jnp.zeros((q, vpad), carry.dtype)], 1)
     grid = (q, (v + vpad) // bv)

@@ -7,24 +7,51 @@ batched step (``DiffIFE.apply_updates_batched``).  Reports updates/sec,
 p50/p99 per-chunk maintenance latency, and peak diff-store bytes — the
 throughput/memory trade the paper's Table 1 frames.
 
+With ``--mesh data`` the engine shards every per-vertex carry over the mesh
+``data`` axis (``shard_map`` sweep, DESIGN.md §8); run under host emulation
+to exercise it without a pod:
+
     PYTHONPATH=src python -m repro.launch.cqp_serve --smoke
     PYTHONPATH=src python -m repro.launch.cqp_serve \
         --v 512 --e 2048 --queries 16 --updates 256 --batch 32 --backend ell
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python -m repro.launch.cqp_serve --smoke --mesh data
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import sys
 import time
 
 import numpy as np
 
-from repro.core import queries as q
-from repro.core.graph import DynamicGraph
-from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+
+def make_mesh(kind: str, shards: int | None):
+    """Resolve --mesh into a jax Mesh (imports jax lazily: --emulate-devices
+    must set XLA_FLAGS before any backend initialization)."""
+    from repro.launch.mesh import (
+        make_data_mesh,
+        make_production_mesh,
+        make_smoke_mesh,
+    )
+
+    if kind == "none":
+        return None
+    if kind == "smoke":
+        return make_smoke_mesh()
+    if kind == "data":
+        return make_data_mesh(shards)
+    return make_production_mesh()
 
 
 def build_engine(args):
+    from repro.core import queries as q
+    from repro.core.graph import DynamicGraph
+    from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+
     edges = powerlaw_graph(args.v, args.e, seed=args.seed)
     initial, pool = split_90_10(edges, seed=args.seed)
     stream = update_stream(
@@ -39,7 +66,8 @@ def build_engine(args):
     log = [u for batch in stream for u in batch]
     graph = DynamicGraph(args.v, initial, capacity=len(edges) * 4 + 64)
     sources = list(range(args.queries))
-    kw = dict(backend=args.backend, batch_capacity=args.batch)
+    mesh = make_mesh(args.mesh, args.shards)
+    kw = dict(backend=args.backend, batch_capacity=args.batch, mesh=mesh)
     if args.query == "sssp":
         eng = q.sssp(graph, sources, max_iters=args.max_iters, **kw)
     elif args.query == "khop":
@@ -67,8 +95,15 @@ def serve(args) -> dict:
     eng.apply_updates_batched(chunks[0], batch_size=b)
     t_compile = time.perf_counter() - t0
 
+    # unsharded, per-device == total: don't pay a second per-chunk fetch
+    dev_peak = (
+        (lambda: max(eng.nbytes_per_device()))
+        if eng.num_shards > 1
+        else eng.nbytes
+    )
     lat_s: list[float] = []
     peak_bytes = eng.nbytes()
+    peak_dev_bytes = dev_peak()
     served = len(chunks[0])
     t_serve0 = time.perf_counter()
     for chunk in chunks[1:]:
@@ -77,6 +112,7 @@ def serve(args) -> dict:
         lat_s.append(time.perf_counter() - t0)
         served += len(chunk)
         peak_bytes = max(peak_bytes, eng.nbytes())
+        peak_dev_bytes = max(peak_dev_bytes, dev_peak())
     t_serve = time.perf_counter() - t_serve0
 
     steady = bool(lat_s)
@@ -99,6 +135,8 @@ def serve(args) -> dict:
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
         "steady_state": steady,
         "peak_diff_bytes": int(peak_bytes),
+        "shards": eng.num_shards,
+        "peak_diff_bytes_per_device": int(peak_dev_bytes),
         "init_s": t_init,
         "compile_s": t_compile,
     }
@@ -113,8 +151,12 @@ def serve(args) -> dict:
     )
     print(
         f"  peak diff-store bytes={out['peak_diff_bytes']} "
+        f"per-device={out['peak_diff_bytes_per_device']} "
+        f"over {out['shards']} shard(s) "
         f"(init {t_init:.2f}s, first-chunk compile {t_compile:.2f}s)"
     )
+    if args.json:
+        print(json.dumps(out))
     return out
 
 
@@ -133,9 +175,34 @@ def main() -> None:
     ap.add_argument(
         "--smoke", action="store_true", help="tiny CPU-friendly end-to-end run"
     )
+    ap.add_argument(
+        "--mesh",
+        choices=("none", "smoke", "data", "production"),
+        default="none",
+        help="mesh to serve on: 'data' shards the sweep over the local "
+        "devices' data axis (see --emulate-devices), 'production' is the "
+        "16x16 pod mesh",
+    )
+    ap.add_argument(
+        "--shards", type=int, default=None,
+        help="data-axis size for --mesh data (default: all local devices)",
+    )
+    ap.add_argument(
+        "--emulate-devices", type=int, default=0,
+        help="emulate N host devices (sets XLA_FLAGS before jax init; "
+        "equivalent to XLA_FLAGS=--xla_force_host_platform_device_count=N)",
+    )
+    ap.add_argument("--json", action="store_true", help="emit a JSON result line")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
+    if args.emulate_devices:
+        if "jax" in sys.modules:
+            ap.error("--emulate-devices must run before jax is imported")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.emulate_devices}"
+        ).strip()
     if args.smoke:
         args.v, args.e = min(args.v, 64), min(args.e, 256)
         args.queries = min(args.queries, 4)

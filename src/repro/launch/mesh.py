@@ -8,6 +8,7 @@ importing this module touches no jax device state — the dry-run sets
 from __future__ import annotations
 
 import jax
+import numpy as np
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,3 +21,19 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_smoke_mesh():
     """1×1 mesh over the single local device (smoke tests/benchmarks)."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(num_shards: int | None = None):
+    """``(n, 1)`` mesh over the first n local devices — the vertex-sharded
+    sweep's ``data`` axis, with a unit ``model`` axis reserved for a future
+    Q-axis split.
+
+    This is the shape CI exercises under host emulation
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on a real pod
+    slice the same specs drive ``make_production_mesh``'s ``data`` axis.
+    """
+    devs = jax.devices()
+    n = len(devs) if num_shards is None else int(num_shards)
+    if n > len(devs):
+        raise ValueError(f"asked for {n} shards but only {len(devs)} devices")
+    return jax.sharding.Mesh(np.array(devs[:n]).reshape(n, 1), ("data", "model"))

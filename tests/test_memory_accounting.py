@@ -1,0 +1,112 @@
+"""Memory accounting (§7 / paper Fig. 7) and Det-Drop overflow surfacing.
+
+``nbytes_accounted`` is validated against a hand-counted trace on a path
+graph under each drop mode, and asserted monotone-nonincreasing as the drop
+probability rises (the paper's Fig-7 invariant: a dropped difference trades
+an 8-byte change point for a ≤4-byte DroppedVT record).
+
+``DropState.det_overflow`` — dropped-VT records lost to Det-Drop store
+evictions, i.e. (v, i) pairs the engine can no longer repair on access —
+must surface in ``MaintainStats`` instead of vanishing silently.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import dropping as dr
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+
+# 0 → 1 → 2 → 3, unit weights: SSSP from 0 stores exactly one change point
+# per reached vertex, at iteration = its distance.
+PATH = [(0, 1, 1.0), (1, 2, 1.0), (2, 3, 1.0)]
+
+
+def _path_engine(**kw):
+    return q.sssp(DynamicGraph(4, PATH, capacity=16), [0], max_iters=8, **kw)
+
+
+def test_nbytes_hand_counted_jod():
+    # change points: v1@1, v2@2, v3@3 → 3 diffs × (4B iter + 4B state)
+    assert _path_engine().nbytes() == 3 * 8
+
+
+def test_nbytes_hand_counted_vdc():
+    # D store: 3 diffs.  J store: edge (1,2)'s message changes at i=2 and
+    # edge (2,3)'s at i=3; edge (0,1)'s message is its implicit j0 forever.
+    assert _path_engine(mode="vdc").nbytes() == 3 * 8 + 2 * 8
+
+
+def test_nbytes_hand_counted_det():
+    # p=1 drops every candidate: no change points, 3 DroppedVT pairs × 4B
+    eng = _path_engine(
+        drop=dr.DropConfig(mode="det", selection="random", p=1.0, seed=1)
+    )
+    assert eng.nbytes() == 3 * 4
+    # dropping must not have cost correctness (repair on the fly)
+    np.testing.assert_array_equal(eng.answers()[0], [0.0, 1.0, 2.0, 3.0])
+
+
+def test_nbytes_hand_counted_prob():
+    # p=1 drops every candidate into the Bloom filter: the accounted cost is
+    # the packed filter (bits/8 per query), independent of the drop count.
+    bits = 1 << 10
+    eng = _path_engine(
+        drop=dr.DropConfig(mode="prob", selection="random", p=1.0, seed=1,
+                           bloom_bits=bits)
+    )
+    assert eng.nbytes() == bits // 8
+    np.testing.assert_array_equal(eng.answers()[0], [0.0, 1.0, 2.0, 3.0])
+
+
+def _workload(seed=5, v=16, e=48):
+    rng = np.random.default_rng(seed)
+    seen = {}
+    while len(seen) < e:
+        u, w = int(rng.integers(0, v)), int(rng.integers(0, v))
+        if u != w:
+            seen[(u, w)] = (u, w, float(rng.integers(1, 6)))
+    edges = list(seen.values())
+    return edges[: e - 8], [(u, w, 0, x, +1) for (u, w, x) in edges[e - 8 :]]
+
+
+@pytest.mark.parametrize("mode", ["det", "prob"])
+def test_nbytes_monotone_nonincreasing_in_p(mode):
+    """Fig-7 invariant: with a counter-based drop coin the drop sets are
+    nested in p, so accounted memory can only fall as p rises."""
+    initial, updates = _workload()
+    sizes = []
+    for p in (0.0, 0.25, 0.5, 0.75, 1.0):
+        eng = q.sssp(
+            DynamicGraph(16, initial, capacity=96),
+            [0, 8],
+            max_iters=24,
+            drop=dr.DropConfig(mode=mode, selection="random", p=p, seed=3,
+                               bloom_bits=1 << 10),
+        )
+        eng.apply_updates(updates)
+        sizes.append(eng.nbytes())
+    assert sizes == sorted(sizes, reverse=True), sizes
+
+
+def test_det_overflow_surfaced_in_stats():
+    """An overflowing det_capacity run must report the lost records."""
+    eng = _path_engine(
+        drop=dr.DropConfig(mode="det", selection="random", p=1.0, seed=1,
+                           det_capacity=1)
+    )
+    assert int(eng.last_stats.det_overflow) == 0  # one drop per vertex so far
+    # the shortcut moves v3's change point to iteration 1: its single
+    # DroppedVT slot (holding iteration 3) must evict → overflow reported
+    stats = eng.apply_updates([(0, 3, 0, 1.0, +1)])
+    assert int(stats.det_overflow) >= 1
+
+
+def test_det_no_overflow_with_capacity():
+    eng = _path_engine(
+        drop=dr.DropConfig(mode="det", selection="random", p=1.0, seed=1,
+                           det_capacity=8)
+    )
+    stats = eng.apply_updates([(0, 3, 0, 1.0, +1)])
+    assert int(stats.det_overflow) == 0
+    np.testing.assert_array_equal(eng.answers()[0], [0.0, 1.0, 2.0, 1.0])
