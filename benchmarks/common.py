@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
+
 
 from repro.core import dropping as dr
 from repro.core import queries as q
@@ -67,7 +67,7 @@ DROP_RANDOM = lambda p, mode="det", seed=1: dr.DropConfig(
 
 def run_stream_stats(system, stream):
     """(total µs, cumulative MaintainStats dict) over a stream."""
-    import jax, time as _t
+    import time as _t
     tot = {}
     def acc(st):
         for k, v in st._asdict().items():

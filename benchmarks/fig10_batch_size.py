@@ -8,7 +8,7 @@ ratio as `derived` — the machine-neutral signal).
 
 from __future__ import annotations
 
-from benchmarks.common import emit, make_khop, paper_workload, run_stream
+from benchmarks.common import emit, make_khop, run_stream
 from repro.core.graph import DynamicGraph
 from repro.core.scratch import scratch_like
 from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream

@@ -7,7 +7,6 @@ Runs SPSP, K-hop, WCC, PageRank and an RPQ on a labelled graph.
 
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, paper_workload, run_stream
 from repro.core import queries as q

@@ -13,7 +13,6 @@ import numpy as np
 from benchmarks.common import emit, make_sssp, paper_workload, run_stream
 from repro.core.graph import DynamicGraph
 from repro.core.landmark import ScratchLandmark
-from repro.core.queries import spsp_answers
 from repro.core.scratch import scratch_like
 
 

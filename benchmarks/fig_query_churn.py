@@ -1,0 +1,101 @@
+"""Query-churn serving: updates/sec and peak diff bytes under register/
+deregister traffic (repo-native; the lifecycle the paper's CQP serves).
+
+A CQPSession streams a fixed δE log in B-chunks while queries come and go:
+every ``PERIOD`` chunks one new SSSP query registers (its trace initialized
+by in-engine recomputation) and the oldest live query deregisters (its diff
+rows reclaimed).  The no-churn run over the same log is the baseline, so
+``derived`` separates the steady-state maintenance rate from the churn tax
+(amortized register/deregister cost) and shows peak accounted diff bytes
+held flat by deregistration.  Engines: dense (batched path) and host
+(pointer path); SCRATCH is omitted — it holds no diffs, so churn is free
+there by construction.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, paper_workload
+from repro.core import plan
+from repro.core.graph import DynamicGraph
+from repro.core.session import CQPSession
+
+V = 128
+Q0 = 4  # standing queries
+PERIOD = 4  # chunks between churn events
+MAX_ITERS = 32
+BATCH = 8
+
+
+def _session(initial, engine: str) -> CQPSession:
+    return CQPSession(
+        DynamicGraph(V, initial, capacity=len(initial) * 4 + 64),
+        engine=engine,
+        batch_capacity=BATCH,
+        min_slots=Q0,
+    )
+
+
+def _run(session: CQPSession, chunks, churn: bool) -> dict:
+    handles = session.register_many(
+        [plan.sssp(s, max_iters=MAX_ITERS) for s in range(Q0)]
+    )
+    session.apply_updates_batched(chunks[0], batch_size=BATCH)  # compile
+    served = 0
+    peak = session.nbytes()
+    next_src = Q0
+    t_churn = 0.0
+    t0 = time.perf_counter()
+    for k, chunk in enumerate(chunks[1:], start=1):
+        if churn and k % PERIOD == 0:
+            tc = time.perf_counter()
+            handles.append(
+                session.register(plan.sssp(next_src % V, max_iters=MAX_ITERS))
+            )
+            session.deregister(handles.pop(0))
+            t_churn += time.perf_counter() - tc
+            next_src += 1
+        session.apply_updates_batched(chunk, batch_size=BATCH)
+        served += len(chunk)
+        peak = max(peak, session.nbytes())
+    return {
+        "t_total": time.perf_counter() - t0,
+        "t_churn": t_churn,
+        "served": served,
+        "peak": peak,
+        "events": session.registered_total - Q0,
+        "freed": session.bytes_freed_total,
+    }
+
+
+def main() -> None:
+    initial, stream = paper_workload(
+        v=V, e=512, num_batches=32, batch_size=BATCH, delete_fraction=0.2, seed=6
+    )
+    log = [u for batch in stream for u in batch]
+    chunks = [log[i : i + BATCH] for i in range(0, len(log), BATCH)]
+
+    for engine in ("dense", "host"):
+        base = _run(_session(initial, engine), chunks, churn=False)
+        churn = _run(_session(initial, engine), chunks, churn=True)
+        t_maint = churn["t_total"] - churn["t_churn"]
+        emit(
+            f"fig_query_churn/{engine}/steady",
+            base["t_total"] * 1e6 / base["served"],
+            f"upd_per_s={base['served'] / base['t_total']:.1f};"
+            f"peak_bytes={base['peak']}",
+        )
+        emit(
+            f"fig_query_churn/{engine}/churn",
+            churn["t_total"] * 1e6 / churn["served"],
+            f"upd_per_s={churn['served'] / churn['t_total']:.1f};"
+            f"maint_upd_per_s={churn['served'] / t_maint:.1f};"
+            f"churn_events={churn['events']};"
+            f"churn_ms_per_event={churn['t_churn'] * 1e3 / max(churn['events'], 1):.1f};"
+            f"peak_bytes={churn['peak']};bytes_freed={churn['freed']}",
+        )
+
+
+if __name__ == "__main__":
+    main()

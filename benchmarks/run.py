@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.fig10_batch_size",
     "benchmarks.fig12_deletions",
     "benchmarks.fig_batch_throughput",
+    "benchmarks.fig_query_churn",
     "benchmarks.fig_shard_scaling",
 ]
 

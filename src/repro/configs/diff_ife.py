@@ -15,9 +15,8 @@ E=16,777,216 edges, S=8 change points — the dense store is ~550 GB global,
 import dataclasses
 from functools import partial
 
-import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.common import ArchSpec, Cell, ShapeDef, Struct, replicated, tree_struct
 from repro.core import diffstore as ds

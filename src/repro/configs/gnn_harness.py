@@ -15,11 +15,10 @@ exercised end-to-end).  DimeNet additionally takes capped triplet lists.
 
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, PartitionSpec as P, NamedSharding
+from jax.sharding import Mesh, NamedSharding
 
 from repro.configs.common import Cell, ShapeDef, Struct, replicated, tree_struct
 from repro.models.gnn import common as g

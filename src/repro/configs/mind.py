@@ -8,7 +8,7 @@ online scoring), serve_bulk (B=262,144 offline scoring), retrieval_cand
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro.configs.common import ArchSpec, Cell, ShapeDef, Struct, replicated, tree_struct
 from repro.models.recsys import mind as model

@@ -1,6 +1,24 @@
-"""Core: the paper's differential computation engine and optimizations."""
+"""Core: the paper's differential computation engine and optimizations.
 
-from repro.core.engine import (  # noqa: F401
+Public API (the session model — DESIGN.md §9):
+
+    from repro.core import CQPSession, plan
+    sess = CQPSession(graph, engine="dense")
+    h = sess.register(plan.sssp(0))
+    sess.apply_updates_batched(log)
+    sess.answers(h)
+
+The engine layer (``DiffIFE``, ``EngineConfig``, …) stays importable for
+direct use; legacy one-shot entry points (``queries.sssp`` returning a bare
+engine, ``SparseDiffIFE``, ``Scratch``, ``RPQ``) keep working for one
+release via the deprecation shims below — new code should go through
+:class:`CQPSession` with :mod:`repro.core.plan` builders.
+"""
+
+import warnings
+
+from repro.core import plan  # noqa: F401  (the plan-builder namespace)
+from repro.core.engine import (
     DiffIFE,
     EngineConfig,
     EngineState,
@@ -11,4 +29,53 @@ from repro.core.engine import (  # noqa: F401
     nbytes_accounted,
     reassemble,
 )
-from repro.core.graph import DynamicGraph, GraphSnapshot  # noqa: F401
+from repro.core.graph import DynamicGraph, GraphSnapshot
+from repro.core.plan import NFA, InitSpec, QueryPlan
+from repro.core.session import CQPSession, EngineProtocol, QueryHandle
+
+__all__ = [
+    # session model
+    "CQPSession",
+    "QueryHandle",
+    "QueryPlan",
+    "InitSpec",
+    "NFA",
+    "EngineProtocol",
+    "plan",
+    # engine layer
+    "DiffIFE",
+    "EngineConfig",
+    "EngineState",
+    "GraphArrays",
+    "MaintainStats",
+    "maintain",
+    "make_state",
+    "nbytes_accounted",
+    "reassemble",
+    # graph layer
+    "DynamicGraph",
+    "GraphSnapshot",
+]
+
+# Deprecated aliases — importable from repro.core for one more release.
+_DEPRECATED = {
+    "SparseDiffIFE": ("repro.core.sparse_engine", "SparseDiffIFE"),
+    "Scratch": ("repro.core.scratch", "Scratch"),
+    "ScratchEngine": ("repro.core.scratch", "ScratchEngine"),
+    "RPQ": ("repro.core.queries", "RPQ"),
+}
+
+
+def __getattr__(name: str):
+    if name in _DEPRECATED:
+        mod_name, attr = _DEPRECATED[name]
+        warnings.warn(
+            f"repro.core.{name} is deprecated; import it from {mod_name} or "
+            "use repro.core.CQPSession with repro.core.plan builders",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        import importlib
+
+        return getattr(importlib.import_module(mod_name), attr)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

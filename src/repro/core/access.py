@@ -19,7 +19,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import diffstore as ds
 from repro.core import dropping as dr
 from repro.core.engine import EngineConfig, EngineState, GraphArrays
 from repro.core.semiring import reduce_pair

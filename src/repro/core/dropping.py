@@ -12,6 +12,13 @@ Two components, mirroring the paper:
   §5.2.1).  Decisions use a counter-based stateless hash of
   (seed, query, vertex, iteration) so drop sets are reproducible and
   independent of sharding.
+
+Selection parameters are **per query**: the paper's CQP tunes dropping per
+registered query, so (p, τ_min, τ_max, selection, seed) live as ``[Q]``
+arrays (:class:`DropParams`) inside :class:`DropState` — a query registered
+mid-stream brings its own drop policy without recompiling the sweep.  The
+DroppedVT *representation* (Det store vs Bloom filter) and its capacities
+stay session-level: they fix array shapes and static branches.
 """
 
 from __future__ import annotations
@@ -43,6 +50,72 @@ class DropConfig:
         return self.mode != "none"
 
 
+class DropParams(NamedTuple):
+    """Per-query selection parameters (``[Q]`` arrays, traced — not static).
+
+    A registered query's drop policy is a row of these arrays; updating a row
+    (register/deregister) never retraces the maintenance sweep.  ``degree_sel``
+    encodes the selection strategy (False = Random, True = Degree).
+    """
+
+    p: Array  # f32 [Q] — drop probability
+    tau_min: Array  # f32 [Q] — degree policy: drop everything below
+    tau_max: Array  # f32 [Q] — degree policy: keep everything above
+    degree_sel: Array  # bool [Q] — True = Degree selection, False = Random
+    seed: Array  # uint32 [Q] — per-query hash seed
+
+
+def _check_selection(cfg: DropConfig) -> bool:
+    if cfg.selection not in ("random", "degree"):
+        raise ValueError(f"unknown selection {cfg.selection!r}")
+    return cfg.selection == "degree"
+
+
+def params_row(cfg: DropConfig) -> tuple[float, float, float, bool, int]:
+    """One query's selection parameters from its :class:`DropConfig`.
+
+    A disabled config maps to the never-drop row (Random with p = 0).
+    """
+    degree_sel = _check_selection(cfg)
+    if not cfg.enabled():
+        return (0.0, 0.0, float("inf"), False, int(cfg.seed))
+    return (cfg.p, cfg.tau_min, cfg.tau_max, degree_sel, int(cfg.seed))
+
+
+def make_params(
+    configs: "list[DropConfig] | DropConfig", num_queries: int | None = None
+) -> DropParams:
+    """Stack per-query configs into :class:`DropParams` arrays.
+
+    A single config broadcasts over ``num_queries`` (the legacy one-global-
+    DropConfig behavior, bit-identical to the pre-session engine).
+    """
+    if isinstance(configs, DropConfig):
+        assert num_queries is not None
+        configs = [configs] * num_queries
+    rows = [params_row(c) for c in configs]
+    p, tmin, tmax, sel, seed = zip(*rows)
+    return DropParams(
+        p=jnp.asarray(p, jnp.float32),
+        tau_min=jnp.asarray(tmin, jnp.float32),
+        tau_max=jnp.asarray(tmax, jnp.float32),
+        degree_sel=jnp.asarray(sel, bool),
+        seed=jnp.asarray(seed, jnp.uint32),
+    )
+
+
+def set_params_row(params: DropParams, q: int, cfg: DropConfig) -> DropParams:
+    """Return ``params`` with query ``q``'s row replaced by ``cfg``."""
+    p, tmin, tmax, sel, seed = params_row(cfg)
+    return DropParams(
+        p=params.p.at[q].set(p),
+        tau_min=params.tau_min.at[q].set(tmin),
+        tau_max=params.tau_max.at[q].set(tmax),
+        degree_sel=params.degree_sel.at[q].set(sel),
+        seed=params.seed.at[q].set(seed),
+    )
+
+
 class DropState(NamedTuple):
     """DroppedVT — tracks dropped (vertex, iteration) pairs."""
 
@@ -51,6 +124,7 @@ class DropState(NamedTuple):
     det_overflow: Array  # counter: det evictions would lose dropped VTs
     max_iter: Array  # int32 — highest iteration ever dropped (horizon term:
     # dropped change points still bound the engine's upper-bound-rule sweep)
+    params: DropParams | None = None  # per-query selection ([Q] rows)
 
     def nbytes_accounted(self) -> Array:
         if self.det is not None:
@@ -59,52 +133,73 @@ class DropState(NamedTuple):
         return jnp.asarray(self.flt.nbytes_accounted, jnp.int32)
 
 
-def make_state(cfg: DropConfig, num_queries: int, num_keys: int) -> DropState:
+def make_state(
+    cfg: DropConfig,
+    num_queries: int,
+    num_keys: int,
+    per_query: "list[DropConfig] | None" = None,
+) -> DropState:
+    """DroppedVT state for ``num_queries`` slots.
+
+    ``cfg`` fixes the representation (mode, capacities); ``per_query``
+    optionally supplies each slot's selection parameters (default: ``cfg``
+    broadcast — the legacy uniform policy).
+    """
+    if cfg.mode not in ("none", "det", "prob"):
+        raise ValueError(f"unknown drop mode {cfg.mode!r}")
     z = jnp.zeros((), jnp.int32)
     neg = jnp.full((), -1, jnp.int32)
+    if not cfg.enabled():
+        return DropState(det=None, flt=None, det_overflow=z, max_iter=neg)
+    params = make_params(per_query if per_query is not None else cfg, num_queries)
     if cfg.mode == "det":
         return DropState(
             det=ds.make((num_queries, num_keys), cfg.det_capacity),
             flt=None,
             det_overflow=z,
             max_iter=neg,
+            params=params,
         )
-    if cfg.mode == "prob":
-        return DropState(
-            det=None,
-            flt=bloom_lib.make((num_queries,), cfg.bloom_bits, cfg.bloom_hashes),
-            det_overflow=z,
-            max_iter=neg,
-        )
-    return DropState(det=None, flt=None, det_overflow=z, max_iter=neg)
+    return DropState(
+        det=None,
+        flt=bloom_lib.make((num_queries,), cfg.bloom_bits, cfg.bloom_hashes),
+        det_overflow=z,
+        max_iter=neg,
+        params=params,
+    )
 
 
-def _uniform01(seed: int, q: Array, v: Array, i: Array) -> Array:
-    """Deterministic per-(seed, q, v, i) uniform in [0, 1)."""
+def _uniform01(seed: Array | int, q: Array, v: Array, i: Array) -> Array:
+    """Deterministic per-(seed, q, v, i) uniform in [0, 1).
+
+    ``seed`` may be a scalar or a per-query array broadcasting against ``q``;
+    a uniform seed array produces bit-identical draws to the legacy scalar.
+    """
     h = bloom_lib._mix(
         jnp.asarray(v, jnp.uint32)
         ^ bloom_lib._mix(jnp.asarray(i, jnp.uint32) * jnp.uint32(0x9E3779B9))
-        ^ bloom_lib._mix(jnp.asarray(q, jnp.uint32) + jnp.uint32(seed))
+        ^ bloom_lib._mix(jnp.asarray(q, jnp.uint32) + jnp.asarray(seed, jnp.uint32))
     )
     return h.astype(jnp.float32) / jnp.float32(2**32)
 
 
 def select_to_drop(
-    cfg: DropConfig, degree: Array, q: Array, v: Array, i: Array
+    params: DropParams, degree: Array, q: Array, v: Array, i: Array
 ) -> Array:
     """Which candidate differences to drop (paper §5.2, Fig. 3).
 
-    ``degree`` broadcasts against q/v/i (total degree of the vertex).
+    ``degree`` broadcasts against q/v/i (total degree of the vertex); the
+    per-query rows of ``params`` broadcast over the vertex axis, so one fused
+    evaluation serves every registered query's own policy.
     """
-    u = _uniform01(cfg.seed, q, v, i)
-    coin = u < cfg.p
-    if cfg.selection == "random":
-        return coin
-    if cfg.selection == "degree":
-        return jnp.where(
-            degree < cfg.tau_min, True, jnp.where(degree > cfg.tau_max, False, coin)
-        )
-    raise ValueError(f"unknown selection {cfg.selection!r}")
+    u = _uniform01(params.seed[:, None], q, v, i)
+    coin = u < params.p[:, None]
+    by_degree = jnp.where(
+        degree < params.tau_min[:, None],
+        True,
+        jnp.where(degree > params.tau_max[:, None], False, coin),
+    )
+    return jnp.where(params.degree_sel[:, None], by_degree, coin)
 
 
 def register(

@@ -162,6 +162,8 @@ class EngineState(NamedTuple):
     init: Array  # f32 [Q, V] — D_0 (implicit iteration-0 diffs)
     cur: Array  # f32 [Q, V] — exact values at the last swept iteration
     repair_counts: Array  # int32 [Q, V] — dropped-diff recomputations (Fig 6b)
+    active: Array  # bool [Q] — live query slots; inactive slots are scheduled
+    # for no work and hold no diffs (the session's padded slot pool)
 
 
 class MaintainStats(NamedTuple):
@@ -323,7 +325,19 @@ def _local_dst(dst: Array, off: Array, num_local: int) -> Array:
 
 
 # --------------------------------------------------------------------------- maintenance
-def make_state(cfg: EngineConfig, init: Array, num_edges: int) -> EngineState:
+def make_state(
+    cfg: EngineConfig,
+    init: Array,
+    num_edges: int,
+    *,
+    active: Array | None = None,
+    drop_rows: list[dr.DropConfig] | None = None,
+) -> EngineState:
+    """Engine state for ``cfg.num_queries`` slots.
+
+    ``active`` marks the live slots (default: all); ``drop_rows`` supplies
+    each slot's selection parameters (default: ``cfg.drop`` broadcast).
+    """
     q, v = cfg.num_queries, cfg.num_vertices
     assert init.shape == (q, v)
     jstore = (
@@ -332,10 +346,11 @@ def make_state(cfg: EngineConfig, init: Array, num_edges: int) -> EngineState:
     return EngineState(
         dstore=ds.make((q, v), cfg.store_capacity),
         jstore=jstore,
-        drop=dr.make_state(cfg.drop, q, v),
+        drop=dr.make_state(cfg.drop, q, v, per_query=drop_rows),
         init=init.astype(jnp.float32),
         cur=init.astype(jnp.float32),
         repair_counts=jnp.zeros((q, v), jnp.int32),
+        active=jnp.ones((q,), bool) if active is None else jnp.asarray(active, bool),
     )
 
 
@@ -372,6 +387,7 @@ def _sweep_body(
     dirty: Array,
     init: Array,
     old_dstore: ds.DiffStore,
+    active: Array,
     axis: str | None,
     c: _Carry,
 ) -> _Carry:
@@ -394,7 +410,10 @@ def _sweep_body(
     degree = (outd_local + g.in_degree)[None, :].astype(jnp.float32)
 
     # -- δE direct + upper-bound rules: dirty endpoints rerun at every live i.
-    sched = c.frontier | dirty[None, :]
+    #    ``dirty`` is per-query [Q, V]: a δE batch dirties every query's row,
+    #    a mid-stream register dirties only the new slot's.  Inactive slots
+    #    (the session's free pool) are scheduled for no work at all.
+    sched = (c.frontier | dirty) & active[:, None]
 
     # -- dropped change points at i must be recomputed to keep `cur` exact
     #    (AccessDᵢᵛWithDrops, forward form).  Prob-Drop may false-positive
@@ -404,7 +423,7 @@ def _sweep_body(
         if cfg.drop.enabled()
         else jnp.zeros_like(sched)
     )
-    repair = dropped_here & ~sched
+    repair = dropped_here & active[:, None] & ~sched
 
     # -- recompute D_i (dense; `sched|repair` is the algorithmic work mask).
     if cfg.mode == "vdc":
@@ -417,8 +436,10 @@ def _sweep_body(
         jprev = jnp.where(jfound, jprev, j0)
         # NOTE: deliberately NOT masked by g.valid — a deleted edge must
         # overwrite its stored message with the identity.
-        dirty_pad = jnp.concatenate([dirty, jnp.zeros((1,), bool)])
-        jdirty = c.changed_prev[:, g.src] | dirty_pad[dst][None, :]
+        dirty_pad = jnp.concatenate(
+            [dirty, jnp.zeros((dirty.shape[0], 1), bool)], axis=1
+        )
+        jdirty = c.changed_prev[:, g.src] | dirty_pad[:, dst]
         jwrite = jdirty & (live_msgs != jprev)
         jstore, _, _ = ds.upsert(c.jstore, i, jwrite, live_msgs)
         # VDC path: the aggregator *reads* the materialized J difference sets.
@@ -447,7 +468,9 @@ def _sweep_body(
     has_cur, cur_stored_val = ds.value_at(c.dstore, i)
 
     if cfg.drop.enabled():
-        to_drop = want_point & dr.select_to_drop(cfg.drop, degree, q_ids, v_ids, i)
+        to_drop = want_point & dr.select_to_drop(
+            c.drop.params, degree, q_ids, v_ids, i
+        )
         to_store = want_point & ~to_drop
     else:
         to_drop = jnp.zeros_like(want_point)
@@ -541,10 +564,12 @@ def _maintain_core(
     """The maintenance while_loop, shared by the single-device path
     (``axis=None``) and the per-shard body under ``shard_map``.
 
-    In sharded mode every per-vertex argument arrives as its local partition;
-    loop-control scalars (``live``, ``horizon``, ``drop.max_iter``) are kept
-    replicated by collectives in the body, so ``cond`` itself runs no
-    communication and all shards take identical trip counts.
+    ``dirty`` is the per-query [Q, V] schedule seed (local vertex partition
+    when sharded).  In sharded mode every per-vertex argument arrives as its
+    local partition; loop-control scalars (``live``, ``horizon``,
+    ``drop.max_iter``) are kept replicated by collectives in the body, so
+    ``cond`` itself runs no communication and all shards take identical trip
+    counts.
     """
     old_dstore = state.dstore  # frozen pre-maintenance snapshot (functional)
     if axis is None:
@@ -556,7 +581,9 @@ def _maintain_core(
         live0 = jax.lax.psum(dirty.any().astype(jnp.int32), axis) > 0
         horizon0 = jax.lax.pmax(stored_horizon(state.dstore), axis)
 
-    body = partial(_sweep_body, cfg, g, dirty, init_full, old_dstore, axis)
+    body = partial(
+        _sweep_body, cfg, g, dirty, init_full, old_dstore, state.active, axis
+    )
 
     def cond(c: _Carry) -> Array:
         # Continue while work is scheduled (frontier/dirty) AND the sweep can
@@ -625,8 +652,17 @@ def _maintain_core(
         init=state.init,
         cur=c.cur,
         repair_counts=c.repair_counts,
+        active=state.active,
     )
     return new_state, stats
+
+
+def _dirty_2d(cfg: EngineConfig, dirty: Array) -> Array:
+    """Normalize a [V] vertex mask to the per-query [Q, V] schedule seed."""
+    dirty = jnp.asarray(dirty, bool)
+    if dirty.ndim == 1:
+        dirty = jnp.broadcast_to(dirty[None, :], (cfg.num_queries, dirty.shape[0]))
+    return dirty
 
 
 def maintain(
@@ -637,12 +673,16 @@ def maintain(
 ) -> tuple[EngineState, MaintainStats]:
     """One maintenance sweep after a δE batch (or initial computation).
 
-    ``dirty`` is the bool [V] mask of vertices whose in-edge set (or, for
-    degree-derived weights, whose incoming message weights) changed.  For the
-    initial computation pass ``dirty = ones`` with an empty store — the sweep
-    then *is* the static IFE run, recording change points as it goes.
+    ``dirty`` is the bool mask of vertices whose in-edge set (or, for
+    degree-derived weights, whose incoming message weights) changed — [V]
+    (broadcast to every query, the δE case) or [Q, V] (per-query: a
+    mid-stream ``register`` seeds only the new slot's row, which makes the
+    sweep the new query's initial computation while every other query is
+    scheduled for zero work).  For the initial computation pass
+    ``dirty = ones`` with an empty store — the sweep then *is* the static
+    IFE run, recording change points as it goes.
     """
-    return _maintain_core(cfg, state, g, dirty, axis=None)
+    return _maintain_core(cfg, state, g, _dirty_2d(cfg, dirty), axis=None)
 
 
 # --------------------------------------------------------------------------- sharded sweep
@@ -669,10 +709,15 @@ def _state_pspecs(state: EngineState) -> EngineState:
             else bloom_lib.BloomFilter(P(), drop.flt.num_hashes),
             det_overflow=P(),
             max_iter=P(),
+            # per-query selection rows replicate (the Q axis never shards)
+            params=None
+            if drop.params is None
+            else dr.DropParams(*([P()] * len(dr.DropParams._fields))),
         ),
         init=P(None, DATA_AXIS),
         cur=P(None, DATA_AXIS),
         repair_counts=P(None, DATA_AXIS),
+        active=P(),
     )
 
 
@@ -710,11 +755,11 @@ def maintain_sharded(
     fn = shard_map(
         partial(_maintain_core, cfg, axis=DATA_AXIS),
         mesh=mesh,
-        in_specs=(sspec, _graph_pspecs(g), P(DATA_AXIS)),
+        in_specs=(sspec, _graph_pspecs(g), P(None, DATA_AXIS)),
         out_specs=(sspec, _stats_pspecs()),
         check_rep=False,
     )
-    return fn(state, g, dirty)
+    return fn(state, g, _dirty_2d(cfg, dirty))
 
 
 def _batched_core_sharded(
@@ -771,6 +816,7 @@ def _batched_core_sharded(
         dirty = dirty | (
             jax.ops.segment_max(hit, dst_l, num_segments=num_local) > 0
         )
+    dirty = jnp.broadcast_to(dirty[None, :], (cfg.num_queries, num_local))
 
     new_state, stats = _maintain_core(cfg, state, g2, dirty, axis=axis)
     return new_state, g2, stats
@@ -926,7 +972,7 @@ def batched_step(
         hit = (tsrc[g2.src] & g2.valid).astype(jnp.int32)
         dirty = dirty | (jax.ops.segment_max(hit, g2.dst, num_segments=v) > 0)
 
-    new_state, stats = maintain(cfg, state, g2, dirty)
+    new_state, stats = maintain(cfg, state, g2, _dirty_2d(cfg, dirty))
     return new_state, g2, stats
 
 
@@ -965,6 +1011,14 @@ class DiffIFE:
     mirror kept in sync per chunk) and grows geometrically per shard — with
     a one-off re-trace, and a J-store row permutation under VDC — when a
     shard's cells run out.
+
+    **Query slot pool** (DESIGN.md §9): the leading Q axis is a padded pool
+    of query slots gated by ``state.active``.  :meth:`register_slot` claims a
+    free slot (growing the pool geometrically — one re-trace — when none is
+    left) and initializes the new query's trace *in-engine*: one maintenance
+    sweep whose per-query dirty mask seeds only the new row, so every other
+    registered query is scheduled for zero work.  :meth:`deregister_slot`
+    zeroes the slot's diff-store rows and returns the accounted bytes freed.
     """
 
     def __init__(
@@ -975,6 +1029,8 @@ class DiffIFE:
         *,
         batch_capacity: int = 32,
         mesh: Mesh | None = None,
+        active: np.ndarray | None = None,
+        drop_rows: list[dr.DropConfig] | None = None,
     ) -> None:
         self.cfg = cfg
         self.graph = graph
@@ -995,18 +1051,44 @@ class DiffIFE:
             if self._shard_index is not None
             else graph.capacity
         )
-        self.state = make_state(cfg, jnp.asarray(init, jnp.float32), num_rows)
+        self.state = make_state(
+            cfg,
+            jnp.asarray(init, jnp.float32),
+            num_rows,
+            active=active,
+            drop_rows=drop_rows,
+        )
+        # descending so pop() hands out the lowest free slot first
+        self._free_slots: list[int] = sorted(
+            (
+                q
+                for q in range(cfg.num_queries)
+                if active is not None and not bool(active[q])
+            ),
+            reverse=True,
+        )
+        self._build_dispatch()
+        self.last_stats: MaintainStats | None = None
+        # initial computation: every vertex dirty, empty store (inactive
+        # slots are masked out of the schedule by ``state.active``); an
+        # all-inactive pool (the session's deferred-register path) has
+        # nothing to compute and skips the dispatch entirely
+        if active is None or bool(np.asarray(active).any()):
+            self._run(np.ones(cfg.num_vertices, dtype=bool))
+
+    def _build_dispatch(self) -> None:
+        """(Re)jit the two dispatch paths for the current static config."""
         if self.num_shards > 1:
-            self._maintain = jax.jit(partial(maintain_sharded, cfg, mesh))
+            self._maintain = jax.jit(partial(maintain_sharded, self.cfg, self.mesh))
             self._step = jax.jit(
-                partial(batched_step_sharded, cfg, mesh), donate_argnums=(0, 1)
+                partial(batched_step_sharded, self.cfg, self.mesh),
+                donate_argnums=(0, 1),
             )
         else:
-            self._maintain = jax.jit(partial(maintain, cfg))
-            self._step = jax.jit(partial(batched_step, cfg), donate_argnums=(0, 1))
-        self.last_stats: MaintainStats | None = None
-        # initial computation: every vertex dirty, empty store
-        self._run(np.ones(cfg.num_vertices, dtype=bool))
+            self._maintain = jax.jit(partial(maintain, self.cfg))
+            self._step = jax.jit(
+                partial(batched_step, self.cfg), donate_argnums=(0, 1)
+            )
 
     # ------------------------------------------------------------ device views
     def _device_graph(self, snap: GraphSnapshot) -> GraphArrays:
@@ -1210,9 +1292,201 @@ class DiffIFE:
             ell_w=jnp.asarray(ell_wv),
         )
 
+    # ------------------------------------------------------- query slot pool
+    def _clear_slot_state(self, st: EngineState, slot: int) -> EngineState:
+        """Zero every per-slot row: diff stores, DroppedVT, repair counts."""
+
+        def clear_store(store: ds.DiffStore) -> ds.DiffStore:
+            return ds.DiffStore(
+                iters=store.iters.at[slot].set(ds.IMAX),
+                vals=store.vals.at[slot].set(0.0),
+                count=store.count.at[slot].set(0),
+            )
+
+        drop = st.drop
+        if drop.det is not None:
+            drop = drop._replace(det=clear_store(drop.det))
+        if drop.flt is not None:
+            drop = drop._replace(
+                flt=drop.flt._replace(drop.flt.bits.at[slot].set(False))
+            )
+        return st._replace(
+            dstore=clear_store(st.dstore),
+            jstore=None if st.jstore is None else clear_store(st.jstore),
+            drop=drop,
+            repair_counts=st.repair_counts.at[slot].set(0),
+        )
+
+    def register_slot(
+        self, init_row: np.ndarray | Array, drop_cfg: dr.DropConfig | None = None
+    ) -> int:
+        """Claim a slot for a new query and compute its trace in-engine.
+
+        ``init_row`` is the query's D_0 ([V]); ``drop_cfg`` its selection
+        policy (default: the engine's).  The slot's trace is initialized by
+        one maintenance sweep whose dirty mask seeds only the new row — the
+        sweep *is* the static IFE run for that query while every other
+        registered query is scheduled for zero work.  Returns the slot id.
+        """
+        return self.register_slots([(init_row, drop_cfg)])[0]
+
+    def register_slots(
+        self,
+        requests: list[tuple[np.ndarray | Array, dr.DropConfig | None]],
+    ) -> list[int]:
+        """Batch form of :meth:`register_slot`: claim one slot per
+        (init_row, drop_cfg) request and initialize ALL the new traces in a
+        single maintenance sweep (the per-query dirty mask seeds exactly the
+        new rows)."""
+        for _row, drop_cfg in requests:
+            if drop_cfg is not None and drop_cfg.enabled():
+                if drop_cfg.mode != self.cfg.drop.mode:
+                    raise ValueError(
+                        f"plan drop mode {drop_cfg.mode!r} does not match the "
+                        f"engine's DroppedVT representation "
+                        f"{self.cfg.drop.mode!r}"
+                    )
+        while len(self._free_slots) < len(requests):
+            self._grow_queries()
+        slots = []
+        st = self.state
+        for init_row, drop_cfg in requests:
+            slot = self._free_slots.pop()
+            row = jnp.asarray(init_row, jnp.float32)
+            st = self._clear_slot_state(st, slot)
+            st = st._replace(
+                init=st.init.at[slot].set(row),
+                cur=st.cur.at[slot].set(row),
+                active=st.active.at[slot].set(True),
+            )
+            if st.drop.params is not None:
+                st = st._replace(
+                    drop=st.drop._replace(
+                        params=dr.set_params_row(
+                            st.drop.params,
+                            slot,
+                            drop_cfg if drop_cfg is not None else self.cfg.drop,
+                        )
+                    )
+                )
+            slots.append(slot)
+        self.state = st
+        dirty = np.zeros((self.cfg.num_queries, self.cfg.num_vertices), bool)
+        dirty[slots] = True
+        self._run(dirty)
+        return slots
+
+    def deregister_slot(self, slot: int) -> int:
+        """Retire a query slot: zero its diff-store rows, free the slot.
+
+        Returns the accounted difference bytes released (the slot's D/J/
+        DroppedVT rows; Bloom bits are fixed-size and only zeroed).
+        """
+        if not bool(np.asarray(self.state.active)[slot]):
+            raise ValueError(f"slot {slot} is not active")
+        freed = self.slot_nbytes(slot)
+        ident = jnp.full(
+            (self.cfg.num_vertices,), self.cfg.semiring.identity, jnp.float32
+        )
+        st = self._clear_slot_state(self.state, slot)
+        st = st._replace(
+            init=st.init.at[slot].set(ident),
+            cur=st.cur.at[slot].set(ident),
+            active=st.active.at[slot].set(False),
+        )
+        if st.drop.params is not None:
+            st = st._replace(
+                drop=st.drop._replace(
+                    params=dr.set_params_row(st.drop.params, slot, dr.DropConfig())
+                )
+            )
+        if st.drop.det is not None:
+            # re-anchor the dropped-VT horizon from the surviving rows so a
+            # retired heavy-drop query stops inflating every later sweep's
+            # trip count (Bloom mode keeps the old anchor: bits can't delete)
+            live = jnp.where(st.drop.det.iters < ds.IMAX, st.drop.det.iters, -1)
+            st = st._replace(drop=st.drop._replace(max_iter=live.max()))
+        self.state = st
+        self._free_slots.append(slot)
+        self._free_slots.sort(reverse=True)
+        return freed
+
+    def slot_nbytes(self, slot: int) -> int:
+        """Accounted difference bytes held by one query slot."""
+        total = int(np.asarray(self.state.dstore.count[slot]).sum()) * 8
+        if self.state.jstore is not None:
+            total += int(np.asarray(self.state.jstore.count[slot]).sum()) * 8
+        if self.state.drop.det is not None:
+            total += int(np.asarray(self.state.drop.det.count[slot]).sum()) * 4
+        return total
+
+    def active_slots(self) -> list[int]:
+        return [int(q) for q in np.nonzero(np.asarray(self.state.active))[0]]
+
+    @property
+    def slot_capacity(self) -> int:
+        return self.cfg.num_queries
+
+    def _grow_queries(self) -> None:
+        """Double the slot pool (geometric growth, one re-trace).
+
+        Every [Q, ...] leaf pads along the query axis: stores stay empty,
+        init/cur pad with the semiring identity, new slots join the free
+        list.  The next dispatch retraces once for the new static Q.
+        """
+        old_q = self.cfg.num_queries
+        new_q = max(1, old_q * 2)
+        pad = new_q - old_q
+
+        def padq(x, fill, dtype=None):
+            x = np.asarray(x)
+            block = np.full((pad, *x.shape[1:]), fill, dtype or x.dtype)
+            return jnp.asarray(np.concatenate([x, block], axis=0))
+
+        def pad_store(store: ds.DiffStore) -> ds.DiffStore:
+            return ds.DiffStore(
+                iters=padq(store.iters, np.iinfo(np.int32).max),
+                vals=padq(store.vals, 0.0),
+                count=padq(store.count, 0),
+            )
+
+        st = self.state
+        drop = st.drop
+        if drop.det is not None:
+            drop = drop._replace(det=pad_store(drop.det))
+        if drop.flt is not None:
+            drop = drop._replace(flt=drop.flt._replace(padq(drop.flt.bits, False)))
+        if drop.params is not None:
+            fresh = dr.make_params(self.cfg.drop, pad)
+            drop = drop._replace(
+                params=dr.DropParams(
+                    *(
+                        jnp.concatenate([jnp.asarray(a), b])
+                        for a, b in zip(drop.params, fresh)
+                    )
+                )
+            )
+        ident = self.cfg.semiring.identity
+        self.state = EngineState(
+            dstore=pad_store(st.dstore),
+            jstore=None if st.jstore is None else pad_store(st.jstore),
+            drop=drop,
+            init=padq(st.init, ident),
+            cur=padq(st.cur, ident),
+            repair_counts=padq(st.repair_counts, 0),
+            active=padq(st.active, False),
+        )
+        self.cfg = dataclasses.replace(self.cfg, num_queries=new_q)
+        self._free_slots.extend(range(new_q - 1, old_q - 1, -1))
+        self._build_dispatch()
+
     # ------------------------------------------------------------------- api
     def answers(self) -> np.ndarray:
         return np.asarray(answers(self.cfg, self.state))
+
+    def answers_row(self, slot: int) -> np.ndarray:
+        """One query slot's final vertex states. [V]"""
+        return np.asarray(self.state.cur[slot])
 
     def nbytes(self) -> int:
         return nbytes_accounted(self.cfg, self.state)

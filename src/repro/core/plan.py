@@ -1,0 +1,248 @@
+"""Declarative query plans — the IR between query classes and engines.
+
+The paper's system is a *continuous query processor*: clients register and
+deregister recursive queries against a dynamic graph over time, with the
+memory optimizations (dropping, recomputation) tuned per query.  Following
+DBSP's split between a declarative circuit IR and its incremental executor,
+a :class:`QueryPlan` captures everything a query means — semiring, initial
+states, iteration bound, optional NFA product (RPQ), and its own
+:class:`~repro.core.dropping.DropConfig` — without naming an engine.  Any
+engine implementing the session protocol (`core/session.py`) can register a
+plan: the dense TPU engine, the host pointer engine, or SCRATCH.
+
+One plan is ONE query — one row of the dense engine's leading Q axis, one
+difference index of the host engine.  Multi-source helpers return a list of
+plans (one per source).
+
+Plans in one session must share a **family**: the static shape of the
+compiled sweep (semiring, iteration bound, PageRank weight derivation, NFA).
+:func:`family_key` is that compatibility key; per-query knobs (source,
+drop policy) stay free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+from repro.core import dropping as dr
+from repro.core import semiring as sr
+
+INF = np.float32(np.inf)
+
+
+# --------------------------------------------------------------------------- NFA
+@dataclasses.dataclass(frozen=True)
+class NFA:
+    """Nondeterministic automaton over edge labels.
+
+    ``delta``: label → [(state, state')] transitions; used to build the
+    product graph (v, q) whose reachability answers the RPQ.
+    """
+
+    num_states: int
+    delta: dict[int, list[tuple[int, int]]]
+    start: int
+    accept: tuple[int, ...]
+
+    @staticmethod
+    def star(label: int) -> "NFA":
+        """Q1 = a*"""
+        return NFA(1, {label: [(0, 0)]}, 0, (0,))
+
+    @staticmethod
+    def concat_star(a: int, b: int) -> "NFA":
+        """Q2 = a ∘ b*"""
+        return NFA(2, {a: [(0, 1)], b: [(1, 1)]}, 0, (1,))
+
+    @staticmethod
+    def chain(labels: Sequence[int]) -> "NFA":
+        """Q3 = l1 ∘ l2 ∘ … ∘ lk (fixed-length path template)."""
+        delta: dict[int, list[tuple[int, int]]] = {}
+        for j, lbl in enumerate(labels):
+            delta.setdefault(int(lbl), []).append((j, j + 1))
+        return NFA(len(labels) + 1, delta, 0, (len(labels),))
+
+    def key(self) -> tuple:
+        """Hashable structural identity (``delta`` is a dict)."""
+        delta = tuple(
+            (lbl, tuple(pairs)) for lbl, pairs in sorted(self.delta.items())
+        )
+        return (self.num_states, delta, self.start, self.accept)
+
+    def __hash__(self) -> int:  # delta is a dict → default frozen hash fails
+        return hash(self.key())
+
+
+# --------------------------------------------------------------------------- init spec
+@dataclasses.dataclass(frozen=True)
+class InitSpec:
+    """How to build a query's D_0 row (the implicit iteration-0 diffs).
+
+    ``kind``:
+      * ``"source"``   — ``value`` at ``source``, ``fill`` elsewhere
+        (SSSP/K-hop/RPQ; for RPQ ``source`` is the product-space id).
+      * ``"labels"``   — vertex id as the initial label (WCC).
+      * ``"constant"`` — ``fill`` everywhere (PageRank's all-ones).
+    """
+
+    kind: str = "source"
+    source: int | None = None
+    value: float = 0.0
+    fill: float = float(INF)
+
+    def build(self, num_vertices: int) -> np.ndarray:
+        if self.kind == "source":
+            row = np.full(num_vertices, self.fill, dtype=np.float32)
+            row[int(self.source)] = self.value
+            return row
+        if self.kind == "labels":
+            return np.arange(num_vertices, dtype=np.float32)
+        if self.kind == "constant":
+            return np.full(num_vertices, self.fill, dtype=np.float32)
+        raise ValueError(f"unknown init kind {self.kind!r}")
+
+
+# --------------------------------------------------------------------------- plan
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One registered query, declaratively.
+
+    Engine-independent: the session maps a plan onto whichever engine backs
+    it.  ``drop`` is the query's OWN dropping policy (paper §5 is tuned per
+    query/operator); the DroppedVT *representation* (det store vs Bloom) is
+    session-level because it fixes array shapes.
+    """
+
+    kind: str  # "sssp" | "khop" | "wcc" | "pagerank" | "rpq"
+    semiring: sr.Semiring
+    init: InitSpec
+    max_iters: int
+    drop: dr.DropConfig = dataclasses.field(default_factory=dr.DropConfig)
+    nfa: NFA | None = None
+    # PageRank: edge weights derive from out-degrees (alpha / outdeg)
+    weight_from_degree: bool = False
+    alpha: float = 0.85
+
+    def family_key(self) -> tuple:
+        """Static-compatibility key: plans sharing a session must agree on
+        everything that shapes the compiled sweep (per-query knobs — source,
+        drop selection — stay free)."""
+        s = self.semiring
+        return (
+            s.name,
+            s.reduce,
+            s.identity,
+            s.carry_prev,
+            s.base,
+            s.hop_cap,
+            int(self.max_iters),
+            bool(self.weight_from_degree),
+            float(self.alpha),
+            None if self.nfa is None else self.nfa.key(),
+        )
+
+    def build_init(self, num_vertices: int) -> np.ndarray:
+        """D_0 row over the engine's vertex space.
+
+        With an NFA, ``num_vertices`` is the product-space count and the
+        source maps to its (source, start-state) product id.
+        """
+        if self.nfa is not None and self.init.kind == "source":
+            spec = dataclasses.replace(
+                self.init,
+                source=int(self.init.source) * self.nfa.num_states + self.nfa.start,
+            )
+            return spec.build(num_vertices)
+        return self.init.build(num_vertices)
+
+
+# --------------------------------------------------------------------------- builders
+def sssp(
+    source: int,
+    *,
+    max_iters: int = 64,
+    drop: dr.DropConfig | None = None,
+) -> QueryPlan:
+    """Single-source shortest-distance field (Bellman-Ford IFE)."""
+    return QueryPlan(
+        kind="sssp",
+        semiring=sr.min_plus(),
+        init=InitSpec(kind="source", source=int(source)),
+        max_iters=int(max_iters),
+        drop=drop or dr.DropConfig(),
+    )
+
+
+def khop(
+    source: int,
+    k: int = 5,
+    *,
+    drop: dr.DropConfig | None = None,
+) -> QueryPlan:
+    """Vertices within ≤ k hops of the source; iterations bounded by k."""
+    return QueryPlan(
+        kind="khop",
+        semiring=sr.min_hop(float(k)),
+        init=InitSpec(kind="source", source=int(source)),
+        max_iters=int(k),
+        drop=drop or dr.DropConfig(),
+    )
+
+
+def wcc(
+    *,
+    max_iters: int = 128,
+    drop: dr.DropConfig | None = None,
+) -> QueryPlan:
+    """Weakly connected components: min-label propagation (the caller's
+    graph must carry both edge directions)."""
+    return QueryPlan(
+        kind="wcc",
+        semiring=sr.min_label(),
+        init=InitSpec(kind="labels"),
+        max_iters=int(max_iters),
+        drop=drop or dr.DropConfig(),
+    )
+
+
+def pagerank(
+    *,
+    iters: int = 10,
+    alpha: float = 0.85,
+    drop: dr.DropConfig | None = None,
+) -> QueryPlan:
+    """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2)."""
+    return QueryPlan(
+        kind="pagerank",
+        semiring=sr.pagerank(alpha),
+        init=InitSpec(kind="constant", fill=1.0),
+        max_iters=int(iters),
+        drop=drop or dr.DropConfig(),
+        weight_from_degree=True,
+        alpha=float(alpha),
+    )
+
+
+def rpq(
+    source: int,
+    nfa: NFA,
+    *,
+    max_iters: int = 64,
+    drop: dr.DropConfig | None = None,
+) -> QueryPlan:
+    """Regular path query: reachability on the NFA-product graph.
+
+    The session owns the product construction; ``init.source`` is stored in
+    *base* space and mapped to (source, start-state) at registration.
+    """
+    return QueryPlan(
+        kind="rpq",
+        semiring=sr.min_hop(),
+        init=InitSpec(kind="source", source=int(source)),
+        max_iters=int(max_iters),
+        drop=drop or dr.DropConfig(),
+        nfa=nfa,
+    )

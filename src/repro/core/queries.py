@@ -1,28 +1,36 @@
-"""Query classes from the paper (§6.1.2) on top of the Diff-IFE engine.
+"""Query classes from the paper (§6.1.2) — thin builders over the plan IR.
 
-Each query family supplies its semiring, initial states (the implicit
-iteration-0 difference set) and an answer extractor.  SPSP/SSSP/K-hop/RPQ are
-*continuous registered queries* (Q of them batched in the leading axis); WCC
-and PageRank are single batch computations (Q = 1).
+Each query family is a :mod:`repro.core.plan` builder; the functions here
+assemble a *batch* of plans and stand up the dense engine for them (the
+legacy one-shot API: the query set is fixed at construction).  For a runtime
+query lifecycle — register/deregister mid-stream, engine choice — use
+:class:`repro.core.session.CQPSession` with the same plans.
+
+SPSP/SSSP/K-hop/RPQ are *continuous registered queries* (Q of them batched
+in the leading axis); WCC and PageRank are single batch computations (Q=1).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Sequence
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dropping as dr
-from repro.core import semiring as sr
+from repro.core import plan as qplan
 from repro.core.engine import DiffIFE, EngineConfig
-from repro.core.graph import DynamicGraph, product_graph
+from repro.core.graph import DynamicGraph
+from repro.core.plan import NFA  # noqa: F401  (legacy re-export)
+from repro.core.session import CQPSession, engine_config_for
 
 INF = np.float32(np.inf)
 
 
-def _source_init(sources: Sequence[int], num_vertices: int, value: float = 0.0) -> np.ndarray:
+def _source_init(
+    sources: Sequence[int], num_vertices: int, value: float = 0.0
+) -> np.ndarray:
+    """Legacy helper (used by :mod:`repro.core.landmark`): stacked source
+    init rows — the plan-IR form is ``InitSpec(kind="source")``."""
     init = np.full((len(sources), num_vertices), INF, dtype=np.float32)
     for q, s in enumerate(sources):
         init[q, int(s)] = value
@@ -32,7 +40,7 @@ def _source_init(sources: Sequence[int], num_vertices: int, value: float = 0.0) 
 def _engine_cfg(
     num_queries: int,
     num_vertices: int,
-    semiring: sr.Semiring,
+    semiring,
     *,
     max_iters: int,
     mode: str = "jod",
@@ -40,6 +48,7 @@ def _engine_cfg(
     weight_from_degree: bool = False,
     **kw,
 ) -> EngineConfig:
+    """Legacy helper (used by :mod:`repro.core.landmark`)."""
     return EngineConfig(
         num_queries=num_queries,
         num_vertices=num_vertices,
@@ -52,6 +61,62 @@ def _engine_cfg(
     )
 
 
+def engine_from_plans(
+    graph: DynamicGraph,
+    plans: Sequence[qplan.QueryPlan],
+    *,
+    batch_capacity: int = 32,
+    mesh=None,
+    mode: str = "jod",
+    drop: dr.DropConfig | None = None,
+    store_capacity: int = 16,
+    jstore_capacity: int = 8,
+    backend: str = "coo",
+    ell_block_v: int = 128,
+    interpret: bool | None = None,
+) -> DiffIFE:
+    """Dense engine for a fixed batch of same-family plans (legacy shape:
+    Q slots, all active, no padding).  ``drop`` is the session-level
+    DroppedVT representation; each plan's own ``drop`` supplies its
+    per-query selection row."""
+    first = plans[0]
+    for p in plans[1:]:
+        if p.family_key() != first.family_key():
+            raise ValueError(
+                "plans in one engine batch must share a family "
+                f"({p.family_key()} vs {first.family_key()})"
+            )
+    spec = drop or next((p.drop for p in plans if p.drop.enabled()), dr.DropConfig())
+    for p in plans:
+        if p.drop.enabled() and p.drop.mode != spec.mode:
+            raise ValueError(
+                f"plan drop mode {p.drop.mode!r} does not match the "
+                f"engine's DroppedVT representation {spec.mode!r}"
+            )
+    v = graph.num_vertices
+    cfg = engine_config_for(
+        first,
+        num_queries=len(plans),
+        num_vertices=v,
+        mode=mode,
+        drop=spec,
+        store_capacity=store_capacity,
+        jstore_capacity=jstore_capacity,
+        backend=backend,
+        ell_block_v=ell_block_v,
+        interpret=interpret,
+    )
+    init = np.stack([p.build_init(v) for p in plans])
+    return DiffIFE(
+        cfg,
+        graph,
+        init,
+        batch_capacity=batch_capacity,
+        mesh=mesh,
+        drop_rows=[p.drop for p in plans],
+    )
+
+
 # --------------------------------------------------------------------------- SSSP / SPSP
 def sssp(
     graph: DynamicGraph,
@@ -60,15 +125,15 @@ def sssp(
     max_iters: int = 64,
     batch_capacity: int = 32,
     mesh=None,
+    drop: dr.DropConfig | None = None,
     **kw,
 ) -> DiffIFE:
     """Q concurrent single-source shortest-distance fields (Bellman-Ford IFE)."""
-    cfg = _engine_cfg(
-        len(sources), graph.num_vertices, sr.min_plus(), max_iters=max_iters, **kw
-    )
-    return DiffIFE(
-        cfg, graph, _source_init(sources, graph.num_vertices),
-        batch_capacity=batch_capacity, mesh=mesh,
+    plans = [
+        qplan.sssp(int(s), max_iters=max_iters, drop=drop) for s in sources
+    ]
+    return engine_from_plans(
+        graph, plans, batch_capacity=batch_capacity, mesh=mesh, drop=drop, **kw
     )
 
 
@@ -86,15 +151,13 @@ def khop(
     *,
     batch_capacity: int = 32,
     mesh=None,
+    drop: dr.DropConfig | None = None,
     **kw,
 ) -> DiffIFE:
     """Vertices within ≤ k hops of each source; iterations bounded by k."""
-    cfg = _engine_cfg(
-        len(sources), graph.num_vertices, sr.min_hop(float(k)), max_iters=k, **kw
-    )
-    return DiffIFE(
-        cfg, graph, _source_init(sources, graph.num_vertices),
-        batch_capacity=batch_capacity, mesh=mesh,
+    plans = [qplan.khop(int(s), k=int(k), drop=drop) for s in sources]
+    return engine_from_plans(
+        graph, plans, batch_capacity=batch_capacity, mesh=mesh, drop=drop, **kw
     )
 
 
@@ -104,15 +167,20 @@ def khop_reachable(engine: DiffIFE) -> np.ndarray:
 
 # --------------------------------------------------------------------------- WCC
 def wcc(
-    graph: DynamicGraph, *, max_iters: int = 128, batch_capacity: int = 32,
-    mesh=None, **kw
+    graph: DynamicGraph,
+    *,
+    max_iters: int = 128,
+    batch_capacity: int = 32,
+    mesh=None,
+    drop: dr.DropConfig | None = None,
+    **kw,
 ) -> DiffIFE:
     """Weakly connected components: min-label propagation on the symmetrized
     graph (caller supplies a graph with both edge directions)."""
-    v = graph.num_vertices
-    init = np.arange(v, dtype=np.float32)[None, :]
-    cfg = _engine_cfg(1, v, sr.min_label(), max_iters=max_iters, **kw)
-    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity, mesh=mesh)
+    plans = [qplan.wcc(max_iters=max_iters, drop=drop)]
+    return engine_from_plans(
+        graph, plans, batch_capacity=batch_capacity, mesh=mesh, drop=drop, **kw
+    )
 
 
 # --------------------------------------------------------------------------- PageRank
@@ -123,62 +191,24 @@ def pagerank(
     alpha: float = 0.85,
     batch_capacity: int = 32,
     mesh=None,
+    drop: dr.DropConfig | None = None,
     **kw,
 ) -> DiffIFE:
     """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2)."""
-    v = graph.num_vertices
-    init = np.ones((1, v), dtype=np.float32)
-    cfg = _engine_cfg(
-        1,
-        v,
-        sr.pagerank(alpha),
-        max_iters=iters,
-        weight_from_degree=True,
-        alpha=alpha,
-        **kw,
+    plans = [qplan.pagerank(iters=iters, alpha=alpha, drop=drop)]
+    return engine_from_plans(
+        graph, plans, batch_capacity=batch_capacity, mesh=mesh, drop=drop, **kw
     )
-    return DiffIFE(cfg, graph, init, batch_capacity=batch_capacity, mesh=mesh)
 
 
 # --------------------------------------------------------------------------- RPQ
-@dataclasses.dataclass(frozen=True)
-class NFA:
-    """Nondeterministic automaton over edge labels.
-
-    ``delta``: label → [(state, state')] transitions; used to build the
-    product graph (v, q) whose reachability answers the RPQ.
-    """
-
-    num_states: int
-    delta: dict[int, list[tuple[int, int]]]
-    start: int
-    accept: tuple[int, ...]
-
-    @staticmethod
-    def star(label: int) -> "NFA":
-        """Q1 = a*"""
-        return NFA(1, {label: [(0, 0)]}, 0, (0,))
-
-    @staticmethod
-    def concat_star(a: int, b: int) -> "NFA":
-        """Q2 = a ∘ b*"""
-        return NFA(2, {a: [(0, 1)], b: [(1, 1)]}, 0, (1,))
-
-    @staticmethod
-    def chain(labels: Sequence[int]) -> "NFA":
-        """Q3 = l1 ∘ l2 ∘ … ∘ lk (fixed-length path template)."""
-        delta: dict[int, list[tuple[int, int]]] = {}
-        for j, lbl in enumerate(labels):
-            delta.setdefault(int(lbl), []).append((j, j + 1))
-        return NFA(len(labels) + 1, delta, 0, (len(labels),))
-
-
 class RPQ:
     """Continuous RPQ evaluation via Diff-IFE on the NFA-product graph.
 
-    Base-graph updates are translated into product-graph updates (one product
-    edge per matching transition); the engine then maintains reachability
-    (min-hop semiring) from (source, start-state).
+    Legacy wrapper over :class:`~repro.core.session.CQPSession`: the session
+    owns the product-graph construction and translates base-graph updates
+    into product updates (one product edge per matching NFA transition); the
+    engine maintains reachability (min-hop semiring) from (source, start).
     """
 
     def __init__(
@@ -190,54 +220,45 @@ class RPQ:
         max_iters: int = 64,
         product_capacity: int | None = None,
         batch_capacity: int = 32,
+        drop: dr.DropConfig | None = None,
         **kw,
     ) -> None:
         self.base = graph
         self.nfa = nfa
         self.sources = [int(s) for s in sources]
-        n, src, dst, w, _ = product_graph(graph, nfa.delta, nfa.num_states)
-        cap = product_capacity
-        if cap is None:
-            # worst case: every base slot × max transitions per label
-            per = max((len(v) for v in nfa.delta.values()), default=1)
-            cap = max(16, graph.capacity * per)
-        self.pgraph = DynamicGraph(
-            n, list(zip(src.tolist(), dst.tolist(), w.tolist())), capacity=cap
+        self.session = CQPSession(
+            graph,
+            engine="dense",
+            batch_capacity=batch_capacity,
+            product_capacity=product_capacity,
+            min_slots=len(self.sources),
+            drop=drop,
+            **kw,
         )
-        init = _source_init(
-            [s * nfa.num_states + nfa.start for s in self.sources], n
+        self.handles = self.session.register_many(
+            [
+                qplan.rpq(s, nfa, max_iters=max_iters, drop=drop)
+                for s in self.sources
+            ]
         )
-        cfg = _engine_cfg(len(sources), n, sr.min_hop(), max_iters=max_iters, **kw)
-        self.engine = DiffIFE(cfg, self.pgraph, init, batch_capacity=batch_capacity)
+
+    @property
+    def pgraph(self) -> DynamicGraph:
+        return self.session._egraph
+
+    @property
+    def engine(self) -> DiffIFE:
+        return self.session._impl.impl
 
     def _translate(self, updates) -> list[tuple[int, int, int, float, int]]:
-        out = []
-        for (u, v, lbl, w, sign) in updates:
-            for (q, q2) in self.nfa.delta.get(int(lbl), ()):  # non-matching labels: no-op
-                out.append(
-                    (
-                        int(u) * self.nfa.num_states + q,
-                        int(v) * self.nfa.num_states + q2,
-                        0,
-                        1.0,
-                        int(sign),
-                    )
-                )
-        return out
+        return self.session._translate(updates)
 
     def apply_updates(self, updates):
-        self.base.apply_batch(updates)
-        pu = self._translate(updates)
-        if pu:
-            return self.engine.apply_updates(pu)
-        return self.engine.last_stats
+        return self.session.apply_updates(updates)
 
     def reachable(self) -> np.ndarray:
         """bool [Q, V_base]: which base vertices match the RPQ per source."""
-        d = self.engine.answers().reshape(
-            len(self.sources), self.base.num_vertices, self.nfa.num_states
-        )
-        return np.isfinite(d[:, :, list(self.nfa.accept)]).any(axis=-1)
+        return np.stack([self.session.reachable(h) for h in self.handles])
 
     def nbytes(self) -> int:
-        return self.engine.nbytes()
+        return self.session.nbytes()

@@ -3,17 +3,24 @@
 Identical step function to the engine's JOD path — the same "incremental"
 fixpoint loop the original DD paper calls the static algorithm — but no
 difference sets are kept (zero maintenance memory, maximal recompute cost).
+
+:class:`ScratchEngine` is the session-protocol form (`core/session.py`):
+queries register/deregister as :class:`~repro.core.plan.QueryPlan` rows of
+a host-side init matrix; every update batch re-runs the static IFE for the
+whole matrix.  :class:`Scratch` remains the fixed-batch legacy wrapper.
 """
 
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
-from typing import NamedTuple, Sequence
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import plan as qp
 from repro.core.engine import EngineConfig, GraphArrays, ife_step
 from repro.core.graph import DynamicGraph
 
@@ -73,3 +80,103 @@ class Scratch:
 def scratch_like(engine_cfg: EngineConfig, graph: DynamicGraph, init) -> Scratch:
     """Scratch twin of a Diff-IFE engine (same semiring/query batch)."""
     return Scratch(engine_cfg, graph, init)
+
+
+class ScratchEngine:
+    """From-scratch CQP with a runtime query lifecycle (session protocol).
+
+    Registered plans occupy rows of a host-side init matrix; re-execution
+    covers all live rows in one jitted run (a row-count change retraces —
+    SCRATCH is the baseline, not the throughput path).  ``nbytes`` is 0 by
+    construction: no differences are ever maintained.
+    """
+
+    def __init__(self, cfg: EngineConfig, graph: DynamicGraph) -> None:
+        self.cfg = cfg  # num_queries tracks the slot count
+        self.graph = graph
+        self.plans: dict[int, qp.QueryPlan] = {}
+        self._rows: dict[int, np.ndarray] = {}
+        self._free: list[int] = []
+        self._num_slots = 0
+        self.g = GraphArrays.from_snapshot(graph.snapshot(), backend=cfg.backend)
+        self._answers = np.zeros((0, cfg.num_vertices), np.float32)
+        self.last_stats: ScratchStats | None = None
+
+    # ---------------------------------------------------------------- slots
+    def register_plan(self, plan: qp.QueryPlan) -> int:
+        return self.register_plans([plan])[0]
+
+    def register_plans(self, plans: list[qp.QueryPlan]) -> list[int]:
+        """Batch registration: claim all slots first, re-execute ONCE (a
+        per-plan rerun would retrace for every new row count)."""
+        slots = []
+        for plan in plans:
+            slot = self._free.pop() if self._free else self._num_slots
+            self._num_slots = max(self._num_slots, slot + 1)
+            self.plans[slot] = plan
+            self._rows[slot] = plan.build_init(self.cfg.num_vertices)
+            slots.append(slot)
+        self._rerun()
+        return slots
+
+    def deregister_plan(self, slot: int) -> int:
+        if slot not in self.plans:
+            raise ValueError(f"slot {slot} is not registered")
+        del self.plans[slot], self._rows[slot]
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        # keep answers() slot-aligned with the other engines: a freed slot
+        # reads as the identity row, without re-running the computation
+        if slot < self._answers.shape[0]:
+            self._answers[slot] = self.cfg.semiring.identity
+        if not self.plans:
+            self._answers = np.zeros((0, self.cfg.num_vertices), np.float32)
+        return 0  # SCRATCH holds no differences
+
+    def active_slots(self) -> list[int]:
+        return sorted(self.plans)
+
+    # ------------------------------------------------------------ execution
+    def _init_matrix(self) -> np.ndarray:
+        """[num_slots, V]; retired slots re-run as identity rows (their
+        lanes are dead weight until the slot is reused — SCRATCH is the
+        recompute-everything baseline by definition)."""
+        ident = self.cfg.semiring.identity
+        init = np.full(
+            (self._num_slots, self.cfg.num_vertices), ident, np.float32
+        )
+        for slot, row in self._rows.items():
+            init[slot] = row
+        return init
+
+    def _rerun(self) -> None:
+        if not self.plans:
+            self._answers = np.zeros((0, self.cfg.num_vertices), np.float32)
+            return
+        cfg = dataclasses.replace(self.cfg, num_queries=self._num_slots)
+        ans, self.last_stats = scratch_run(cfg, self.g, jnp.asarray(self._init_matrix()))
+        self._answers = np.array(ans)  # writable copy: deregister blanks rows
+
+    def apply_updates(self, updates):
+        self.graph.apply_batch(updates)
+        self.g = GraphArrays.from_snapshot(
+            self.graph.snapshot(), backend=self.cfg.backend
+        )
+        self._rerun()
+        return self.last_stats
+
+    def apply_updates_batched(self, updates, batch_size: int | None = None):
+        del batch_size
+        return self.apply_updates(list(updates))
+
+    # ------------------------------------------------------------------ api
+    def answers_row(self, slot: int) -> np.ndarray:
+        if slot not in self.plans:
+            raise ValueError(f"slot {slot} is not registered")
+        return self._answers[slot].copy()
+
+    def answers(self) -> np.ndarray:
+        return self._answers.copy()
+
+    def nbytes(self) -> int:
+        return 0  # no differences maintained

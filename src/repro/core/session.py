@@ -1,0 +1,509 @@
+"""CQPSession — the continuous query processor's client facade.
+
+The paper's system serves *registered* queries: clients register and
+deregister recursive queries against one dynamic graph over time while δE
+batches stream in.  ``CQPSession`` is that lifecycle, decoupled from any
+engine (DBSP's plan/executor split):
+
+    sess = CQPSession(graph, engine="dense")            # or "host"/"scratch"
+    h0 = sess.register(plan.sssp(0))
+    h1 = sess.register(plan.khop(3, k=4))               # mid-stream is fine
+    sess.apply_updates_batched(update_log)
+    d = sess.answers(h0)                                # [V]
+    freed = sess.deregister(h1)                         # bytes released
+
+Every engine implements one :class:`EngineProtocol` —
+
+    * ``"dense"``   — the TPU engine (`core/engine.py`): a padded query-slot
+      pool in the leading Q axis (active mask, host free-list, geometric
+      regrow with a one-off re-trace); optionally vertex-sharded over a mesh.
+    * ``"host"``    — the pointer engine (`core/sparse_engine.py`).
+    * ``"scratch"`` — from-scratch re-execution (`core/scratch.py`).
+
+so parity tests and the serving driver are engine-agnostic.
+
+Plans in one session must share a **family** (`QueryPlan.family_key`): the
+semiring, iteration bound, PageRank weight derivation and NFA fix the shape
+of the compiled sweep.  Per-query knobs — source vertex, drop selection
+policy — are free per registration.  The DroppedVT *representation* (Det
+store vs Bloom filter and capacities) is fixed per session by ``drop`` (or
+inferred from the first registered plan).
+
+RPQ plans carry an NFA: the session owns the product-graph construction and
+translates base-graph updates into product updates, so the engines never
+know about automata.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.core import dropping as dr
+from repro.core import plan as qp
+from repro.core.engine import DiffIFE, EngineConfig, MaintainStats
+from repro.core.graph import DynamicGraph, product_graph
+from repro.core.scratch import ScratchEngine
+from repro.core.sparse_engine import SparseDiffIFE
+
+ENGINES = ("dense", "host", "scratch")
+
+
+# --------------------------------------------------------------------------- protocol
+@runtime_checkable
+class EngineProtocol(Protocol):
+    """What a session expects from an engine: a runtime query lifecycle on
+    one dynamic graph.  ``register_plan`` computes the new query's state
+    in-engine; ``deregister_plan`` returns the accounted bytes released."""
+
+    def register_plan(self, plan: qp.QueryPlan) -> int: ...
+
+    def deregister_plan(self, slot: int) -> int: ...
+
+    def apply_updates(self, updates): ...
+
+    def apply_updates_batched(self, updates, batch_size: int | None = None): ...
+
+    def answers_row(self, slot: int) -> np.ndarray: ...
+
+    def answers(self) -> np.ndarray: ...
+
+    def nbytes(self) -> int: ...
+
+    def active_slots(self) -> list[int]: ...
+
+
+def engine_config_for(
+    first_plan: qp.QueryPlan,
+    *,
+    num_queries: int,
+    num_vertices: int,
+    mode: str = "jod",
+    drop: dr.DropConfig | None = None,
+    store_capacity: int = 16,
+    jstore_capacity: int = 8,
+    backend: str = "coo",
+    ell_block_v: int = 128,
+    interpret: bool | None = None,
+) -> EngineConfig:
+    """The one place a plan family becomes an :class:`EngineConfig` — shared
+    by the dense adapter, the scratch engine, and the legacy fixed-batch
+    builder (`queries.engine_from_plans`)."""
+    return EngineConfig(
+        num_queries=num_queries,
+        num_vertices=num_vertices,
+        max_iters=int(first_plan.max_iters),
+        semiring=first_plan.semiring,
+        mode=mode,
+        store_capacity=store_capacity,
+        jstore_capacity=jstore_capacity,
+        drop=drop or dr.DropConfig(),
+        weight_from_degree=first_plan.weight_from_degree,
+        alpha=first_plan.alpha,
+        backend=backend,
+        ell_block_v=ell_block_v,
+        interpret=interpret,
+    )
+
+
+# --------------------------------------------------------------------------- dense adapter
+class DenseEngine:
+    """Session protocol over :class:`DiffIFE`'s query-slot pool."""
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        first_plan: qp.QueryPlan,
+        *,
+        drop_spec: dr.DropConfig,
+        mode: str = "jod",
+        backend: str = "coo",
+        store_capacity: int = 16,
+        jstore_capacity: int = 8,
+        ell_block_v: int = 128,
+        interpret: bool | None = None,
+        batch_capacity: int = 32,
+        mesh=None,
+        min_slots: int = 1,
+    ) -> None:
+        q_cap = 1 << (max(int(min_slots), 1) - 1).bit_length()
+        v = graph.num_vertices
+        cfg = engine_config_for(
+            first_plan,
+            num_queries=q_cap,
+            num_vertices=v,
+            mode=mode,
+            drop=drop_spec,
+            store_capacity=store_capacity,
+            jstore_capacity=jstore_capacity,
+            backend=backend,
+            ell_block_v=ell_block_v,
+            interpret=interpret,
+        )
+        init = np.full((q_cap, v), first_plan.semiring.identity, np.float32)
+        self.impl = DiffIFE(
+            cfg,
+            graph,
+            init,
+            batch_capacity=batch_capacity,
+            mesh=mesh,
+            active=np.zeros(q_cap, bool),
+        )
+
+    def register_plan(self, plan: qp.QueryPlan) -> int:
+        return self.impl.register_slot(
+            plan.build_init(self.impl.cfg.num_vertices), plan.drop
+        )
+
+    def register_plans(self, plans: list[qp.QueryPlan]) -> list[int]:
+        v = self.impl.cfg.num_vertices
+        return self.impl.register_slots(
+            [(p.build_init(v), p.drop) for p in plans]
+        )
+
+    def deregister_plan(self, slot: int) -> int:
+        return self.impl.deregister_slot(slot)
+
+    def apply_updates(self, updates):
+        return self.impl.apply_updates(updates)
+
+    def apply_updates_batched(self, updates, batch_size: int | None = None):
+        return self.impl.apply_updates_batched(updates, batch_size=batch_size)
+
+    def answers_row(self, slot: int) -> np.ndarray:
+        return self.impl.answers_row(slot)
+
+    def answers(self) -> np.ndarray:
+        return self.impl.answers()
+
+    def nbytes(self) -> int:
+        return self.impl.nbytes()
+
+    def active_slots(self) -> list[int]:
+        return self.impl.active_slots()
+
+
+# --------------------------------------------------------------------------- handles
+@dataclasses.dataclass(frozen=True)
+class QueryHandle:
+    """Opaque ticket for one registered query (stable across slot reuse)."""
+
+    qid: int
+    plan: qp.QueryPlan
+
+
+# --------------------------------------------------------------------------- session
+class CQPSession:
+    """Runtime query lifecycle over one dynamic graph and one engine.
+
+    See the module docstring for the model.  Keyword knobs mirror the dense
+    engine's; ``"host"``/``"scratch"`` accept and ignore the dense-only ones
+    except ``mesh``, which they reject (the sharded sweep is dense-only).
+    """
+
+    def __init__(
+        self,
+        graph: DynamicGraph,
+        *,
+        engine: str = "dense",
+        mesh=None,
+        mode: str = "jod",
+        backend: str = "coo",
+        drop: dr.DropConfig | None = None,
+        store_capacity: int = 16,
+        jstore_capacity: int = 8,
+        ell_block_v: int = 128,
+        interpret: bool | None = None,
+        batch_capacity: int = 32,
+        min_slots: int = 1,
+        product_capacity: int | None = None,
+    ) -> None:
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+        if mesh is not None and engine != "dense":
+            raise ValueError("mesh sharding is a dense-engine feature")
+        self.graph = graph
+        self.engine_kind = engine
+        self.mesh = mesh
+        self._kw = dict(
+            mode=mode,
+            backend=backend,
+            store_capacity=store_capacity,
+            jstore_capacity=jstore_capacity,
+            ell_block_v=ell_block_v,
+            interpret=interpret,
+            batch_capacity=batch_capacity,
+            min_slots=min_slots,
+        )
+        self._drop_spec = drop
+        self._product_capacity = product_capacity
+        self._impl: EngineProtocol | None = None
+        self._family: tuple | None = None
+        self._nfa: qp.NFA | None = None
+        self._egraph: DynamicGraph = graph  # product graph under an NFA family
+        self._handles: dict[int, int] = {}  # qid → engine slot
+        self._plans: dict[int, qp.QueryPlan] = {}
+        self._next_qid = 0
+        # lifetime counters (stats())
+        self.registered_total = 0
+        self.deregistered_total = 0
+        self.updates_applied = 0
+        self.bytes_freed_total = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def register(self, plan: qp.QueryPlan) -> QueryHandle:
+        """Register one query; its trace is computed in-engine (mid-stream
+        registration converges to the same answers as from-start)."""
+        return self.register_many([plan])[0]
+
+    def register_many(self, plans: list[qp.QueryPlan]) -> list[QueryHandle]:
+        """Register a batch of queries — the dense engine initializes all of
+        their traces in ONE maintenance sweep.
+
+        Atomic: a rejected batch (family mismatch, drop-mode conflict, an
+        engine that cannot run the family) leaves the session exactly as it
+        was — including across the deferred first engine build.
+        """
+        if not plans:
+            return []
+        # validate the WHOLE batch before committing any session state
+        base = self._family if self._family is not None else plans[0].family_key()
+        spec = self._drop_spec
+        if spec is None and self._impl is None:
+            spec = next((p.drop for p in plans if p.drop.enabled()), None)
+        for plan in plans:
+            self._check_family(plan, base)
+            if plan.drop.enabled() and spec is not None and plan.drop.mode != spec.mode:
+                raise ValueError(
+                    f"plan drop mode {plan.drop.mode!r} does not match the "
+                    f"session's DroppedVT representation {spec.mode!r}"
+                )
+        fresh = self._impl is None
+        saved = (self._family, self._nfa, self._drop_spec, self._egraph)
+        if self._family is None:
+            self._family = base
+            self._nfa = plans[0].nfa
+        slots: list[int] = []
+        try:
+            if fresh:
+                self._build_engine(plans)
+            if hasattr(self._impl, "register_plans"):
+                slots = self._impl.register_plans(plans)
+            else:
+                done: list[int] = []
+                try:
+                    for p in plans:
+                        done.append(self._impl.register_plan(p))
+                except Exception:
+                    for s in done:
+                        self._impl.deregister_plan(s)
+                    raise
+                slots = done
+        except Exception:
+            # unwind everything this call committed (the engine itself is
+            # discarded when it was built for this batch)
+            if fresh:
+                self._impl = None
+                self._family, self._nfa, self._drop_spec, self._egraph = saved
+            raise
+        handles = []
+        for plan, slot in zip(plans, slots):
+            qid = self._next_qid
+            self._next_qid += 1
+            self._handles[qid] = slot
+            self._plans[qid] = plan
+            self.registered_total += 1
+            handles.append(QueryHandle(qid=qid, plan=plan))
+        return handles
+
+    def deregister(self, handle: QueryHandle) -> int:
+        """Retire a query: its difference rows are zeroed and the accounted
+        bytes released are returned; the slot returns to the free pool."""
+        slot = self._slot(handle)
+        freed = self._impl.deregister_plan(slot)
+        del self._handles[handle.qid], self._plans[handle.qid]
+        self.deregistered_total += 1
+        self.bytes_freed_total += freed
+        return freed
+
+    def _slot(self, handle: QueryHandle) -> int:
+        if handle.qid not in self._handles:
+            raise ValueError(f"handle {handle.qid} is not registered")
+        return self._handles[handle.qid]
+
+    def _check_family(self, plan: qp.QueryPlan, base: tuple) -> None:
+        """Validate a plan against ``base`` (the session family, or the
+        first plan of the opening batch).  Validation is pure — the family
+        is committed by ``register_many`` only once its whole batch passes,
+        so a rejected batch leaves the session untouched."""
+        key = plan.family_key()
+        if key != base:
+            raise ValueError(
+                "plan family mismatch: a session compiles ONE sweep shape "
+                f"(semiring/max_iters/NFA); got {key} vs {base}. "
+                "Open a second session for a different query family."
+            )
+
+    # ------------------------------------------------------- engine build
+    def _build_engine(self, plans: list[qp.QueryPlan]) -> None:
+        first_plan = plans[0]
+        if self._drop_spec is None:
+            # representation inferred from the first drop-enabled plan of the
+            # initial batch; later plans may use any selection params under
+            # the same mode
+            self._drop_spec = next(
+                (p.drop for p in plans if p.drop.enabled()), first_plan.drop
+            )
+        if self._nfa is not None:
+            self._egraph = self._build_product_graph()
+        if self.engine_kind == "dense":
+            kw = dict(self._kw)
+            # size the slot pool for the opening batch — avoids a cascade of
+            # geometric regrows before the first sweep even runs
+            kw["min_slots"] = max(int(kw["min_slots"]), len(plans))
+            self._impl = DenseEngine(
+                self._egraph,
+                first_plan,
+                drop_spec=self._drop_spec,
+                mesh=self.mesh,
+                **kw,
+            )
+        elif self.engine_kind == "host":
+            self._impl = SparseDiffIFE(
+                self._egraph, max_iters=int(first_plan.max_iters)
+            )
+        else:
+            cfg = engine_config_for(
+                first_plan,
+                num_queries=1,
+                num_vertices=self._egraph.num_vertices,
+                backend=self._kw["backend"],
+                ell_block_v=self._kw["ell_block_v"],
+                interpret=self._kw["interpret"],
+            )
+            self._impl = ScratchEngine(cfg, self._egraph)
+
+    def _build_product_graph(self) -> DynamicGraph:
+        nfa = self._nfa
+        n, src, dst, w, _ = product_graph(self.graph, nfa.delta, nfa.num_states)
+        cap = self._product_capacity
+        if cap is None:
+            per = max((len(v) for v in nfa.delta.values()), default=1)
+            cap = max(16, self.graph.capacity * per)
+        return DynamicGraph(
+            n, list(zip(src.tolist(), dst.tolist(), w.tolist())), capacity=cap
+        )
+
+    def _translate(self, updates) -> list[tuple[int, int, int, float, int]]:
+        """Base-graph δE → product-graph δE (one edge per NFA transition)."""
+        out = []
+        for (u, v, lbl, w, sign) in updates:
+            for (s, s2) in self._nfa.delta.get(int(lbl), ()):
+                out.append(
+                    (
+                        int(u) * self._nfa.num_states + s,
+                        int(v) * self._nfa.num_states + s2,
+                        0,
+                        1.0,
+                        int(sign),
+                    )
+                )
+        return out
+
+    # ------------------------------------------------------------ ingestion
+    def _ingest(self, updates, engine_call):
+        """Shared ingestion path: count, route pre-engine updates to the
+        base graph, translate through the NFA when the family has one, then
+        hand the batch to ``engine_call``."""
+        updates = list(updates)
+        self.updates_applied += len(updates)
+        if self._impl is None:
+            # no engine yet → no product graph either: updates land on the
+            # base graph, which any later engine build snapshots
+            self.graph.apply_batch(updates)
+            return None
+        if self._nfa is not None:
+            self.graph.apply_batch(updates)
+            updates = self._translate(updates)
+            if not updates:
+                return self.last_stats
+        return engine_call(updates)
+
+    def apply_updates(self, updates):
+        """Ingest one δE batch and maintain every registered query."""
+        return self._ingest(updates, self._impl_apply)
+
+    def _impl_apply(self, updates):
+        return self._impl.apply_updates(updates)
+
+    def apply_updates_batched(self, updates, batch_size: int | None = None):
+        """Stream a δE log through the engine's batched path (the dense
+        engine's donated-buffer chunks; host/scratch fall back to one batch)."""
+        return self._ingest(
+            updates,
+            lambda u: self._impl.apply_updates_batched(u, batch_size=batch_size),
+        )
+
+    # ------------------------------------------------------------------ api
+    def answers(self, handle: QueryHandle) -> np.ndarray:
+        """The query's final vertex states. [V] ([V·|S|] for RPQ plans —
+        see :meth:`reachable`)."""
+        return self._impl.answers_row(self._slot(handle))
+
+    def reachable(self, handle: QueryHandle) -> np.ndarray:
+        """RPQ answer extraction: bool [V_base] — which base vertices match."""
+        plan = self._plans[handle.qid]
+        if plan.nfa is None:
+            raise ValueError("reachable() applies to RPQ plans")
+        d = self.answers(handle).reshape(
+            self.graph.num_vertices, plan.nfa.num_states
+        )
+        return np.isfinite(d[:, list(plan.nfa.accept)]).any(axis=-1)
+
+    def handles(self) -> list[QueryHandle]:
+        return [QueryHandle(qid=q, plan=self._plans[q]) for q in sorted(self._plans)]
+
+    def nbytes(self) -> int:
+        return 0 if self._impl is None else self._impl.nbytes()
+
+    @property
+    def num_queries(self) -> int:
+        return len(self._handles)
+
+    @property
+    def last_stats(self):
+        return getattr(self._impl, "last_stats", None)
+
+    def stats(self) -> dict:
+        """Session/engine counters for serving telemetry."""
+        out = {
+            "engine": self.engine_kind,
+            "active_queries": self.num_queries,
+            "registered_total": self.registered_total,
+            "deregistered_total": self.deregistered_total,
+            "updates_applied": self.updates_applied,
+            "bytes_freed_total": self.bytes_freed_total,
+            "nbytes": self.nbytes(),
+        }
+        if isinstance(self._impl, DenseEngine):
+            out["slot_capacity"] = self._impl.impl.slot_capacity
+            out["shards"] = self._impl.impl.num_shards
+        ls = self.last_stats
+        if isinstance(ls, MaintainStats):
+            out["last_maintain"] = {
+                k: int(v) for k, v in zip(ls._fields, ls)
+            }
+        return out
+
+    @property
+    def num_shards(self) -> int:
+        if isinstance(self._impl, DenseEngine):
+            return self._impl.impl.num_shards
+        return 1
+
+    def nbytes_per_device(self) -> list[int]:
+        if isinstance(self._impl, DenseEngine):
+            return self._impl.impl.nbytes_per_device()
+        return [self.nbytes()]

@@ -12,18 +12,26 @@ paper's Table-1 shape in *wall clock* (maintenance cost ∝ affected set, not
 graph size) and is cross-validated against both the dense engine and
 SCRATCH by property tests.
 
-Supports the min-family semirings (SPSP/SSSP, K-hop, WCC reachability) —
-the query classes the paper's scalability study runs.
+Queries are registered as :class:`~repro.core.plan.QueryPlan`s — the same
+IR the dense engine consumes — so the host engine satisfies the session
+``EngineProtocol`` (`core/session.py`): ``register_plan`` computes the new
+query's difference trace from the live adjacency, ``deregister_plan`` drops
+its index and returns the bytes released.  The legacy
+``SparseDiffIFE(graph, sources, ...)`` constructor builds SSSP/K-hop plans
+internally.
+
+Supports the min-family semirings (SPSP/SSSP, K-hop/RPQ reachability, WCC
+label propagation) — the query classes the paper's scalability study runs.
 """
 
 from __future__ import annotations
 
-import math
 from collections import defaultdict
 from typing import Sequence
 
 import numpy as np
 
+from repro.core import plan as qp
 from repro.core.graph import DynamicGraph
 
 INF = float("inf")
@@ -32,8 +40,9 @@ INF = float("inf")
 class SparseDiffIFE:
     """Host CQP: JOD + eager merging with pointer data structures.
 
-    State per query q:
+    State per registered query slot q:
       diffs[q][v]   sorted list of (iteration, value) change points
+      init_rows[q]  the implicit iteration-0 states (never stored as diffs)
     Graph adjacency lives in dicts of dicts (in/out), mirroring a GDBMS
     adjacency-list index.
     """
@@ -41,39 +50,80 @@ class SparseDiffIFE:
     def __init__(
         self,
         graph: DynamicGraph,
-        sources: Sequence[int],
+        sources: Sequence[int] | None = None,
         *,
         max_iters: int = 64,
-        khop: int | None = None,  # None = min_plus (weights); else hop query
+        khop: int | None = None,  # legacy: None = min_plus; else hop query
     ) -> None:
         self.graph = graph
-        self.sources = [int(s) for s in sources]
-        self.max_iters = max_iters
-        self.khop = khop
+        self.max_iters = int(max_iters)
         self.in_nbrs: dict[int, dict[int, float]] = defaultdict(dict)
         self.out_nbrs: dict[int, dict[int, float]] = defaultdict(dict)
         for e in np.nonzero(graph.valid)[0]:
             u, v, w = int(graph.src[e]), int(graph.dst[e]), float(graph.weight[e])
             self.out_nbrs[u][v] = w
             self.in_nbrs[v][u] = w
-        self.diffs: list[dict[int, list[tuple[int, float]]]] = [
-            defaultdict(list) for _ in self.sources
-        ]
+        self.plans: dict[int, qp.QueryPlan] = {}
+        self.diffs: dict[int, dict[int, list[tuple[int, float]]]] = {}
+        self._init_rows: dict[int, np.ndarray] = {}
+        self._free: list[int] = []
+        self._num_slots = 0
         self.work = 0  # aggregator re-runs (the paper's work metric)
-        for q, s in enumerate(self.sources):
-            self._initial(q, s)
+        self.sources = [] if sources is None else [int(s) for s in sources]
+        for s in self.sources:
+            if khop is not None:
+                self.register_plan(qp.khop(s, k=int(khop)))
+                self.max_iters = int(max_iters)  # legacy: cap ≠ sweep bound
+            else:
+                self.register_plan(qp.sssp(s, max_iters=max_iters))
+
+    # ---------------------------------------------------------------- slots
+    def register_plan(self, plan: qp.QueryPlan) -> int:
+        """Register one query: claim a slot, compute its trace from the live
+        adjacency (the static IFE run, recorded as change points)."""
+        if plan.semiring.reduce != "min":
+            raise ValueError(
+                f"host engine supports min-family semirings only, "
+                f"got {plan.semiring.name!r}"
+            )
+        slot = self._free.pop() if self._free else self._num_slots
+        self._num_slots = max(self._num_slots, slot + 1)
+        self.plans[slot] = plan
+        self.diffs[slot] = defaultdict(list)
+        self._init_rows[slot] = plan.build_init(self.graph.num_vertices)
+        self.max_iters = max(self.max_iters, int(plan.max_iters))
+        self._initial(slot)
+        return slot
+
+    def deregister_plan(self, slot: int) -> int:
+        """Drop a query's difference index; returns the bytes released."""
+        if slot not in self.plans:
+            raise ValueError(f"slot {slot} is not registered")
+        freed = sum(len(p) for p in self.diffs[slot].values()) * 8
+        del self.plans[slot], self.diffs[slot], self._init_rows[slot]
+        self._free.append(slot)
+        self._free.sort(reverse=True)
+        return freed
+
+    def active_slots(self) -> list[int]:
+        return sorted(self.plans)
 
     # ------------------------------------------------------------- semiring
-    def _msg(self, val: float, w: float) -> float:
-        if self.khop is not None:
+    def _msg(self, q: int, val: float, w: float) -> float:
+        s = self.plans[q].semiring
+        if s.name == "min_plus":
+            return val + w
+        if s.name == "min_hop":
             nxt = val + 1.0
-            return nxt if nxt <= self.khop else INF
-        return val + w
+            return nxt if nxt <= s.hop_cap else INF
+        if s.name == "min_label":
+            return val
+        raise ValueError(f"unsupported semiring {s.name!r}")
 
     # ---------------------------------------------------------------- state
     def _value_at(self, q: int, v: int, i: int) -> float:
-        """Latest change point ≤ i (implicit init: 0 at source, ∞ else)."""
-        best = 0.0 if v == self.sources[q] else INF
+        """Latest change point ≤ i (implicit init from the plan's D_0)."""
+        best = float(self._init_rows[q][v])
         for (it, val) in self.diffs[q].get(v, ()):
             if it <= i:
                 best = val
@@ -85,11 +135,9 @@ class SparseDiffIFE:
         """Rerun the aggregator (Min) for v at iteration i — the join is
         computed on demand from in-neighbour states at i−1 (JOD §4)."""
         self.work += 1
-        best = self._value_at(q, v, i - 1)  # carry
-        if v == self.sources[q]:
-            best = min(best, 0.0)
+        best = self._value_at(q, v, i - 1)  # carry (includes implicit init)
         for u, w in self.in_nbrs.get(v, {}).items():
-            cand = self._msg(self._value_at(q, u, i - 1), w)
+            cand = self._msg(q, self._value_at(q, u, i - 1), w)
             if cand < best:
                 best = cand
         return best
@@ -106,9 +154,16 @@ class SparseDiffIFE:
             del self.diffs[q][v]
 
     # ------------------------------------------------------------ procedures
-    def _initial(self, q: int, s: int) -> None:
-        # the source's implicit 0 at iteration 0 feeds its out-neighbours
-        frontier = {s} | set(self.out_nbrs.get(s, ()))
+    def _initial(self, q: int) -> None:
+        # vertices with a non-identity implicit init feed their
+        # out-neighbours at iteration 1 (SSSP: the source; WCC: everyone)
+        ident = self.plans[q].semiring.identity
+        seeds = {
+            int(v) for v in np.nonzero(self._init_rows[q] != ident)[0]
+        }
+        frontier = set(seeds)
+        for s in seeds:
+            frontier.update(self.out_nbrs.get(s, ()))
         for i in range(1, self.max_iters + 1):
             nxt: set[int] = set()
             for v in sorted(frontier):
@@ -132,7 +187,7 @@ class SparseDiffIFE:
     def apply_updates(self, updates) -> None:
         """One δE batch: update adjacency, then per-query sparse sweep."""
         dirty: set[int] = set()
-        for (u, v, lbl, w, sign) in updates:
+        for (u, v, _lbl, w, sign) in updates:
             u, v = int(u), int(v)
             if sign > 0:
                 self.out_nbrs[u][v] = float(w)
@@ -143,7 +198,7 @@ class SparseDiffIFE:
             dirty.add(v)
         self.graph.apply_batch(updates)
 
-        for q in range(len(self.sources)):
+        for q in sorted(self.plans):
             horizon = self._horizon(q)
             frontier: set[int] = set()
             i = 1
@@ -161,19 +216,33 @@ class SparseDiffIFE:
                 frontier = nxt
                 i += 1
 
+    def apply_updates_batched(self, updates, batch_size: int | None = None):
+        """Protocol twin of the dense engine's chunked path: the host sweep
+        is already per-update work-efficient, so this just applies the log."""
+        del batch_size
+        return self.apply_updates(list(updates))
+
     # ------------------------------------------------------------------ api
+    def answers_row(self, slot: int) -> np.ndarray:
+        out = np.asarray(self._init_rows[slot], np.float32).copy()
+        for vtx, pts in self.diffs[slot].items():
+            if pts:
+                out[vtx] = pts[-1][1]
+        return out
+
     def answers(self) -> np.ndarray:
+        """[num_slots, V] over every slot ever allocated (deregistered slots
+        read as the identity row) — slot-aligned with the dense engine."""
         v = self.graph.num_vertices
-        out = np.full((len(self.sources), v), np.inf, np.float32)
-        for q in range(len(self.sources)):
-            out[q, self.sources[q]] = 0.0
-            for vtx, pts in self.diffs[q].items():
-                if pts:
-                    out[q, vtx] = pts[-1][1]
+        out = np.full((self._num_slots, v), np.inf, np.float32)
+        for slot in self.plans:
+            out[slot] = self.answers_row(slot)
         return out
 
     def nbytes(self) -> int:
-        return sum(len(p) for d in self.diffs for p in d.values()) * 8
+        return self.num_diffs() * 8
 
     def num_diffs(self) -> int:
-        return sum(len(p) for d in self.diffs for p in d.values())
+        return sum(
+            len(p) for q in self.plans for p in self.diffs[q].values()
+        )

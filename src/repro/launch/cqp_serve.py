@@ -1,19 +1,29 @@
-"""Continuous-query serving driver: stream an update log through the engine.
+"""Continuous-query serving driver: stream an update log through a session.
 
-The serving shape of the paper's CQP: Q registered queries (batched in the
-engine's leading axis — one compiled sweep serves all of them), one δE log
-streamed in fixed-shape chunks of B updates through the donated-buffer
-batched step (``DiffIFE.apply_updates_batched``).  Reports updates/sec,
-p50/p99 per-chunk maintenance latency, and peak diff-store bytes — the
-throughput/memory trade the paper's Table 1 frames.
+The serving shape of the paper's CQP, engine-agnostic via
+:class:`repro.core.session.CQPSession`: Q registered queries, one δE log
+streamed in fixed-shape chunks of B updates, and a *query-churn* scenario —
+``--register-at K`` registers a fresh query before chunk K (its trace is
+initialized in-engine), ``--deregister-at K`` retires the oldest live query
+and reclaims its difference bytes.  Reports updates/sec, p50/p99 per-chunk
+maintenance latency, peak diff-store bytes, and churn-event latencies.
 
-With ``--mesh data`` the engine shards every per-vertex carry over the mesh
-``data`` axis (``shard_map`` sweep, DESIGN.md §8); run under host emulation
-to exercise it without a pod:
+``--engine`` selects the executor behind the same session API:
+
+    dense    the TPU engine (donated-buffer batched chunks; --mesh shards it)
+    host     the paper's pointer machine (work ∝ affected set, on the host)
+    scratch  from-scratch re-execution baseline
+
+Examples::
 
     PYTHONPATH=src python -m repro.launch.cqp_serve --smoke
     PYTHONPATH=src python -m repro.launch.cqp_serve \
         --v 512 --e 2048 --queries 16 --updates 256 --batch 32 --backend ell
+    # churn: register before chunk 2, deregister before chunk 4, on all engines
+    for eng in dense host scratch; do
+      PYTHONPATH=src python -m repro.launch.cqp_serve --smoke --json \
+          --engine $eng --register-at 2 --deregister-at 4
+    done
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.cqp_serve --smoke --mesh data
 """
@@ -25,6 +35,7 @@ import json
 import os
 import sys
 import time
+from collections import Counter
 
 import numpy as np
 
@@ -47,9 +58,39 @@ def make_mesh(kind: str, shards: int | None):
     return make_production_mesh()
 
 
-def build_engine(args):
-    from repro.core import queries as q
+def initial_plans(args):
+    """The query batch registered before the stream starts."""
+    from repro.core import plan
+
+    if args.query == "sssp":
+        return [
+            plan.sssp(s, max_iters=args.max_iters) for s in range(args.queries)
+        ]
+    if args.query == "khop":
+        return [
+            plan.khop(s, k=min(6, args.max_iters)) for s in range(args.queries)
+        ]
+    if args.query == "pagerank":
+        args.queries = 1  # PageRank is a single batch computation (§6.1.2)
+        return [plan.pagerank(iters=min(10, args.max_iters))]
+    raise SystemExit(f"unknown query {args.query!r}")
+
+
+def churn_plan(args, seq: int):
+    """The query a --register-at event brings in (same family, new source)."""
+    from repro.core import plan
+
+    source = (args.queries + seq) % args.v
+    if args.query == "sssp":
+        return plan.sssp(source, max_iters=args.max_iters)
+    if args.query == "khop":
+        return plan.khop(source, k=min(6, args.max_iters))
+    return plan.pagerank(iters=min(10, args.max_iters))
+
+
+def build_session(args):
     from repro.core.graph import DynamicGraph
+    from repro.core.session import CQPSession
     from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
 
     edges = powerlaw_graph(args.v, args.e, seed=args.seed)
@@ -65,55 +106,85 @@ def build_engine(args):
     )
     log = [u for batch in stream for u in batch]
     graph = DynamicGraph(args.v, initial, capacity=len(edges) * 4 + 64)
-    sources = list(range(args.queries))
     mesh = make_mesh(args.mesh, args.shards)
-    kw = dict(backend=args.backend, batch_capacity=args.batch, mesh=mesh)
-    if args.query == "sssp":
-        eng = q.sssp(graph, sources, max_iters=args.max_iters, **kw)
-    elif args.query == "khop":
-        eng = q.khop(graph, sources, k=min(6, args.max_iters), **kw)
-    elif args.query == "pagerank":
-        args.queries = 1  # PageRank is a single batch computation (paper §6.1.2)
-        eng = q.pagerank(graph, iters=min(10, args.max_iters), **kw)
-    else:
-        raise SystemExit(f"unknown query {args.query!r}")
-    return eng, log
+    if mesh is not None and args.engine != "dense":
+        raise SystemExit("--mesh shards the dense engine only")
+    plans = initial_plans(args)
+    session = CQPSession(
+        graph,
+        engine=args.engine,
+        mesh=mesh,
+        backend=args.backend,
+        batch_capacity=args.batch,
+        min_slots=len(plans),
+    )
+    handles = session.register_many(plans)
+    return session, handles, log
 
 
 def serve(args) -> dict:
     t0 = time.perf_counter()
-    eng, log = build_engine(args)
+    session, handles, log = build_session(args)
     t_init = time.perf_counter() - t0
 
     b = args.batch
     chunks = [log[i : i + b] for i in range(0, len(log), b)]
     if not chunks:
         raise SystemExit("empty update log — raise --updates")
+    # repeated flags at the same chunk index fire that many events
+    register_at = Counter(args.register_at or [])
+    deregister_at = Counter(args.deregister_at or [])
+    for k in list(register_at) + list(deregister_at):
+        if not (0 < k < len(chunks)):
+            raise SystemExit(
+                f"churn index {k} outside the mid-stream range "
+                f"1..{len(chunks) - 1} ({len(chunks)} chunks)"
+            )
 
     # warmup chunk: traces + compiles the batched step (reported separately)
     t0 = time.perf_counter()
-    eng.apply_updates_batched(chunks[0], batch_size=b)
+    session.apply_updates_batched(chunks[0], batch_size=b)
     t_compile = time.perf_counter() - t0
 
     # unsharded, per-device == total: don't pay a second per-chunk fetch
     dev_peak = (
-        (lambda: max(eng.nbytes_per_device()))
-        if eng.num_shards > 1
-        else eng.nbytes
+        (lambda: max(session.nbytes_per_device()))
+        if session.num_shards > 1
+        else session.nbytes
     )
     lat_s: list[float] = []
-    peak_bytes = eng.nbytes()
+    reg_ms: list[float] = []
+    dereg_ms: list[float] = []
+    bytes_freed = 0
+    peak_bytes = session.nbytes()
     peak_dev_bytes = dev_peak()
     served = len(chunks[0])
+    churn_seq = 0
+    t_churn = 0.0
     t_serve0 = time.perf_counter()
-    for chunk in chunks[1:]:
+    for k, chunk in enumerate(chunks[1:], start=1):
+        for _ in range(register_at.get(k, 0)):
+            t0 = time.perf_counter()
+            handles.append(session.register(churn_plan(args, churn_seq)))
+            dt = time.perf_counter() - t0
+            reg_ms.append(dt * 1e3)
+            t_churn += dt
+            churn_seq += 1
+        for _ in range(deregister_at.get(k, 0)):
+            if not handles:
+                break
+            t0 = time.perf_counter()
+            bytes_freed += session.deregister(handles.pop(0))
+            dt = time.perf_counter() - t0
+            dereg_ms.append(dt * 1e3)
+            t_churn += dt
         t0 = time.perf_counter()
-        eng.apply_updates_batched(chunk, batch_size=b)  # stats sync the device
+        session.apply_updates_batched(chunk, batch_size=b)
         lat_s.append(time.perf_counter() - t0)
         served += len(chunk)
-        peak_bytes = max(peak_bytes, eng.nbytes())
+        peak_bytes = max(peak_bytes, session.nbytes())
         peak_dev_bytes = max(peak_dev_bytes, dev_peak())
-    t_serve = time.perf_counter() - t_serve0
+    t_serve = time.perf_counter() - t_serve0 - t_churn
 
     steady = bool(lat_s)
     if not steady:
@@ -124,7 +195,9 @@ def serve(args) -> dict:
         )
     lat = np.asarray(lat_s if steady else [t_compile])
     out = {
+        "engine": args.engine,
         "queries": args.queries,
+        "final_queries": session.num_queries,
         "batch": b,
         "backend": args.backend,
         "updates_served": served,
@@ -135,13 +208,19 @@ def serve(args) -> dict:
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
         "steady_state": steady,
         "peak_diff_bytes": int(peak_bytes),
-        "shards": eng.num_shards,
+        "shards": session.num_shards,
         "peak_diff_bytes_per_device": int(peak_dev_bytes),
+        "registers": len(reg_ms),
+        "deregisters": len(dereg_ms),
+        "register_ms": [float(x) for x in reg_ms],
+        "deregister_ms": [float(x) for x in dereg_ms],
+        "bytes_freed": int(bytes_freed),
         "init_s": t_init,
         "compile_s": t_compile,
     }
     print(
-        f"cqp_serve[{args.query}/{args.backend}] Q={args.queries} B={b}: "
+        f"cqp_serve[{args.query}/{args.engine}/{args.backend}] "
+        f"Q={args.queries}→{out['final_queries']} B={b}: "
         f"{out['updates_per_sec']:.1f} updates/sec over {served} updates"
     )
     print(
@@ -149,6 +228,12 @@ def serve(args) -> dict:
         f"p99={out['p99_ms']:.2f} ms per {b}-update chunk"
         + ("" if steady else " (includes compile)")
     )
+    if reg_ms or dereg_ms:
+        print(
+            f"  churn: {len(reg_ms)} register(s) "
+            f"({sum(reg_ms):.1f} ms total, in-engine re-trace), "
+            f"{len(dereg_ms)} deregister(s) freeing {bytes_freed} diff bytes"
+        )
     print(
         f"  peak diff-store bytes={out['peak_diff_bytes']} "
         f"per-device={out['peak_diff_bytes_per_device']} "
@@ -170,8 +255,31 @@ def main() -> None:
     ap.add_argument("--max-iters", type=int, default=48)
     ap.add_argument("--delete-fraction", type=float, default=0.2)
     ap.add_argument("--query", choices=("sssp", "khop", "pagerank"), default="sssp")
+    ap.add_argument(
+        "--engine",
+        choices=("dense", "host", "scratch"),
+        default="dense",
+        help="executor behind the session API (CQPSession)",
+    )
     ap.add_argument("--backend", choices=("coo", "ell"), default="ell")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--register-at",
+        type=int,
+        action="append",
+        default=None,
+        metavar="CHUNK",
+        help="register one extra query before streaming chunk CHUNK "
+        "(repeatable; 1-based mid-stream index)",
+    )
+    ap.add_argument(
+        "--deregister-at",
+        type=int,
+        action="append",
+        default=None,
+        metavar="CHUNK",
+        help="deregister the oldest live query before chunk CHUNK (repeatable)",
+    )
     ap.add_argument(
         "--smoke", action="store_true", help="tiny CPU-friendly end-to-end run"
     )

@@ -22,8 +22,6 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.configs import ARCH_NAMES, get_arch
 from repro.data.synthetic import lm_batch, mind_batch
-from repro.launch.mesh import make_smoke_mesh
-from repro.models.common import activation_mesh
 from repro.optim import adamw_init
 from repro.runtime.fault import FaultPolicy, StepResult, Supervisor
 from repro.runtime.straggler import StragglerDetector, StepTimer
@@ -44,15 +42,9 @@ def _lm_setup(arch, cfg, batch=4, seq=32):
 
 
 def _gnn_setup(arch, cfg):
-    import numpy as np
-
     from repro.configs.gnn_harness import make_gnn_train_step
     from repro.models.gnn import common as g
 
-    mod = __import__(f"repro.models.gnn.{arch.name.replace('-', '_').replace('.', '_')}",
-                     fromlist=["x"]) if False else None
-    # resolve model module from the arch registry instead
-    from repro.configs import _MODULES  # noqa
     rng = np.random.default_rng(0)
     geometric = arch.name in ("dimenet", "equiformer-v2")
     batch = g.random_graph_batch(rng, 64, 256, getattr(cfg, "d_in", 16),
@@ -60,22 +52,22 @@ def _gnn_setup(arch, cfg):
     if arch.name == "pna":
         from repro.models.gnn import pna as m
         loss = lambda c, p, b: m.loss_fn(c, p, b)
-        extra = ()
+
     elif arch.name == "gatedgcn":
         from repro.models.gnn import gatedgcn as m
         loss = lambda c, p, b: m.loss_fn(c, p, b)
-        extra = ()
+
     elif arch.name == "dimenet":
         from repro.models.gnn import dimenet as m
         tri = m.build_triplets(np.asarray(batch.edge_src), np.asarray(batch.edge_dst),
                                np.asarray(batch.edge_mask), 1024)
         tri = tuple(jnp.asarray(t) for t in tri)
         loss = lambda c, p, b, t=tri: m.loss_fn(c, p, b, t)
-        extra = ()
+
     else:
         from repro.models.gnn import equiformer_v2 as m
         loss = lambda c, p, b: m.loss_fn(c, p, b)
-        extra = ()
+
     params = m.init_params(cfg, jax.random.PRNGKey(0))
     opt = adamw_init(params)
     step_fn = jax.jit(make_gnn_train_step(lambda p, b: loss(cfg, p, b)))

@@ -190,7 +190,6 @@ def dlse_decode_attention(
     b, hq, _, d = q.shape
     hkv = ck.shape[1]
     group = hq // hkv
-    s_global = ck.shape[2]
     batch_ax = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
     bspec = batch_ax if len(batch_ax) > 1 else batch_ax[0]
 

@@ -17,7 +17,6 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.models.recsys.embeddingbag import embedding_bag_fixed
 
 Array = jnp.ndarray
 

@@ -10,7 +10,6 @@ absent from the mesh resolve to replicated.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 # logical name → preferred mesh axes, first present wins; tuples shard one

@@ -139,7 +139,6 @@ def test_diff_ife_smoke_cell_runs_with_real_arrays():
     """The dc arch's maintain cell executes on a 1×1 mesh with real arrays."""
     from repro.configs.diff_ife import ARCH, _engine_cfg
     from repro.core import engine as eng
-    from repro.launch.mesh import make_smoke_mesh
 
     z = ARCH.smoke()
     cfg = _engine_cfg(z)

@@ -95,7 +95,6 @@ def test_scratch_agrees():
 
 
 def test_khop_and_wcc_and_pagerank_run():
-    g = fig2_graph()
     kh = q.khop(fig2_graph(), sources=[0], k=2)
     reach = q.khop_reachable(kh)[0]
     assert reach.tolist() == [True, True, True, True, True]

@@ -6,7 +6,6 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager, restore_checkpoint, save_checkpoint
 from repro.checkpoint.store import latest_step

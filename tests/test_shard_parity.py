@@ -25,9 +25,11 @@ import numpy as np
 import pytest
 
 from repro.core import dropping as dr
+from repro.core import plan as qplan
 from repro.core import queries as q
 from repro.core.graph import DynamicGraph
 from repro.core.scratch import scratch_like
+from repro.core.session import CQPSession
 from repro.core.sparse_engine import SparseDiffIFE
 from repro.launch.mesh import make_data_mesh
 
@@ -122,6 +124,63 @@ def test_parity_matrix(backend, mode, dropmode, shards):
         scratch.apply_updates(batch)
         np.testing.assert_array_equal(eng.answers(), sparse.answers())
         np.testing.assert_array_equal(eng.answers(), scratch.answers())
+
+
+@pytest.mark.parametrize("shards", [1, pytest.param(8, marks=needs8)])
+@pytest.mark.parametrize("engine", ["host", "scratch"])
+@pytest.mark.parametrize(
+    "backend,mode,dropmode", MATRIX, ids=lambda m: str(m)
+)
+def test_session_churn_engine_matrix(backend, mode, dropmode, shards, engine):
+    """The parity matrix extended by an ENGINE axis, through the session
+    facade and with query churn: a dense CQPSession in every (backend, mode,
+    drop, shards) configuration must stay answer-identical to a host/scratch
+    CQPSession across a stream that registers a query mid-stream and
+    deregisters another (the dense engine initializes the new trace by
+    in-engine recomputation; deregistration reclaims its diff rows)."""
+    initial, batches = random_workload(seed=17, num_batches=3)
+    drop = DROPS[dropmode]
+    mesh = make_data_mesh(shards) if shards > 1 else None
+    dense = CQPSession(
+        DynamicGraph(V, initial, capacity=512),
+        engine="dense",
+        backend=backend,
+        mode=mode,
+        mesh=mesh,
+        min_slots=2,
+    )
+    ref = CQPSession(DynamicGraph(V, initial, capacity=512), engine=engine)
+
+    def dense_plan(src):
+        return qplan.sssp(src, max_iters=MAX_ITERS, drop=drop)
+
+    dh = dense.register_many([dense_plan(0), dense_plan(V // 2)])
+    rh = ref.register_many(
+        [
+            qplan.sssp(0, max_iters=MAX_ITERS),
+            qplan.sssp(V // 2, max_iters=MAX_ITERS),
+        ]
+    )
+
+    def check():
+        for a, b in zip(dh, rh):
+            np.testing.assert_array_equal(dense.answers(a), ref.answers(b))
+
+    check()
+    for j, batch in enumerate(batches):
+        dense.apply_updates(batch)
+        ref.apply_updates(batch)
+        check()
+        if j == 0:  # mid-stream register (same family, new source)
+            dh.append(dense.register(dense_plan(V // 3)))
+            rh.append(ref.register(qplan.sssp(V // 3, max_iters=MAX_ITERS)))
+            check()
+        if j == 1:  # mid-stream deregister (oldest query retires)
+            before = dense.nbytes()
+            freed = dense.deregister(dh.pop(0))
+            ref.deregister(rh.pop(0))
+            assert freed >= 0 and dense.nbytes() <= before
+            check()
 
 
 @pytest.mark.parametrize("dropmode", ["det", "prob"])

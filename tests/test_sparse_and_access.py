@@ -56,9 +56,8 @@ def test_sparse_work_tracks_affected_set():
 
 
 def test_access_with_drops_matches_reassembly():
-    from repro.core import engine as eng_mod
     from repro.core.access import access
-    from repro.core.engine import GraphArrays, reassemble
+    from repro.core.engine import reassemble
 
     edges = [(0, 1, 2.0), (1, 2, 3.0), (0, 2, 10.0), (2, 3, 1.0)]
     drop = dr.DropConfig(mode="det", selection="random", p=0.6, seed=5)
