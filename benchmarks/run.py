@@ -23,6 +23,7 @@ MODULES = [
     "benchmarks.fig12_deletions",
     "benchmarks.fig_batch_throughput",
     "benchmarks.fig_query_churn",
+    "benchmarks.fig_governor_budget",
     "benchmarks.fig_shard_scaling",
 ]
 

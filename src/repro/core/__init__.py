@@ -29,9 +29,11 @@ from repro.core.engine import (
     nbytes_accounted,
     reassemble,
 )
+from repro.core.governor import GovernorConfig, MemoryGovernor
 from repro.core.graph import DynamicGraph, GraphSnapshot
 from repro.core.plan import NFA, InitSpec, QueryPlan
 from repro.core.session import CQPSession, EngineProtocol, QueryHandle
+from repro.core.telemetry import RecomputeTelemetry
 
 __all__ = [
     # session model
@@ -42,6 +44,10 @@ __all__ = [
     "NFA",
     "EngineProtocol",
     "plan",
+    # memory governor
+    "GovernorConfig",
+    "MemoryGovernor",
+    "RecomputeTelemetry",
     # engine layer
     "DiffIFE",
     "EngineConfig",

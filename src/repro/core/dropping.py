@@ -33,6 +33,11 @@ from repro.core import diffstore as ds
 
 Array = jnp.ndarray
 
+# Accounted bytes of one query's DropParams row: p (f32) + tau_min (f32) +
+# tau_max (f32) + degree_sel (1 B) + seed (u32).  The governor retunes these
+# rows online, so they are live per-query state and count toward the budget.
+PARAMS_ROW_NBYTES = 17
+
 
 @dataclasses.dataclass(frozen=True)
 class DropConfig:
@@ -126,11 +131,39 @@ class DropState(NamedTuple):
     # dropped change points still bound the engine's upper-bound-rule sweep)
     params: DropParams | None = None  # per-query selection ([Q] rows)
 
-    def nbytes_accounted(self) -> Array:
+    def nbytes_accounted(self, active: Array | None = None) -> Array:
+        """Accounted DroppedVT bytes (paper §5.1 costings), consistently:
+
+        * Det-Drop — 4 B per dropped VT record (inactive rows hold none);
+        * Prob-Drop — the packed filter, M/8 B **per live query row** (the
+          filter array is [Q, M]: each query owns one row, and a retired
+          slot's zeroed row is reclaimable, so it is not charged);
+        * plus :data:`PARAMS_ROW_NBYTES` per live query for the selection
+          rows themselves (the governor rewrites them online).
+
+        ``active`` is the live-slot mask (default: every row counts — the
+        legacy fixed-batch engines have no slot pool).
+        """
+        total = jnp.zeros((), jnp.int32)
+        nrows = None
+        if self.params is not None:
+            nrows = (
+                jnp.asarray(self.params.p.shape[0], jnp.int32)
+                if active is None
+                else jnp.asarray(active, bool).sum().astype(jnp.int32)
+            )
+            total = total + nrows * PARAMS_ROW_NBYTES
         if self.det is not None:
-            return self.det.count.sum() * 4  # paper: d bytes per dropped VT
+            return total + self.det.count.sum() * 4  # d bytes per dropped VT
         assert self.flt is not None
-        return jnp.asarray(self.flt.nbytes_accounted, jnp.int32)
+        per_row = (self.flt.num_bits + 7) // 8
+        if nrows is None:
+            nrows = (
+                jnp.asarray(self.flt.bits.shape[0], jnp.int32)
+                if active is None
+                else jnp.asarray(active, bool).sum().astype(jnp.int32)
+            )
+        return total + nrows * per_row
 
 
 def make_state(
@@ -200,6 +233,30 @@ def select_to_drop(
         jnp.where(degree > params.tau_max[:, None], False, coin),
     )
     return jnp.where(params.degree_sel[:, None], by_degree, coin)
+
+
+def select_stored_to_drop(
+    params: DropParams, degree: Array, iters: Array, imax
+) -> Array:
+    """Which *stored* change points to shed under the current params. [Q,V,S]
+
+    The governor escalates a query's policy mid-stream; already-stored diffs
+    must then be re-audited with the SAME stateless coin the sweep uses —
+    ``_uniform01(seed, q, v, i)`` — so a shed drops exactly the points the
+    escalated policy would have dropped at write time (drop sets stay nested
+    in p, and decisions stay independent of sharding).  ``iters`` is the
+    diff-store iteration tensor; rows padded with ``imax`` never select.
+    """
+    q, v, s = iters.shape
+    v_ids = jnp.broadcast_to(
+        jnp.arange(v, dtype=jnp.int32)[None, :, None], (q, v, s)
+    ).reshape(q, v * s)
+    deg = jnp.broadcast_to(
+        jnp.asarray(degree, jnp.float32)[None, :, None], (q, v, s)
+    ).reshape(q, v * s)
+    q_ids = jnp.arange(q, dtype=jnp.int32)[:, None]
+    sel = select_to_drop(params, deg, q_ids, v_ids, iters.reshape(q, v * s))
+    return sel.reshape(q, v, s) & (iters < imax)
 
 
 def register(

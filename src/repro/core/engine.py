@@ -842,6 +842,56 @@ def batched_step_sharded(
     return fn(state, g, upd)
 
 
+def shed_slot(
+    cfg: EngineConfig, state: EngineState, g: GraphArrays, slot: Array | int
+) -> EngineState:
+    """Re-audit ONE query slot's stored diffs under its (just-rewritten)
+    selection params: points the escalated policy selects move from the diff
+    store into the DroppedVT structures (8 B change point → ≤4 B record, or
+    Bloom bits), exactly as if they had been dropped at write time.
+
+    This is the governor's reclamation primitive: raising a query's drop
+    probability only thins FUTURE writes; ``shed_slot`` makes the escalation
+    retroactive so memory falls immediately.  Correctness is the existing §5
+    machinery — the sweep repairs dropped points on access — and because the
+    selection coin is the stateless (seed, q, v, i) hash, a shed is
+    bit-identical under any sharding.  ``cur`` (the answers) is untouched.
+    """
+    drop = state.drop
+    degree = (g.out_degree + g.in_degree).astype(jnp.float32)
+    sel = dr.select_stored_to_drop(
+        drop.params, degree, state.dstore.iters, ds.IMAX
+    )
+    qmask = (
+        jnp.arange(cfg.num_queries, dtype=jnp.int32) == jnp.asarray(slot)
+    )[:, None, None]
+    mask = sel & qmask & state.active[:, None, None]
+
+    # record the shed points as dropped VTs, one store column per step —
+    # dr.register takes per-(q, v) iteration arrays, and the Det-Drop store
+    # is keyed by (q, v) so multiple iterations of one vertex cannot land in
+    # a single upsert.  A traced fori_loop keeps the compiled program size
+    # independent of the store capacity S (which regrows geometrically).
+    def register_col(col, d):
+        i_col = jax.lax.dynamic_index_in_dim(
+            state.dstore.iters, col, axis=-1, keepdims=False
+        )
+        m_col = jax.lax.dynamic_index_in_dim(mask, col, axis=-1, keepdims=False)
+        return dr.register(d, i_col, m_col)
+
+    drop = jax.lax.fori_loop(0, state.dstore.capacity, register_col, drop)
+    # remove them from the store, preserving the sorted-row invariant
+    it = jnp.where(mask, ds.IMAX, state.dstore.iters)
+    val = jnp.where(mask, 0.0, state.dstore.vals)
+    order = jnp.argsort(it, axis=-1, stable=True)
+    it = jnp.take_along_axis(it, order, axis=-1)
+    val = jnp.take_along_axis(val, order, axis=-1)
+    dstore = ds.DiffStore(
+        iters=it, vals=val, count=(it < ds.IMAX).sum(axis=-1, dtype=jnp.int32)
+    )
+    return state._replace(dstore=dstore, drop=drop)
+
+
 def reassemble(
     cfg: EngineConfig, state: EngineState, g: GraphArrays, upto: int | None = None
 ) -> Array:
@@ -872,12 +922,14 @@ def answers(cfg: EngineConfig, state: EngineState) -> Array:
 # --------------------------------------------------------------------------- memory accounting
 def nbytes_accounted(cfg: EngineConfig, state: EngineState) -> int:
     """Difference-entry bytes, the paper's memory metric (8 B per diff:
-    4 B iteration + 4 B state; DroppedVT per §5.1 costings)."""
+    4 B iteration + 4 B state; DroppedVT per §5.1 costings, including the
+    per-query selection rows and Bloom rows of LIVE slots only — a retired
+    slot's zeroed rows are reclaimable and charge nothing)."""
     total = int(state.dstore.count.sum()) * 8
     if state.jstore is not None:
         total += int(state.jstore.count.sum()) * 8
     if cfg.drop.enabled():
-        total += int(state.drop.nbytes_accounted())
+        total += int(state.drop.nbytes_accounted(state.active))
     return total
 
 
@@ -887,7 +939,10 @@ def nbytes_per_shard(
     """Accounted difference bytes resident on each shard of the vertex
     partition (the paper's Table-1 per-machine memory axis): diff-store and
     DroppedVT rows live with their owning vertex block, VDC's J rows with
-    their owning edge-cell block; Bloom bits are replicated per shard."""
+    their owning edge-cell block.  Bloom bits and DropParams rows are
+    *replicated* device-side, but accounted ONCE and apportioned evenly
+    across the shards, so ``sum(nbytes_per_shard(...)) == nbytes_accounted``
+    in every drop mode (the remainder lands on shard 0)."""
     q = cfg.num_queries
     per = (
         np.asarray(state.dstore.count).reshape(q, num_shards, -1).sum(axis=(0, 2))
@@ -908,8 +963,13 @@ def nbytes_per_shard(
                 .sum(axis=(0, 2))
                 * 4
             )
+            replicated = int(state.drop.nbytes_accounted(state.active)) - int(
+                state.drop.det.count.sum() * 4
+            )
         else:
-            per = per + int(state.drop.flt.nbytes_accounted)
+            replicated = int(state.drop.nbytes_accounted(state.active))
+        per = per + replicated // num_shards
+        per[0] += replicated - (replicated // num_shards) * num_shards
     return [int(x) for x in per]
 
 
@@ -1069,6 +1129,11 @@ class DiffIFE:
         )
         self._build_dispatch()
         self.last_stats: MaintainStats | None = None
+        # DroppedVT records lost to Det-Drop evictions DURING sheds (policy
+        # rewrites).  Sweep-time losses surface per sweep in
+        # MaintainStats.det_overflow; a shed runs between sweeps, so its
+        # losses would otherwise vanish from telemetry entirely.
+        self.det_overflow_shed = 0
         # initial computation: every vertex dirty, empty store (inactive
         # slots are masked out of the schedule by ``state.active``); an
         # all-inactive pool (the session's deferred-register path) has
@@ -1089,6 +1154,9 @@ class DiffIFE:
             self._step = jax.jit(
                 partial(batched_step, self.cfg), donate_argnums=(0, 1)
             )
+        # governor reclamation primitive; slot is traced so every rewrite of
+        # any slot reuses one compiled program
+        self._shed = jax.jit(partial(shed_slot, self.cfg))
 
     # ------------------------------------------------------------ device views
     def _device_graph(self, snap: GraphSnapshot) -> GraphArrays:
@@ -1412,13 +1480,77 @@ class DiffIFE:
         return freed
 
     def slot_nbytes(self, slot: int) -> int:
-        """Accounted difference bytes held by one query slot."""
+        """Accounted difference bytes held by one query slot: its D/J diff
+        rows, its DroppedVT records (det rows, or its packed Bloom row), and
+        its DropParams row — so summing over the live slots reproduces
+        :func:`nbytes_accounted` exactly."""
         total = int(np.asarray(self.state.dstore.count[slot]).sum()) * 8
         if self.state.jstore is not None:
             total += int(np.asarray(self.state.jstore.count[slot]).sum()) * 8
         if self.state.drop.det is not None:
             total += int(np.asarray(self.state.drop.det.count[slot]).sum()) * 4
+        if self.cfg.drop.enabled() and bool(np.asarray(self.state.active)[slot]):
+            if self.state.drop.flt is not None:
+                total += (self.state.drop.flt.num_bits + 7) // 8
+            if self.state.drop.params is not None:
+                total += dr.PARAMS_ROW_NBYTES
         return total
+
+    def nbytes_per_query(self) -> dict[int, int]:
+        """slot → accounted bytes, for every live slot (the governor's
+        per-[Q] memory breakdown).  One device→host pull per array — this
+        runs on every enforcement pass, so per-slot fetches would cost
+        O(Q) syncs per batch."""
+        per = np.asarray(self.state.dstore.count).sum(axis=1) * 8
+        if self.state.jstore is not None:
+            per = per + np.asarray(self.state.jstore.count).sum(axis=1) * 8
+        if self.state.drop.det is not None:
+            per = per + np.asarray(self.state.drop.det.count).sum(axis=1) * 4
+        fixed = 0
+        if self.cfg.drop.enabled():
+            if self.state.drop.flt is not None:
+                fixed += (self.state.drop.flt.num_bits + 7) // 8
+            if self.state.drop.params is not None:
+                fixed += dr.PARAMS_ROW_NBYTES
+        return {s: int(per[s]) + fixed for s in self.active_slots()}
+
+    def recompute_cost_per_query(self) -> dict[int, int]:
+        """slot → cumulative dropped-diff repair count (the engine's cheap
+        online recompute-cost signal, Fig. 6b's counter per query row)."""
+        per = np.asarray(self.state.repair_counts).sum(axis=1)
+        return {s: int(per[s]) for s in self.active_slots()}
+
+    def set_drop_params(self, slot: int, drop_cfg: dr.DropConfig) -> int:
+        """Rewrite a LIVE slot's selection params in place (no recompile —
+        the params are traced ``[Q]`` rows) and shed its stored diffs under
+        the new policy.  Returns the accounted bytes released (≥ 0: a shed
+        trades 8 B change points for ≤4 B DroppedVT records or Bloom bits).
+        """
+        if not bool(np.asarray(self.state.active)[slot]):
+            raise ValueError(f"slot {slot} is not active")
+        if self.state.drop.params is None:
+            if drop_cfg.enabled():
+                raise ValueError(
+                    "cannot enable dropping on an engine built without a "
+                    "DroppedVT representation (cfg.drop.mode='none')"
+                )
+            return 0
+        if drop_cfg.enabled() and drop_cfg.mode != self.cfg.drop.mode:
+            raise ValueError(
+                f"drop mode {drop_cfg.mode!r} does not match the engine's "
+                f"DroppedVT representation {self.cfg.drop.mode!r}"
+            )
+        before = self.slot_nbytes(slot)
+        self.state = self.state._replace(
+            drop=self.state.drop._replace(
+                params=dr.set_params_row(self.state.drop.params, slot, drop_cfg)
+            )
+        )
+        if drop_cfg.enabled():
+            ovf_before = int(self.state.drop.det_overflow)
+            self.state = self._shed(self.state, self.g, jnp.int32(slot))
+            self.det_overflow_shed += int(self.state.drop.det_overflow) - ovf_before
+        return before - self.slot_nbytes(slot)
 
     def active_slots(self) -> list[int]:
         return [int(q) for q in np.nonzero(np.asarray(self.state.active))[0]]

@@ -1,0 +1,310 @@
+"""Memory governor — budget-driven adaptive dropping (closed-loop §5).
+
+The paper shows *what* to drop (Det/Bloom DroppedVT, Random/Degree
+selection) and measures the memory/recompute trade-off per hand-tuned
+policy.  This module operates it: DBSP and Graphsurge both make the system,
+not the user, decide what incremental state to materialize, and a CQP
+serving a churning query population needs the same — a global byte budget
+enforced online by retuning each query's drop policy.
+
+**Policy ladder.**  Each registered query sits on a rung:
+
+    0   its own registered policy (usually no dropping)
+    1…  escalating selection pressure — ``p`` rises along
+        ``GovernorConfig.ladder_p`` and, under Degree selection, τ_min
+        tightens by ``tau_tighten`` per rung
+    top drop-all (p = 1): the dense engine keeps only ≤4 B DroppedVT
+        records / Bloom bits and repairs on access; the host engine
+        interprets drop-all as its **scratch fallback** — the query's
+        difference index is dropped entirely and its answers are
+        re-executed from scratch per batch (zero diff bytes, maximal
+        recompute — the paper's SCRATCH endpoint, per query).
+
+Escalation rewrites the query's ``DropParams`` row in place — PR 3 made
+selection params traced ``[Q]`` arrays, so no engine recompile — and sheds
+already-stored diffs under the new policy (``engine.shed_slot``), so memory
+falls immediately, not just for future writes.
+
+**Victim choice.**  Over budget, the governor escalates the query with the
+most reclaimable bytes per unit of recent recompute cost
+(``bytes / (1 + cost_rate)`` from :class:`RecomputeTelemetry`) — i.e. it
+spends recomputation where it is cheapest.  Queries whose escalation
+coincides with Det-Drop overflow growth are skipped (records lost to
+eviction cannot be repaired, so pushing them harder risks staleness).
+
+**Hysteresis.**  Under ``low_water × budget`` for ``cooldown_passes``
+consecutive passes, the most escalated query steps DOWN one rung (diffs
+regrow naturally as sweeps write points), so a transient spike does not
+pin the population at drop-all forever, and the escalate/de-escalate bands
+never overlap.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import dropping as dr
+from repro.core.telemetry import RecomputeTelemetry
+
+
+@dataclasses.dataclass(frozen=True)
+class GovernorConfig:
+    """Budget-enforcement knobs (the budget itself is ``CQPSession``'s
+    ``budget_bytes``)."""
+
+    representation: str = "det"  # auto-provisioned DroppedVT repr: det | prob
+    ladder_p: tuple[float, ...] = (0.25, 0.5, 0.75, 1.0)  # rungs 1..top
+    selection: str = "random"  # random | degree
+    tau_tighten: float = 4.0  # degree selection: τ_min += k·tau_tighten
+    low_water: float = 0.7  # de-escalate below low_water × budget
+    cooldown_passes: int = 2  # consecutive calm passes before de-escalating
+    max_actions_per_pass: int = 16
+    det_capacity: int = 32  # provisioned representation capacities
+    bloom_bits: int = 1 << 10
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.representation not in ("det", "prob"):
+            raise ValueError(f"unknown representation {self.representation!r}")
+        if self.selection not in ("random", "degree"):
+            # fail at construction, not on the first over-budget pass
+            raise ValueError(f"unknown selection {self.selection!r}")
+        if not self.ladder_p or list(self.ladder_p) != sorted(self.ladder_p):
+            raise ValueError("ladder_p must be a nondecreasing, nonempty tuple")
+        if not (0.0 < self.low_water < 1.0):
+            raise ValueError("low_water must be in (0, 1)")
+
+    @property
+    def top_level(self) -> int:
+        return len(self.ladder_p)
+
+    def representation_config(self) -> dr.DropConfig:
+        """The p=0 DroppedVT provisioning a governor session installs when no
+        registered plan brings one: shapes are allocated, nothing drops until
+        the governor escalates."""
+        return dr.DropConfig(
+            mode=self.representation,
+            selection=self.selection,
+            p=0.0,
+            det_capacity=self.det_capacity,
+            bloom_bits=self.bloom_bits,
+            seed=self.seed,
+        )
+
+    def rung_config(self, level: int, base: dr.DropConfig) -> dr.DropConfig:
+        """The DropConfig for one query at ladder ``level``.
+
+        Level 0 restores ``base`` (the query's registered policy).  Higher
+        rungs keep the query's seed when it already had one — the stateless
+        coin then makes successive rungs' drop sets nested, so escalation
+        monotonically sheds and de-escalation never thrashes the store.
+        """
+        if level <= 0:
+            return base
+        p = self.ladder_p[min(level, self.top_level) - 1]
+        degree_sel = self.selection == "degree"
+        return dr.DropConfig(
+            mode=self.representation,
+            selection=self.selection,
+            p=float(p),
+            tau_min=(2.0 + self.tau_tighten * level) if degree_sel else 2.0,
+            det_capacity=self.det_capacity,
+            bloom_bits=self.bloom_bits,
+            seed=base.seed if base.enabled() else self.seed,
+        )
+
+
+@dataclasses.dataclass
+class GovernorAction:
+    """One retuning decision, for the serving log / JSON report."""
+
+    seq: int  # session.updates_applied when the action fired
+    qid: int
+    kind: str  # "escalate" | "deescalate"
+    level_from: int
+    level_to: int
+    bytes_freed: int
+    nbytes_after: int
+    reason: str
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class MemoryGovernor:
+    """Budget-enforcement loop over one :class:`~repro.core.session.CQPSession`.
+
+    The session calls :meth:`enforce` after every ingest / register /
+    deregister; the governor meters per-query bytes through the engine
+    protocol, folds recompute signals into :class:`RecomputeTelemetry`, and
+    walks queries along the policy ladder until the byte budget holds.
+    """
+
+    def __init__(
+        self,
+        budget_bytes: int,
+        cfg: GovernorConfig | None = None,
+        telemetry: RecomputeTelemetry | None = None,
+    ) -> None:
+        if budget_bytes <= 0:
+            raise ValueError("budget_bytes must be positive")
+        self.budget_bytes = int(budget_bytes)
+        self.cfg = cfg or GovernorConfig()
+        self.telemetry = telemetry or RecomputeTelemetry()
+        self.levels: dict[int, int] = {}  # qid → ladder rung
+        self.actions: list[GovernorAction] = []
+        self._base: dict[int, dr.DropConfig] = {}  # qid → registered policy
+        # det-overflow escalation guard: overflow growth is attributed to the
+        # most recently escalated query (sheds and the drops its new policy
+        # causes are the prime suspects), which is then barred from further
+        # escalation until it de-escalates — never a global lockout
+        self._overflow_blocked: set[int] = set()
+        self._last_escalated: int | None = None
+        self._overflow_mark = 0
+        # bytes each query's escalations reclaimed (net of observed regrowth)
+        # — the de-escalation guard's regrowth estimate
+        self._reclaimed: dict[int, int] = {}
+        self._calm_passes = 0
+        self.passes = 0
+
+    # ------------------------------------------------------------ lifecycle
+    def on_register(self, qid: int, base: dr.DropConfig) -> None:
+        self.levels[qid] = 0
+        self._base[qid] = base
+
+    def on_deregister(self, qid: int) -> None:
+        self.levels.pop(qid, None)
+        self._base.pop(qid, None)
+        self._overflow_blocked.discard(qid)
+        self._reclaimed.pop(qid, None)
+        if self._last_escalated == qid:
+            self._last_escalated = None
+
+    # ---------------------------------------------------------- enforcement
+    def enforce(self, session) -> list[GovernorAction]:
+        """One budget-enforcement pass; returns the actions taken."""
+        per_q = session._nbytes_per_query_map()
+        self.telemetry.observe(
+            nbytes_per_query=per_q,
+            cost_per_query=session._recompute_cost_map(),
+            stats=session.last_stats,
+            updates_applied=session.updates_applied,
+        )
+        new_actions: list[GovernorAction] = []
+        total = sum(per_q.values())
+        self._check_overflow(session)
+        while total > self.budget_bytes and len(new_actions) < self.cfg.max_actions_per_pass:
+            cands = [
+                qid
+                for qid in per_q
+                if self.levels.get(qid, 0) < self.cfg.top_level
+                and qid not in self._overflow_blocked
+            ]
+            if not cands:
+                break
+            qid = max(
+                cands,
+                key=lambda q: per_q[q] / (1.0 + self.telemetry.cost_rate(q)),
+            )
+            # a shed's delta is exactly the global delta (it touches one
+            # slot's accounted rows), so the loop never re-meters the engine
+            action = self._step(session, qid, +1, "over budget", total)
+            new_actions.append(action)
+            per_q[qid] = max(per_q[qid] - action.bytes_freed, 0)
+            total = action.nbytes_after
+            self._check_overflow(session)
+        if new_actions:
+            self._calm_passes = 0
+        elif total <= self.cfg.low_water * self.budget_bytes:
+            self._calm_passes += 1
+            # predictive guard: only relieve a query whose reclaimed bytes
+            # would still fit under the low-water mark if they all came back
+            # — de-escalating at the floor just to re-escalate next pass
+            # (host: a full index rebuild each way) is the flap hysteresis
+            # exists to prevent
+            headroom_for = self.cfg.low_water * self.budget_bytes - total
+            escalated = [
+                q
+                for q in per_q
+                if self.levels.get(q, 0) > 0
+                and self._reclaimed.get(q, 0) <= headroom_for
+            ]
+            if escalated and self._calm_passes > self.cfg.cooldown_passes:
+                # relieve the query paying the most recompute per update
+                qid = max(escalated, key=self.telemetry.cost_rate)
+                new_actions.append(
+                    self._step(session, qid, -1, "headroom recovered", total)
+                )
+                self._calm_passes = 0
+        else:
+            self._calm_passes = 0
+        self.actions.extend(new_actions)
+        self.passes += 1
+        return new_actions
+
+    def _check_overflow(self, session) -> None:
+        """Attribute DroppedVT record loss (sweep evictions + shed evictions)
+        to the most recently escalated query and bar it from further
+        escalation — lost records cannot be repaired, so pushing the same
+        query harder risks stale answers.  De-escalation lifts the bar."""
+        overflow = self.telemetry.det_overflow_total + session._det_overflow_shed()
+        if overflow > self._overflow_mark and self._last_escalated is not None:
+            self._overflow_blocked.add(self._last_escalated)
+            self._last_escalated = None
+        self._overflow_mark = overflow
+
+    def _step(
+        self, session, qid: int, direction: int, reason: str, total: int
+    ) -> GovernorAction:
+        lvl = self.levels.get(qid, 0)
+        new_lvl = max(lvl + direction, 0)
+        base = self._base.get(qid, dr.DropConfig())
+        freed = session._set_drop_policy_qid(
+            qid, self.cfg.rung_config(new_lvl, base)
+        )
+        if direction > 0:
+            self._last_escalated = qid
+            self._reclaimed[qid] = self._reclaimed.get(qid, 0) + max(int(freed), 0)
+            after = total - int(freed)
+        else:
+            # de-escalation may regrow state (host scratch-fallback exit
+            # rebuilds the diff index), so re-meter this one
+            self._overflow_blocked.discard(qid)
+            after = session.nbytes()
+            regrow = max(after - total, 0)
+            self._reclaimed[qid] = (
+                0 if new_lvl == 0 else max(self._reclaimed.get(qid, 0) - regrow, 0)
+            )
+        self.levels[qid] = new_lvl
+        return GovernorAction(
+            seq=session.updates_applied,
+            qid=qid,
+            kind="escalate" if direction > 0 else "deescalate",
+            level_from=lvl,
+            level_to=new_lvl,
+            bytes_freed=int(freed),
+            nbytes_after=after,
+            reason=reason,
+        )
+
+    # ------------------------------------------------------------------ api
+    def headroom(self, session) -> int:
+        return self.budget_bytes - session.nbytes()
+
+    def snapshot(self, session=None) -> dict:
+        out = {
+            "budget_bytes": self.budget_bytes,
+            "passes": self.passes,
+            "escalations": sum(1 for a in self.actions if a.kind == "escalate"),
+            "deescalations": sum(
+                1 for a in self.actions if a.kind == "deescalate"
+            ),
+            "levels": {str(q): lvl for q, lvl in sorted(self.levels.items())},
+            "overflow_blocked": sorted(self._overflow_blocked),
+            "actions": [a.to_dict() for a in self.actions],
+            "telemetry": self.telemetry.snapshot(),
+        }
+        if session is not None:
+            out["headroom_bytes"] = self.headroom(session)
+            out["det_overflow_shed"] = session._det_overflow_shed()
+        return out

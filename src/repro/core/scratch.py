@@ -136,6 +136,23 @@ class ScratchEngine:
     def active_slots(self) -> list[int]:
         return sorted(self.plans)
 
+    # ----------------------------------------------------- governor surface
+    def nbytes_per_query(self) -> dict[int, int]:
+        return {s: 0 for s in sorted(self.plans)}  # SCRATCH holds no diffs
+
+    def recompute_cost_per_query(self) -> dict[int, int]:
+        """Every slot pays the full re-execution; apportion the cumulative
+        scheduled count evenly so the governor's signals stay comparable."""
+        n = max(len(self.plans), 1)
+        total = 0 if self.last_stats is None else int(self.last_stats.scheduled)
+        return {s: total // n for s in sorted(self.plans)}
+
+    def set_drop_params(self, slot: int, cfg) -> int:
+        """SCRATCH is already the zero-memory endpoint of the ladder."""
+        if slot not in self.plans:
+            raise ValueError(f"slot {slot} is not registered")
+        return 0
+
     # ------------------------------------------------------------ execution
     def _init_matrix(self) -> np.ndarray:
         """[num_slots, V]; retired slots re-run as identity rows (their

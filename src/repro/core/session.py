@@ -44,6 +44,7 @@ import numpy as np
 from repro.core import dropping as dr
 from repro.core import plan as qp
 from repro.core.engine import DiffIFE, EngineConfig, MaintainStats
+from repro.core.governor import GovernorConfig, MemoryGovernor
 from repro.core.graph import DynamicGraph, product_graph
 from repro.core.scratch import ScratchEngine
 from repro.core.sparse_engine import SparseDiffIFE
@@ -71,6 +72,12 @@ class EngineProtocol(Protocol):
     def answers(self) -> np.ndarray: ...
 
     def nbytes(self) -> int: ...
+
+    def nbytes_per_query(self) -> dict[int, int]: ...
+
+    def recompute_cost_per_query(self) -> dict[int, int]: ...
+
+    def set_drop_params(self, slot: int, cfg: dr.DropConfig) -> int: ...
 
     def active_slots(self) -> list[int]: ...
 
@@ -181,6 +188,19 @@ class DenseEngine:
     def nbytes(self) -> int:
         return self.impl.nbytes()
 
+    def nbytes_per_query(self) -> dict[int, int]:
+        return self.impl.nbytes_per_query()
+
+    def recompute_cost_per_query(self) -> dict[int, int]:
+        return self.impl.recompute_cost_per_query()
+
+    def set_drop_params(self, slot: int, cfg: dr.DropConfig) -> int:
+        return self.impl.set_drop_params(slot, cfg)
+
+    @property
+    def det_overflow_shed(self) -> int:
+        return self.impl.det_overflow_shed
+
     def active_slots(self) -> list[int]:
         return self.impl.active_slots()
 
@@ -219,11 +239,35 @@ class CQPSession:
         batch_capacity: int = 32,
         min_slots: int = 1,
         product_capacity: int | None = None,
+        budget_bytes: int | None = None,
+        governor: GovernorConfig | None = None,
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
         if mesh is not None and engine != "dense":
             raise ValueError("mesh sharding is a dense-engine feature")
+        if governor is not None and budget_bytes is None:
+            raise ValueError("a GovernorConfig needs budget_bytes to enforce")
+        self._governor: MemoryGovernor | None = None
+        if budget_bytes is not None:
+            gcfg = governor or GovernorConfig()
+            if engine == "dense":
+                # the governor escalates by rewriting DropParams rows, so the
+                # dense engine needs a DroppedVT representation provisioned
+                # up front (p = 0: nothing drops until an escalation)
+                if drop is None:
+                    drop = gcfg.representation_config()
+                elif not drop.enabled():
+                    raise ValueError(
+                        "budget_bytes on a dense session needs an enabled "
+                        "DroppedVT representation (drop=None auto-provisions "
+                        "one; drop.mode='none' leaves the governor no lever)"
+                    )
+                elif drop.mode != gcfg.representation:
+                    # the session's representation is fixed by `drop`; the
+                    # ladder must escalate within it
+                    gcfg = dataclasses.replace(gcfg, representation=drop.mode)
+            self._governor = MemoryGovernor(int(budget_bytes), gcfg)
         self.graph = graph
         self.engine_kind = engine
         self.mesh = mesh
@@ -251,6 +295,7 @@ class CQPSession:
         self.deregistered_total = 0
         self.updates_applied = 0
         self.bytes_freed_total = 0
+        self.bytes_shed_total = 0  # reclaimed by drop-policy rewrites
 
     # ------------------------------------------------------------ lifecycle
     def register(self, plan: qp.QueryPlan) -> QueryHandle:
@@ -315,7 +360,10 @@ class CQPSession:
             self._handles[qid] = slot
             self._plans[qid] = plan
             self.registered_total += 1
+            if self._governor is not None:
+                self._governor.on_register(qid, plan.drop)
             handles.append(QueryHandle(qid=qid, plan=plan))
+        self._govern()
         return handles
 
     def deregister(self, handle: QueryHandle) -> int:
@@ -326,6 +374,9 @@ class CQPSession:
         del self._handles[handle.qid], self._plans[handle.qid]
         self.deregistered_total += 1
         self.bytes_freed_total += freed
+        if self._governor is not None:
+            self._governor.on_deregister(handle.qid)
+        self._govern()
         return freed
 
     def _slot(self, handle: QueryHandle) -> int:
@@ -428,8 +479,11 @@ class CQPSession:
             self.graph.apply_batch(updates)
             updates = self._translate(updates)
             if not updates:
+                self._govern()
                 return self.last_stats
-        return engine_call(updates)
+        out = engine_call(updates)
+        self._govern()
+        return out
 
     def apply_updates(self, updates):
         """Ingest one δE batch and maintain every registered query."""
@@ -468,6 +522,63 @@ class CQPSession:
     def nbytes(self) -> int:
         return 0 if self._impl is None else self._impl.nbytes()
 
+    def nbytes_per_query(self) -> list[int]:
+        """Accounted bytes per registered query, aligned with
+        :meth:`handles` (ascending qid) — the ``[Q]`` breakdown the memory
+        governor meters."""
+        per = self._nbytes_per_query_map()
+        return [per[qid] for qid in sorted(self._plans)]
+
+    def _nbytes_per_query_map(self) -> dict[int, int]:
+        if self._impl is None:
+            return {}
+        by_slot = self._impl.nbytes_per_query()
+        return {qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()}
+
+    def _recompute_cost_map(self) -> dict[int, int]:
+        if self._impl is None:
+            return {}
+        by_slot = self._impl.recompute_cost_per_query()
+        return {qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()}
+
+    # --------------------------------------------------------- drop policy
+    def set_drop_policy(self, handle: QueryHandle, cfg: dr.DropConfig) -> int:
+        """Rewrite a live query's §5 selection policy mid-stream (the
+        governor's primitive, exposed for manual tuning).  The engine sheds
+        stored diffs the new policy selects; returns the bytes released."""
+        return self._set_drop_policy_qid(self._require_qid(handle), cfg)
+
+    def _require_qid(self, handle: QueryHandle) -> int:
+        if handle.qid not in self._handles:
+            raise ValueError(f"handle {handle.qid} is not registered")
+        return handle.qid
+
+    def _set_drop_policy_qid(self, qid: int, cfg: dr.DropConfig) -> int:
+        freed = self._impl.set_drop_params(self._handles[qid], cfg)
+        self._plans[qid] = dataclasses.replace(self._plans[qid], drop=cfg)
+        self.bytes_shed_total += max(int(freed), 0)
+        return int(freed)
+
+    def _det_overflow_shed(self) -> int:
+        """DroppedVT records lost to Det-Drop evictions during sheds (the
+        governor's escalation guard folds these in; sweep-time losses arrive
+        via MaintainStats)."""
+        return int(getattr(self._impl, "det_overflow_shed", 0))
+
+    # ------------------------------------------------------------ governor
+    @property
+    def governor(self) -> MemoryGovernor | None:
+        return self._governor
+
+    @property
+    def budget_bytes(self) -> int | None:
+        return None if self._governor is None else self._governor.budget_bytes
+
+    def _govern(self) -> None:
+        if self._governor is None or self._impl is None or not self._handles:
+            return
+        self._governor.enforce(self)
+
     @property
     def num_queries(self) -> int:
         return len(self._handles)
@@ -485,8 +596,13 @@ class CQPSession:
             "deregistered_total": self.deregistered_total,
             "updates_applied": self.updates_applied,
             "bytes_freed_total": self.bytes_freed_total,
+            "bytes_shed_total": self.bytes_shed_total,
             "nbytes": self.nbytes(),
+            "nbytes_per_query": self.nbytes_per_query(),
+            "query_qids": sorted(self._plans),
         }
+        if self._governor is not None:
+            out["governor"] = self._governor.snapshot(self)
         if isinstance(self._impl, DenseEngine):
             out["slot_capacity"] = self._impl.impl.slot_capacity
             out["shards"] = self._impl.impl.num_shards

@@ -31,6 +31,7 @@ from typing import Sequence
 
 import numpy as np
 
+from repro.core import dropping as dr
 from repro.core import plan as qp
 from repro.core.graph import DynamicGraph
 
@@ -69,6 +70,11 @@ class SparseDiffIFE:
         self._free: list[int] = []
         self._num_slots = 0
         self.work = 0  # aggregator re-runs (the paper's work metric)
+        self.work_per_slot: dict[int, int] = {}  # per-query recompute signal
+        # governor scratch fallback: slots whose difference index was dropped
+        # entirely — answers re-executed from scratch per batch (slot → row)
+        self._scratch_rows: dict[int, np.ndarray] = {}
+        self._drop_cfg: dict[int, dr.DropConfig] = {}  # recorded policies
         self.sources = [] if sources is None else [int(s) for s in sources]
         for s in self.sources:
             if khop is not None:
@@ -91,6 +97,7 @@ class SparseDiffIFE:
         self.plans[slot] = plan
         self.diffs[slot] = defaultdict(list)
         self._init_rows[slot] = plan.build_init(self.graph.num_vertices)
+        self.work_per_slot[slot] = 0
         self.max_iters = max(self.max_iters, int(plan.max_iters))
         self._initial(slot)
         return slot
@@ -99,14 +106,81 @@ class SparseDiffIFE:
         """Drop a query's difference index; returns the bytes released."""
         if slot not in self.plans:
             raise ValueError(f"slot {slot} is not registered")
-        freed = sum(len(p) for p in self.diffs[slot].values()) * 8
+        freed = self.slot_nbytes(slot)
         del self.plans[slot], self.diffs[slot], self._init_rows[slot]
+        self._scratch_rows.pop(slot, None)
+        self._drop_cfg.pop(slot, None)
+        self.work_per_slot.pop(slot, None)
         self._free.append(slot)
         self._free.sort(reverse=True)
         return freed
 
     def active_slots(self) -> list[int]:
         return sorted(self.plans)
+
+    # ----------------------------------------------------- governor surface
+    def slot_nbytes(self, slot: int) -> int:
+        return sum(len(p) for p in self.diffs[slot].values()) * 8
+
+    def nbytes_per_query(self) -> dict[int, int]:
+        """slot → accounted diff bytes (scratch-fallback slots hold none)."""
+        return {s: self.slot_nbytes(s) for s in sorted(self.plans)}
+
+    def recompute_cost_per_query(self) -> dict[int, int]:
+        """slot → cumulative aggregator re-runs charged to that query."""
+        return {s: self.work_per_slot.get(s, 0) for s in sorted(self.plans)}
+
+    def set_drop_params(self, slot: int, cfg: dr.DropConfig) -> int:
+        """Host form of the policy ladder — two effective rungs.
+
+        The pointer engine has no DroppedVT repair path, so partial rungs
+        (0 < p < 1) are recorded but shed nothing; **drop-all** (p ≥ 1)
+        triggers the scratch fallback: the slot's whole difference index is
+        released and its answers are re-executed from scratch per batch
+        (paper's SCRATCH endpoint, applied per query).  De-escalating below
+        drop-all rebuilds the index from the live adjacency (one static IFE
+        run — register-convergence makes this exact).  Returns bytes freed.
+        """
+        if slot not in self.plans:
+            raise ValueError(f"slot {slot} is not registered")
+        self._drop_cfg[slot] = cfg
+        # drop-all means the policy selects EVERY candidate: p ≥ 1 under
+        # Random, or p ≥ 1 with no τ_max carve-out under Degree (everything
+        # at or below τ_max drops by coin, below τ_min unconditionally)
+        scratch = (
+            cfg.enabled()
+            and cfg.p >= 1.0
+            and (cfg.selection == "random" or cfg.tau_max == INF)
+        )
+        if scratch and slot not in self._scratch_rows:
+            freed = self.slot_nbytes(slot)
+            self.diffs[slot] = defaultdict(list)
+            self._scratch_rows[slot] = self._scratch_eval(slot)
+            return freed
+        if not scratch and slot in self._scratch_rows:
+            del self._scratch_rows[slot]
+            self.diffs[slot] = defaultdict(list)
+            self._initial(slot)  # rebuild the trace from the live adjacency
+        return 0
+
+    def _scratch_eval(self, q: int) -> np.ndarray:
+        """Static IFE run to fixpoint — value rows only, no change points."""
+        vals = np.asarray(self._init_rows[q], np.float32).copy()
+        for _ in range(self.max_iters):
+            nxt = vals.copy()
+            for v, ins in self.in_nbrs.items():
+                best = nxt[v]
+                for u, w in ins.items():
+                    cand = self._msg(q, float(vals[u]), w)
+                    if cand < best:
+                        best = cand
+                nxt[v] = best
+                self.work += 1
+                self.work_per_slot[q] = self.work_per_slot.get(q, 0) + 1
+            if np.array_equal(nxt, vals):
+                break
+            vals = nxt
+        return vals
 
     # ------------------------------------------------------------- semiring
     def _msg(self, q: int, val: float, w: float) -> float:
@@ -135,6 +209,7 @@ class SparseDiffIFE:
         """Rerun the aggregator (Min) for v at iteration i — the join is
         computed on demand from in-neighbour states at i−1 (JOD §4)."""
         self.work += 1
+        self.work_per_slot[q] = self.work_per_slot.get(q, 0) + 1
         best = self._value_at(q, v, i - 1)  # carry (includes implicit init)
         for u, w in self.in_nbrs.get(v, {}).items():
             cand = self._msg(q, self._value_at(q, u, i - 1), w)
@@ -199,6 +274,9 @@ class SparseDiffIFE:
         self.graph.apply_batch(updates)
 
         for q in sorted(self.plans):
+            if q in self._scratch_rows:  # drop-all: re-execute, no diffs
+                self._scratch_rows[q] = self._scratch_eval(q)
+                continue
             horizon = self._horizon(q)
             frontier: set[int] = set()
             i = 1
@@ -224,6 +302,8 @@ class SparseDiffIFE:
 
     # ------------------------------------------------------------------ api
     def answers_row(self, slot: int) -> np.ndarray:
+        if slot in self._scratch_rows:
+            return self._scratch_rows[slot].copy()
         out = np.asarray(self._init_rows[slot], np.float32).copy()
         for vtx, pts in self.diffs[slot].items():
             if pts:

@@ -14,6 +14,12 @@ maintenance latency, peak diff-store bytes, and churn-event latencies.
     host     the paper's pointer machine (work ∝ affected set, on the host)
     scratch  from-scratch re-execution baseline
 
+``--budget-bytes`` puts the stream under the memory governor (DESIGN.md
+§10): a global accounted-byte budget enforced online by escalating each
+query along the drop-policy ladder; ``--governor det|prob`` picks the
+provisioned DroppedVT representation.  The JSON report then carries the
+per-query byte breakdown, the governor's action log, and its headroom.
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.cqp_serve --smoke
@@ -24,6 +30,9 @@ Examples::
       PYTHONPATH=src python -m repro.launch.cqp_serve --smoke --json \
           --engine $eng --register-at 2 --deregister-at 4
     done
+    # closed-loop memory budget (Bloom DroppedVT, 4 KiB global)
+    PYTHONPATH=src python -m repro.launch.cqp_serve --smoke --json \
+        --budget-bytes 4096 --governor prob
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.cqp_serve --smoke --mesh data
 """
@@ -110,6 +119,16 @@ def build_session(args):
     if mesh is not None and args.engine != "dense":
         raise SystemExit("--mesh shards the dense engine only")
     plans = initial_plans(args)
+    gov_kw = {}
+    if args.budget_bytes is not None:
+        from repro.core.governor import GovernorConfig
+
+        gov_kw = dict(
+            budget_bytes=args.budget_bytes,
+            governor=GovernorConfig(
+                representation=args.governor, bloom_bits=args.governor_bloom_bits
+            ),
+        )
     session = CQPSession(
         graph,
         engine=args.engine,
@@ -117,6 +136,7 @@ def build_session(args):
         backend=args.backend,
         batch_capacity=args.batch,
         min_slots=len(plans),
+        **gov_kw,
     )
     handles = session.register_many(plans)
     return session, handles, log
@@ -161,6 +181,11 @@ def serve(args) -> dict:
     served = len(chunks[0])
     churn_seq = 0
     t_churn = 0.0
+    # governor settling window: the first SETTLE post-warmup chunks may run
+    # over budget while policies escalate; the peak after it must respect it
+    settle = 2
+    settled_peak = 0
+    settled_samples = 0
     t_serve0 = time.perf_counter()
     for k, chunk in enumerate(chunks[1:], start=1):
         for _ in range(register_at.get(k, 0)):
@@ -184,6 +209,13 @@ def serve(args) -> dict:
         served += len(chunk)
         peak_bytes = max(peak_bytes, session.nbytes())
         peak_dev_bytes = max(peak_dev_bytes, dev_peak())
+        if k > settle:
+            settled_peak = max(settled_peak, session.nbytes())
+            settled_samples += 1
+    if settled_samples == 0:
+        # stream shorter than the settling window: judge the final state
+        # rather than vacuously reporting a respected budget
+        settled_peak = session.nbytes()
     t_serve = time.perf_counter() - t_serve0 - t_churn
 
     steady = bool(lat_s)
@@ -215,9 +247,18 @@ def serve(args) -> dict:
         "register_ms": [float(x) for x in reg_ms],
         "deregister_ms": [float(x) for x in dereg_ms],
         "bytes_freed": int(bytes_freed),
+        "nbytes_per_query": [int(x) for x in session.nbytes_per_query()],
         "init_s": t_init,
         "compile_s": t_compile,
     }
+    if session.governor is not None:
+        gov = session.governor
+        out["governor"] = {
+            **gov.snapshot(session),
+            "representation": gov.cfg.representation,
+            "settled_peak_bytes": int(settled_peak),
+            "budget_respected": bool(settled_peak <= gov.budget_bytes),
+        }
     print(
         f"cqp_serve[{args.query}/{args.engine}/{args.backend}] "
         f"Q={args.queries}→{out['final_queries']} B={b}: "
@@ -240,6 +281,16 @@ def serve(args) -> dict:
         f"over {out['shards']} shard(s) "
         f"(init {t_init:.2f}s, first-chunk compile {t_compile:.2f}s)"
     )
+    if "governor" in out:
+        g = out["governor"]
+        print(
+            f"  governor[{g['representation']}]: budget={g['budget_bytes']} "
+            f"settled-peak={g['settled_peak_bytes']} "
+            f"headroom={g['headroom_bytes']} "
+            f"({'respected' if g['budget_respected'] else 'VIOLATED'}; "
+            f"{g['escalations']} escalation(s), "
+            f"{g['deescalations']} de-escalation(s))"
+        )
     if args.json:
         print(json.dumps(out))
     return out
@@ -279,6 +330,27 @@ def main() -> None:
         default=None,
         metavar="CHUNK",
         help="deregister the oldest live query before chunk CHUNK (repeatable)",
+    )
+    ap.add_argument(
+        "--budget-bytes",
+        type=int,
+        default=None,
+        help="global accounted-byte budget enforced by the memory governor "
+        "(escalates per-query drop policies online; DESIGN.md §10)",
+    )
+    ap.add_argument(
+        "--governor",
+        choices=("det", "prob"),
+        default="prob",
+        help="DroppedVT representation the governor provisions "
+        "(det: ≤4 B/record floor ~ half the static bytes; prob: fixed "
+        "Bloom rows, deepest reclamation)",
+    )
+    ap.add_argument(
+        "--governor-bloom-bits",
+        type=int,
+        default=1 << 9,
+        help="per-query Bloom bits for --governor prob (64 B packed default)",
     )
     ap.add_argument(
         "--smoke", action="store_true", help="tiny CPU-friendly end-to-end run"

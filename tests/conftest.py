@@ -1,0 +1,23 @@
+"""Shared test configuration.
+
+Hypothesis: an explicit profile with ``deadline=None`` is registered and
+loaded for EVERY suite.  CI boxes (and the emulated-8-device jobs) run the
+jit-heavy property tests orders of magnitude slower on their first example
+than on later ones, which trips Hypothesis's per-example deadline during
+shrinking and produces intermittent ``DeadlineExceeded``/``too_slow`` flakes
+— wall clock is bounded by ``max_examples`` at each ``@settings`` site
+instead.
+"""
+
+try:  # hypothesis is an optional test dependency (importorskip elsewhere)
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-ci",
+        deadline=None,
+        derandomize=True,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile("repro-ci")
+except ImportError:  # pragma: no cover
+    pass

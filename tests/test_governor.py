@@ -1,0 +1,583 @@
+"""Memory governor: closed-loop budget enforcement (DESIGN.md §10).
+
+The acceptance property: under a fixed ``budget_bytes``, a churny
+multi-query stream (register/deregister + updates) keeps
+``session.nbytes() ≤ budget`` after a bounded settling window, while every
+answer stays exactly equal to the SCRATCH oracle — across the dense and
+host engines and (dense) ≥2 shard counts.  Plus: policy-ladder mechanics,
+``set_drop_policy`` shedding, de-escalation hysteresis, telemetry
+surfacing, and a ``cqp_serve --budget-bytes`` subprocess smoke.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dropping as dr
+from repro.core import plan as qplan
+from repro.core.governor import GovernorConfig, MemoryGovernor
+from repro.core.graph import DynamicGraph
+from repro.core.session import CQPSession
+from repro.core.telemetry import RecomputeTelemetry
+from repro.launch.mesh import make_data_mesh
+
+V = 16
+MAX_ITERS = 16
+NDEV = jax.device_count()
+
+needs8 = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def workload(seed=5, v=V, e=48, nbatches=6):
+    rng = np.random.default_rng(seed)
+    seen = {}
+    while len(seen) < e:
+        u, w = int(rng.integers(0, v)), int(rng.integers(0, v))
+        if u != w:
+            seen[(u, w)] = (u, w, float(rng.integers(1, 9)))
+    edges = list(seen.values())
+    initial, pool = edges[: e * 3 // 4], edges[e * 3 // 4 :]
+    present = {(u, w) for (u, w, _x) in initial}
+    batches = []
+    for _ in range(nbatches):
+        batch = []
+        for _ in range(4):
+            if present and rng.random() < 0.35:
+                u, w = sorted(present)[int(rng.integers(0, len(present)))]
+                batch.append((u, w, 0, 1.0, -1))
+                present.discard((u, w))
+            elif pool:
+                u, w, x = pool.pop()
+                batch.append((u, w, 0, x, +1))
+                present.add((u, w))
+        batches.append(batch)
+    return initial, batches
+
+
+def _graph(initial, v=V):
+    return DynamicGraph(v, initial, capacity=256)
+
+
+def _static_peak(initial, batches, plans):
+    """Peak accounted bytes of the no-governor (static 'none') run."""
+    s = CQPSession(_graph(initial), engine="dense")
+    s.register_many(plans)
+    peak = s.nbytes()
+    for b in batches:
+        s.apply_updates(b)
+        peak = max(peak, s.nbytes())
+    return peak
+
+
+def _oracle_answers(initial, batches, live_plans, churn):
+    """SCRATCH replay of the same churny stream → answers per live plan."""
+    s = CQPSession(_graph(initial), engine="scratch")
+    handles = s.register_many(live_plans[: churn["q0"]])
+    for j, b in enumerate(batches):
+        s.apply_updates(b)
+        if j == churn["register_at"]:
+            handles.append(s.register(churn["plan"]))
+        if j == churn["deregister_at"]:
+            s.deregister(handles.pop(0))
+    return [s.answers(h) for h in handles]
+
+
+# --------------------------------------------------------------- acceptance
+@pytest.mark.parametrize(
+    "engine,shards",
+    [
+        ("dense", 1),
+        pytest.param("dense", 8, marks=needs8),
+        ("host", 1),
+    ],
+)
+def test_budget_closed_loop_churny_stream(engine, shards):
+    """budget held after settling + answers exactly equal the scratch oracle."""
+    initial, batches = workload(seed=7)
+    q0 = 3
+    plans = [qplan.sssp(i, max_iters=MAX_ITERS) for i in range(q0)]
+    extra = qplan.sssp(9, max_iters=MAX_ITERS)
+    churn = {"q0": q0, "register_at": 1, "deregister_at": 3, "plan": extra}
+
+    peak = _static_peak(initial, batches, plans)
+    # Prob-Drop's reclamation floor is the fixed per-query footprint (packed
+    # Bloom row + params row); the budget must sit above it — representation
+    # physics, not governor slack — yet well under the static peak.  Det-Drop
+    # (whose floor grows with drop history, the paper's d/(d+s) bound) is
+    # exercised by the shed/mechanics tests below.
+    bloom_bits = 1 << 7
+    floor = (q0 + 1) * (bloom_bits // 8 + dr.PARAMS_ROW_NBYTES)
+    budget = max(int(peak * 0.5), floor + 48)
+    assert budget < peak  # the governor has real work to do
+
+    mesh = make_data_mesh(shards) if shards > 1 else None
+    s = CQPSession(
+        _graph(initial),
+        engine=engine,
+        mesh=mesh,
+        budget_bytes=budget,
+        governor=GovernorConfig(representation="prob", bloom_bits=bloom_bits),
+    )
+    handles = s.register_many(plans)
+    settle = 1  # the governor enforces after every batch: one batch to settle
+    for j, b in enumerate(batches):
+        s.apply_updates(b)
+        if j == churn["register_at"]:
+            handles.append(s.register(extra))
+        if j == churn["deregister_at"]:
+            s.deregister(handles.pop(0))
+        if j >= settle:
+            assert s.nbytes() <= budget, (
+                j,
+                s.nbytes(),
+                budget,
+                s.governor.levels,
+            )
+    assert s.governor is not None and s.governor.actions
+    assert any(a.kind == "escalate" for a in s.governor.actions)
+    oracle = _oracle_answers(initial, batches, plans + [extra], churn)
+    for h, want in zip(handles, oracle):
+        np.testing.assert_array_equal(s.answers(h), want)
+
+
+def test_budget_property_stream():
+    """Hypothesis: arbitrary insert/delete streams — budget after settling +
+    scratch-oracle exactness, dense and host."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    v = 12
+
+    @st.composite
+    def stream(draw):
+        mk = st.tuples(
+            st.integers(0, v - 1), st.integers(0, v - 1), st.integers(1, 9)
+        )
+        edges = [
+            (u, w, float(x))
+            for (u, w, x) in draw(st.lists(mk, min_size=8, max_size=20))
+            if u != w
+        ]
+        edges = list({(u, w): (u, w, x) for (u, w, x) in edges}.values())
+        present = {(u, w) for (u, w, _x) in edges}
+        ops = []
+        for _ in range(draw(st.integers(4, 12))):
+            if present and draw(st.booleans()):
+                u, w = draw(st.sampled_from(sorted(present)))
+                ops.append((u, w, 0, 1.0, -1))
+                present.discard((u, w))
+            else:
+                u, w = draw(st.integers(0, v - 1)), draw(st.integers(0, v - 1))
+                if u == w:
+                    continue
+                ops.append((u, w, 0, float(draw(st.integers(1, 9))), +1))
+                present.add((u, w))
+        return edges, ops
+
+    @settings(max_examples=6, deadline=None)
+    @given(wl=stream())
+    def run(wl):
+        edges, ops = wl
+        plans = [qplan.sssp(0, max_iters=12), qplan.sssp(v // 2, max_iters=12)]
+        oracle = CQPSession(DynamicGraph(v, edges, capacity=128), engine="scratch")
+        oh = oracle.register_many(plans)
+        oracle.apply_updates(ops)
+        for engine in ("dense", "host"):
+            s = CQPSession(
+                DynamicGraph(v, edges, capacity=128),
+                engine=engine,
+                budget_bytes=96,  # tight: forces deep escalation
+                governor=GovernorConfig(representation="prob", bloom_bits=1 << 8),
+            )
+            hs = s.register_many(plans)
+            half = len(ops) // 2
+            s.apply_updates(ops[:half])
+            s.apply_updates(ops[half:])  # ≥1 post-settle enforcement pass
+            for a, b in zip(hs, oh):
+                np.testing.assert_array_equal(s.answers(a), oracle.answers(b))
+            # per-query floor: 256-bit bloom row (32 B) + 17 B params row
+            floor = sum(32 + 17 for _ in hs)
+            assert s.nbytes() <= max(96, floor), (engine, s.nbytes())
+
+    run()
+
+
+# ---------------------------------------------------------------- mechanics
+def test_set_drop_policy_sheds_and_stays_exact():
+    """Escalating one query's policy mid-stream sheds ITS stored diffs
+    (bytes fall immediately), leaves the other query untouched, and answers
+    stay exact; de-escalating back is a memory no-op (nested drop sets)."""
+    initial, batches = workload(seed=11)
+    s = CQPSession(_graph(initial), engine="dense", drop=dr.DropConfig(mode="det"))
+    h0 = s.register(qplan.sssp(0, max_iters=MAX_ITERS))
+    h1 = s.register(qplan.sssp(5, max_iters=MAX_ITERS))
+    s.apply_updates(batches[0])
+    ref = CQPSession(_graph(initial), engine="host")
+    r0 = ref.register(qplan.sssp(0, max_iters=MAX_ITERS))
+    r1 = ref.register(qplan.sssp(5, max_iters=MAX_ITERS))
+    ref.apply_updates(batches[0])
+
+    per_before = s.nbytes_per_query()
+    freed = s.set_drop_policy(h0, dr.DropConfig(mode="det", p=1.0, seed=2))
+    per_after = s.nbytes_per_query()
+    assert freed > 0
+    assert per_after[0] == per_before[0] - freed
+    assert per_after[1] == per_before[1]  # untouched neighbour
+    assert s.bytes_shed_total == freed
+
+    # still exact after the shed, including under later updates
+    for b in batches[1:3]:
+        s.apply_updates(b)
+        ref.apply_updates(b)
+    np.testing.assert_array_equal(s.answers(h0), ref.answers(r0))
+    np.testing.assert_array_equal(s.answers(h1), ref.answers(r1))
+
+    # de-escalation: stored survivors have coin u ≥ p, so a weaker policy
+    # sheds nothing (drop sets are nested in p under the stateless hash)
+    assert s.set_drop_policy(h0, dr.DropConfig(mode="det", p=0.3, seed=2)) == 0
+
+
+def test_set_drop_policy_validation():
+    initial, _ = workload()
+    s = CQPSession(_graph(initial), engine="dense", drop=dr.DropConfig(mode="det"))
+    h = s.register(qplan.sssp(0, max_iters=MAX_ITERS))
+    with pytest.raises(ValueError, match="drop mode"):
+        s.set_drop_policy(h, dr.DropConfig(mode="prob", p=0.5))
+    s.deregister(h)
+    with pytest.raises(ValueError, match="not registered"):
+        s.set_drop_policy(h, dr.DropConfig(mode="det", p=0.5))
+    # no representation provisioned → the governor has no lever
+    s2 = CQPSession(_graph(initial), engine="dense")
+    h2 = s2.register(qplan.sssp(0, max_iters=MAX_ITERS))
+    with pytest.raises(ValueError, match="representation"):
+        s2.set_drop_policy(h2, dr.DropConfig(mode="det", p=0.5))
+    with pytest.raises(ValueError, match="DroppedVT representation"):
+        CQPSession(
+            _graph(initial),
+            engine="dense",
+            drop=dr.DropConfig(mode="none"),
+            budget_bytes=128,
+        )
+    with pytest.raises(ValueError, match="budget_bytes"):
+        CQPSession(_graph(initial), engine="dense", governor=GovernorConfig())
+    # an explicit session representation overrides the governor's default so
+    # ladder rungs escalate within the session's DroppedVT mode
+    s3 = CQPSession(
+        _graph(initial),
+        engine="dense",
+        drop=dr.DropConfig(mode="det"),
+        budget_bytes=64,
+        governor=GovernorConfig(representation="prob"),
+    )
+    s3.register(qplan.sssp(0, max_iters=MAX_ITERS))  # escalates det rungs
+    assert s3.governor.cfg.representation == "det"
+    assert any(lvl > 0 for lvl in s3.governor.levels.values())
+
+
+def test_governor_deescalates_after_headroom():
+    """Hysteresis: once deregistration opens headroom below the low-water
+    mark, the governor steps a query back down the ladder."""
+    initial, batches = workload(seed=13)
+    s = CQPSession(
+        _graph(initial),
+        engine="dense",
+        budget_bytes=400,
+        governor=GovernorConfig(
+            representation="prob", bloom_bits=1 << 8, cooldown_passes=0
+        ),
+    )
+    handles = s.register_many(
+        [qplan.sssp(i, max_iters=MAX_ITERS) for i in range(3)]
+    )
+    s.apply_updates(batches[0])
+    assert any(lvl > 0 for lvl in s.governor.levels.values())
+    # retire two queries: bytes collapse far under low_water × budget, and
+    # subsequent passes should relieve the survivor
+    s.deregister(handles.pop(0))
+    s.deregister(handles.pop(0))
+    for b in batches[1:]:
+        s.apply_updates(b)
+    assert any(a.kind == "deescalate" for a in s.governor.actions)
+    # full relief: the survivor walked back to its registered policy, and
+    # regrowth stayed within budget (the predictive guard's whole point)
+    assert s.governor.levels == {2: 0}
+    assert s.nbytes() <= 400
+
+
+def test_governor_stats_and_serving_surface():
+    """stats() carries the per-query breakdown + governor snapshot."""
+    initial, batches = workload(seed=3)
+    s = CQPSession(
+        _graph(initial),
+        engine="dense",
+        budget_bytes=512,
+        governor=GovernorConfig(representation="prob", bloom_bits=1 << 8),
+    )
+    s.register_many([qplan.sssp(i, max_iters=MAX_ITERS) for i in range(2)])
+    s.apply_updates(batches[0])
+    st = s.stats()
+    assert st["nbytes_per_query"] == s.nbytes_per_query()
+    assert len(st["nbytes_per_query"]) == 2
+    assert sum(st["nbytes_per_query"]) == st["nbytes"]
+    gov = st["governor"]
+    assert gov["budget_bytes"] == 512
+    assert gov["headroom_bytes"] == 512 - st["nbytes"]
+    assert gov["telemetry"]["observations"] >= 1
+    assert set(gov["levels"]) == {"0", "1"}
+    json.dumps(st["governor"])  # snapshot must be JSON-serializable
+
+
+def test_plain_sessions_report_per_query_bytes():
+    """nbytes_per_query works without a governor on every engine."""
+    initial, batches = workload(seed=4)
+    for engine in ("dense", "host", "scratch"):
+        s = CQPSession(_graph(initial), engine=engine)
+        s.register_many([qplan.sssp(i, max_iters=MAX_ITERS) for i in range(2)])
+        s.apply_updates(batches[0])
+        per = s.nbytes_per_query()
+        assert len(per) == 2
+        assert sum(per) == s.nbytes()
+
+
+def test_telemetry_rates_and_eviction_guard():
+    """RecomputeTelemetry differences cumulative counters into per-update
+    EWMA rates and drops state for deregistered queries."""
+    t = RecomputeTelemetry(alpha=0.5)
+    t.observe(
+        nbytes_per_query={0: 100, 1: 50},
+        cost_per_query={0: 10, 1: 0},
+        stats=None,
+        updates_applied=10,
+    )
+    assert t.cost_rate(0) == pytest.approx(1.0)
+    t.observe(
+        nbytes_per_query={0: 80},  # qid 1 deregistered
+        cost_per_query={0: 30},
+        stats=None,
+        updates_applied=20,
+    )
+    assert t.cost_rate(0) == pytest.approx(0.5 * 1.0 + 0.5 * 2.0)
+    assert t.cost_rate(1) == 0.0
+    assert t.bytes_held(0) == 80
+    snap = t.snapshot()
+    assert snap["observations"] == 2 and "1" not in snap["per_query"]
+
+
+def test_host_degree_ladder_reaches_scratch_fallback():
+    """Drop-all under Degree selection (no τ_max carve-out) must trigger the
+    host scratch fallback too — the budget cannot silently go unenforced
+    just because the ladder tightens τ instead of flipping a coin."""
+    initial, batches = workload(seed=21)
+    s = CQPSession(
+        _graph(initial),
+        engine="host",
+        budget_bytes=64,
+        governor=GovernorConfig(selection="degree"),
+    )
+    handles = s.register_many(
+        [qplan.sssp(i, max_iters=MAX_ITERS) for i in range(2)]
+    )
+    for b in batches[:3]:
+        s.apply_updates(b)
+    assert s.nbytes() == 0  # both queries at the scratch-fallback floor
+    ref = CQPSession(_graph(initial), engine="host")
+    rh = ref.register_many([qplan.sssp(i, max_iters=MAX_ITERS) for i in range(2)])
+    for b in batches[:3]:
+        ref.apply_updates(b)
+    for a, b_ in zip(handles, rh):
+        np.testing.assert_array_equal(s.answers(a), ref.answers(b_))
+
+
+def test_telemetry_ignores_replayed_stats_and_churn_passes():
+    """An enforcement pass without a new sweep must not re-count the same
+    MaintainStats det_overflow delta, and churn passes (no new updates) must
+    not dilute the cost EWMAs toward zero."""
+
+    class FakeStats:
+        iters_run = 3
+        scheduled = 10
+        repairs = 2
+        det_overflow = 4
+
+    t = RecomputeTelemetry(alpha=0.5)
+    stats = FakeStats()
+    t.observe(
+        nbytes_per_query={0: 100},
+        cost_per_query={0: 10},
+        stats=stats,
+        updates_applied=10,
+    )
+    rate = t.cost_rate(0)
+    assert t.det_overflow_total == 4 and rate == pytest.approx(1.0)
+    # replayed pass: same stats object, no new updates (e.g. a deregister)
+    t.observe(
+        nbytes_per_query={0: 90},
+        cost_per_query={0: 10},
+        stats=stats,
+        updates_applied=10,
+    )
+    assert t.det_overflow_total == 4  # not 8
+    assert t.cost_rate(0) == rate  # not diluted
+    assert t.bytes_held(0) == 90  # bytes still refresh
+    # a genuinely new stats object counts again
+    t.observe(
+        nbytes_per_query={0: 90},
+        cost_per_query={0: 16},
+        stats=FakeStats(),
+        updates_applied=12,
+    )
+    assert t.det_overflow_total == 8
+
+
+def test_shed_det_evictions_surface_and_block_only_the_culprit():
+    """A shed that evicts DroppedVT records (det_capacity exhausted) must
+    surface the loss (stats()['governor']['det_overflow_shed']) and bar only
+    the culprit query from further escalation — other queries keep
+    absorbing the budget pressure."""
+    initial, batches = workload(seed=19)
+    s = CQPSession(
+        _graph(initial),
+        engine="dense",
+        budget_bytes=64,  # far below the det floor: maximal pressure
+        governor=GovernorConfig(representation="det", det_capacity=1),
+    )
+    s.register_many([qplan.sssp(i, max_iters=MAX_ITERS) for i in range(3)])
+    for b in batches:
+        s.apply_updates(b)
+    gov = s.stats()["governor"]
+    assert gov["det_overflow_shed"] > 0
+    blocked = set(gov["overflow_blocked"])
+    assert blocked  # the culprit was barred...
+    unblocked = set(int(q) for q in gov["levels"]) - blocked
+    assert unblocked  # ...but never every query (no global lockout)
+    assert all(gov["levels"][str(q)] == 4 for q in unblocked)
+
+
+def test_governor_config_validation():
+    with pytest.raises(ValueError, match="representation"):
+        GovernorConfig(representation="lossy")
+    with pytest.raises(ValueError, match="selection"):
+        GovernorConfig(selection="degrees")  # typo caught at construction
+    with pytest.raises(ValueError, match="ladder_p"):
+        GovernorConfig(ladder_p=(0.5, 0.25))
+    with pytest.raises(ValueError, match="low_water"):
+        GovernorConfig(low_water=1.5)
+    with pytest.raises(ValueError, match="budget_bytes"):
+        MemoryGovernor(0)
+    # rung 0 restores the registered policy; the top rung is drop-all
+    cfg = GovernorConfig()
+    base = dr.DropConfig(mode="det", p=0.1, seed=9)
+    assert cfg.rung_config(0, base) is base
+    top = cfg.rung_config(cfg.top_level, base)
+    assert top.p == 1.0 and top.seed == 9  # keeps the query's seed (nesting)
+
+
+# -------------------------------------------------- dropping-layer edge cases
+def test_set_params_row_rewrites_only_that_row():
+    params = dr.make_params(
+        [
+            dr.DropConfig(mode="det", p=0.2, seed=1),
+            dr.DropConfig(mode="det", p=0.4, seed=2),
+        ]
+    )
+    out = dr.set_params_row(params, 1, dr.DropConfig(mode="det", p=0.9, seed=7))
+    assert float(out.p[0]) == pytest.approx(0.2) and int(out.seed[0]) == 1
+    assert float(out.p[1]) == pytest.approx(0.9) and int(out.seed[1]) == 7
+    # a disabled config maps to the never-drop row
+    off = dr.set_params_row(params, 0, dr.DropConfig())
+    assert float(off.p[0]) == 0.0 and not bool(off.degree_sel[0])
+
+
+def test_unregister_is_noop_for_bloom():
+    """Bloom filters cannot delete: unregister must leave bits untouched
+    (stale positives are spurious-but-safe repairs, never wrong answers)."""
+    import jax.numpy as jnp
+
+    st = dr.make_state(
+        dr.DropConfig(mode="prob", p=1.0, bloom_bits=1 << 8), 2, 4
+    )
+    mask = jnp.ones((2, 4), bool)
+    st = dr.register(st, 3, mask)
+    bits_before = np.asarray(st.flt.bits)
+    out = dr.unregister(st, 3, mask)
+    np.testing.assert_array_equal(np.asarray(out.flt.bits), bits_before)
+    # det mode DOES delete
+    st2 = dr.make_state(dr.DropConfig(mode="det", p=1.0), 2, 4)
+    st2 = dr.register(st2, 3, mask)
+    assert int(st2.det.count.sum()) == 8
+    st2 = dr.unregister(st2, 3, mask)
+    assert int(st2.det.count.sum()) == 0
+
+
+def test_select_stored_to_drop_matches_sweep_coin():
+    """The shed audit must reuse the sweep's stateless coin exactly, and
+    never select padding entries."""
+    import jax.numpy as jnp
+
+    from repro.core import diffstore as ds
+
+    params = dr.make_params(dr.DropConfig(mode="det", p=0.5, seed=3), 2)
+    iters = jnp.asarray(
+        [[[1, 2, ds.IMAX], [3, ds.IMAX, ds.IMAX]]] * 2, jnp.int32
+    )  # [2, 2, 3]
+    degree = jnp.asarray([4.0, 1.0])
+    sel = dr.select_stored_to_drop(params, degree, iters, ds.IMAX)
+    assert not bool(sel[0, 0, 2]) and not bool(sel[0, 1, 1])  # padding never
+    q_ids = jnp.arange(2, dtype=jnp.int32)[:, None]
+    for v in range(2):
+        for s in range(3):
+            it = int(iters[0, v, s])
+            if it == int(ds.IMAX):
+                continue
+            want = dr.select_to_drop(
+                params,
+                degree[None, :],
+                q_ids,
+                jnp.full((2, 2), v, jnp.int32),
+                jnp.full((2, 2), it, jnp.int32),
+            )[:, v]
+            np.testing.assert_array_equal(np.asarray(sel[:, v, s]), np.asarray(want))
+
+
+# ------------------------------------------------------------------- serving
+def test_cqp_serve_budget_subprocess_smoke():
+    """cqp_serve --budget-bytes: budget respected post-settle, actions
+    logged, per-query bytes reported (the CI governor smoke's local twin)."""
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    out = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.cqp_serve",
+            "--smoke",
+            "--json",
+            "--budget-bytes",
+            "1024",
+            "--governor",
+            "prob",
+        ],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    gov = payload["governor"]
+    assert gov["budget_respected"], gov
+    assert gov["settled_peak_bytes"] <= gov["budget_bytes"]
+    assert gov["escalations"] > 0 and gov["actions"], gov
+    assert len(payload["nbytes_per_query"]) == payload["final_queries"]

@@ -5,6 +5,13 @@ graph under each drop mode, and asserted monotone-nonincreasing as the drop
 probability rises (the paper's Fig-7 invariant: a dropped difference trades
 an 8-byte change point for a ≤4-byte DroppedVT record).
 
+With dropping enabled the account includes, per LIVE query row, the
+``DropParams`` selection row itself (17 B — the governor rewrites these
+online, so they are live state) and, under Prob-Drop, the packed Bloom row
+(M/8 B).  The same totals must hold per query (``slot_nbytes`` sums to the
+global figure) and per shard (``nbytes_per_shard`` sums to it in every drop
+mode — replicated structures are apportioned, not double-counted).
+
 ``DropState.det_overflow`` — dropped-VT records lost to Det-Drop store
 evictions, i.e. (v, i) pairs the engine can no longer repair on access —
 must surface in ``MaintainStats`` instead of vanishing silently.
@@ -16,6 +23,8 @@ import pytest
 from repro.core import dropping as dr
 from repro.core import queries as q
 from repro.core.graph import DynamicGraph
+
+PARAMS_B = dr.PARAMS_ROW_NBYTES  # 17 B: p + tau_min + tau_max + sel + seed
 
 # 0 → 1 → 2 → 3, unit weights: SSSP from 0 stores exactly one change point
 # per reached vertex, at iteration = its distance.
@@ -38,25 +47,66 @@ def test_nbytes_hand_counted_vdc():
 
 
 def test_nbytes_hand_counted_det():
-    # p=1 drops every candidate: no change points, 3 DroppedVT pairs × 4B
+    # p=1 drops every candidate: no change points, 3 DroppedVT pairs × 4B,
+    # plus the one live query's 17 B DropParams selection row
     eng = _path_engine(
         drop=dr.DropConfig(mode="det", selection="random", p=1.0, seed=1)
     )
-    assert eng.nbytes() == 3 * 4
+    assert eng.nbytes() == 3 * 4 + PARAMS_B
     # dropping must not have cost correctness (repair on the fly)
     np.testing.assert_array_equal(eng.answers()[0], [0.0, 1.0, 2.0, 3.0])
 
 
 def test_nbytes_hand_counted_prob():
     # p=1 drops every candidate into the Bloom filter: the accounted cost is
-    # the packed filter (bits/8 per query), independent of the drop count.
+    # the packed per-query filter row (bits/8) + the params row, independent
+    # of the drop count.
     bits = 1 << 10
     eng = _path_engine(
         drop=dr.DropConfig(mode="prob", selection="random", p=1.0, seed=1,
                            bloom_bits=bits)
     )
-    assert eng.nbytes() == bits // 8
+    assert eng.nbytes() == bits // 8 + PARAMS_B
     np.testing.assert_array_equal(eng.answers()[0], [0.0, 1.0, 2.0, 3.0])
+
+
+@pytest.mark.parametrize("mode", ["det", "prob"])
+def test_per_query_breakdown_sums_to_global(mode):
+    """slot_nbytes over the live slots == nbytes_accounted, per drop mode —
+    the [Q] breakdown the memory governor meters must not double- or
+    under-count the Bloom rows / params rows."""
+    bits = 1 << 10
+    eng = q.sssp(
+        DynamicGraph(4, PATH, capacity=16),
+        [0, 2],
+        max_iters=8,
+        drop=dr.DropConfig(mode=mode, selection="random", p=0.5, seed=1,
+                           bloom_bits=bits),
+    )
+    per = eng.nbytes_per_query()
+    assert sorted(per) == [0, 1]
+    assert sum(per.values()) == eng.nbytes()
+    if mode == "prob":
+        # hand count of the fixed footprint: each live row carries its own
+        # packed filter + params row; change points add 8 B each on top
+        fixed = 2 * (bits // 8 + PARAMS_B)
+        assert eng.nbytes() >= fixed
+        assert (eng.nbytes() - fixed) % 4 == 0
+
+
+@pytest.mark.parametrize("mode", ["none", "det", "prob"])
+def test_nbytes_per_shard_sums_to_global(mode):
+    """sum(nbytes_per_shard) == nbytes_accounted in every drop mode (the
+    pre-governor code added the FULL replicated Bloom cost to every shard)."""
+    from repro.core.engine import nbytes_per_shard
+
+    kw = {}
+    if mode != "none":
+        kw["drop"] = dr.DropConfig(mode=mode, selection="random", p=0.6,
+                                   seed=2, bloom_bits=1 << 9)
+    eng = q.sssp(DynamicGraph(4, PATH, capacity=16), [0, 3], max_iters=8, **kw)
+    per = nbytes_per_shard(eng.cfg, eng.state, 2)
+    assert sum(per) == eng.nbytes(), (per, eng.nbytes())
 
 
 def _workload(seed=5, v=16, e=48):

@@ -183,6 +183,72 @@ def test_session_churn_engine_matrix(backend, mode, dropmode, shards, engine):
             check()
 
 
+@pytest.mark.parametrize("shards", [1, pytest.param(8, marks=needs8)])
+@pytest.mark.parametrize("dropmode", ["det", "prob"])
+def test_params_rewrite_midstream_parity(dropmode, shards):
+    """Governor primitive through the session: rewriting a LIVE query's
+    DropParams row mid-stream (escalate → shed, later de-escalate) must keep
+    the sharded dense engine bit-identical to the unsharded one — the shed
+    audit uses the stateless (seed, q, v, i) coin, so drop sets cannot
+    depend on the mesh — and answers exactly equal to the host engine."""
+    initial, batches = random_workload(seed=23, num_batches=3)
+    drop_repr = DROPS[dropmode]
+    escalate = dr.DropConfig(
+        mode=dropmode, selection="degree", p=0.8, tau_min=6.0, seed=7,
+        bloom_bits=1 << 12,
+    )
+    deescalate = dr.DropConfig(
+        mode=dropmode, selection="random", p=0.2, seed=7, bloom_bits=1 << 12
+    )
+
+    def make(shards_):
+        mesh = make_data_mesh(shards_) if shards_ > 1 else None
+        s = CQPSession(
+            DynamicGraph(V, initial, capacity=512),
+            engine="dense",
+            mesh=mesh,
+            drop=drop_repr,
+            min_slots=2,
+        )
+        hs = s.register_many(
+            [
+                qplan.sssp(0, max_iters=MAX_ITERS, drop=drop_repr),
+                qplan.sssp(V // 2, max_iters=MAX_ITERS),
+            ]
+        )
+        return s, hs
+
+    a, ha = make(1)
+    b, hb = make(shards)
+    ref = CQPSession(DynamicGraph(V, initial, capacity=512), engine="host")
+    rh = ref.register_many(
+        [qplan.sssp(0, max_iters=MAX_ITERS), qplan.sssp(V // 2, max_iters=MAX_ITERS)]
+    )
+
+    def check():
+        for x, y, r in zip(ha, hb, rh):
+            np.testing.assert_array_equal(a.answers(x), b.answers(y))
+            np.testing.assert_array_equal(a.answers(x), ref.answers(r))
+        assert a.nbytes() == b.nbytes(), (a.nbytes(), b.nbytes())
+
+    check()
+    for j, batch in enumerate(batches):
+        for s in (a, b):
+            s.apply_updates(batch)
+        ref.apply_updates(batch)
+        check()
+        if j == 0:  # escalate query 0 mid-stream: both sessions shed alike
+            fa = a.set_drop_policy(ha[0], escalate)
+            fb = b.set_drop_policy(hb[0], escalate)
+            assert fa == fb >= 0, (fa, fb)
+            check()
+        if j == 1:  # de-escalate: survivors have audited coins — no reshed
+            assert a.set_drop_policy(ha[0], deescalate) == b.set_drop_policy(
+                hb[0], deescalate
+            )
+            check()
+
+
 @pytest.mark.parametrize("dropmode", ["det", "prob"])
 @pytest.mark.parametrize("backend", ["coo", "ell"])
 def test_batched_dropping_parity(backend, dropmode):
