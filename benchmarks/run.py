@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.fig_batch_throughput",
     "benchmarks.fig_query_churn",
     "benchmarks.fig_governor_budget",
+    "benchmarks.fig_operator_drop",
     "benchmarks.fig_shard_scaling",
 ]
 

@@ -1,49 +1,73 @@
-"""Quickstart: register continuous SPSP queries on a dynamic graph and watch
-differential maintenance beat from-scratch re-execution.
+"""Quickstart: one multi-operator plan on a dynamic graph.
+
+Builds an RPQ plan graph — ``Ingest → Join(nfa) → Iterate → Aggregate`` —
+registers it in a :class:`~repro.core.session.CQPSession`, streams δE
+batches, then drops the *Join operator's* differences alone (the paper's
+§4 operator-dropping scenario: recompute-on-demand) and watches the bytes
+fall while every answer stays exactly equal to from-scratch re-execution.
 
     PYTHONPATH=src python examples/quickstart.py
 
-For the throughput-oriented batched pipeline (B updates per dispatch, ELL
-kernel backend) see ``examples/batched_cqp.py`` and the serving driver
-``python -m repro.launch.cqp_serve --smoke``.
+With several devices visible (e.g. ``XLA_FLAGS=--xla_force_host_platform_
+device_count=8``) the session shards the maintenance sweep over the mesh
+``data`` axis automatically.  For the throughput-oriented batched pipeline
+see ``examples/batched_cqp.py`` and ``python -m repro.launch.cqp_serve``.
 """
 
+import jax
 import numpy as np
 
-from repro.core import dropping as dr
-from repro.core import queries as q
+from repro.core import CQPSession, dropping as dr, plan
 from repro.core.graph import DynamicGraph
-from repro.core.scratch import scratch_like
-from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+from repro.data.graphgen import ldbc_like_graph, split_90_10, update_stream
+from repro.launch.mesh import make_data_mesh
 
-V = 200
-edges = powerlaw_graph(V, 800, seed=0)
+V = 64
+edges = ldbc_like_graph(V, 256, seed=0, num_labels=2)
 initial, pool = split_90_10(edges)
-stream = update_stream(initial, V, num_batches=20, insert_pool=pool,
+stream = update_stream(initial, V, num_batches=10, insert_pool=pool,
                        delete_fraction=0.2, seed=1)
 
-# 8 continuous single-pair-shortest-path queries, maintained with
-# Join-On-Demand + probabilistic degree-based dropping (the paper's best).
-sources = list(range(8))
-engine = q.sssp(
-    DynamicGraph(V, initial, capacity=4096),
-    sources,
-    max_iters=48,
-    mode="jod",
-    drop=dr.DropConfig(mode="prob", selection="degree", p=0.5,
-                       tau_min=2, tau_max=24, bloom_bits=1 << 13),
-)
-scratch = scratch_like(engine.cfg, DynamicGraph(V, initial, capacity=4096),
-                       engine.state.init)
+# Q2-style RPQ (label-1 then label-2*), top-8 nearest matches riding along.
+# join_store="materialize" keeps the Join operator's per-edge message trace
+# (VDC on the product graph) — the memory ceiling we will reclaim below.
+nfa = plan.NFA.concat_star(1, 2)
+plans = [
+    plan.rpq(s, nfa, max_iters=24, join_store="materialize").with_aggregate(
+        "topk", k=8
+    )
+    for s in (0, 5)
+]
+print("operator graph:", " -> ".join(plans[0].op_ids()))
+
+mesh = make_data_mesh() if jax.device_count() > 1 else None
+sess = CQPSession(DynamicGraph(V, initial, capacity=2048), engine="dense",
+                  mesh=mesh)
+scratch = CQPSession(DynamicGraph(V, initial, capacity=2048), engine="scratch")
+handles = sess.register_many(plans)
+oracle = scratch.register_many(plans)
 
 for i, batch in enumerate(stream):
-    stats = engine.apply_updates(batch)
+    sess.apply_updates(batch)
     scratch.apply_updates(batch)
-    assert np.array_equal(engine.answers(), scratch.answers()), "mismatch!"
-    if i % 5 == 0:
-        print(f"batch {i:2d}: scheduled={int(stats.scheduled):5d} vertex-reruns "
-              f"(scratch would do {int(scratch.last_stats.scheduled):7d}); "
-              f"diff bytes={engine.nbytes()}")
+    for h, o in zip(handles, oracle):
+        assert np.array_equal(sess.reachable(h), scratch.reachable(o)), "mismatch!"
+    if i % 3 == 0:
+        per_op = sess.nbytes_per_operator()[0]
+        print(f"batch {i:2d}: per-operator bytes {per_op} "
+              f"(total {sess.nbytes()} over {sess.num_shards} shard(s))")
 
-print("\nall answers verified identical to from-scratch re-execution")
-print(f"final memory: {engine.nbytes()} B of differences for {len(sources)} queries")
+# drop ONE operator's differences: the Join trace goes, the Iterate stays,
+# and §4 recompute-on-demand keeps answers exact
+freed = sess.set_drop_policy(
+    handles[0], dr.DropConfig(mode="det", p=1.0), op="join"
+)
+print(f"\ndropped query 0's Join differences: freed {freed} B "
+      f"-> per-operator bytes {sess.nbytes_per_operator()[0]}")
+for h, o in zip(handles, oracle):
+    assert np.array_equal(sess.reachable(h), scratch.reachable(o))
+
+top = sess.aggregate(handles[0])
+print(f"top-{len(top['vertices'])} matches of query 0: "
+      f"{list(zip(top['vertices'], top['values']))}")
+print("all answers verified identical to from-scratch re-execution")

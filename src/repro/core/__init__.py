@@ -1,23 +1,33 @@
 """Core: the paper's differential computation engine and optimizations.
 
-Public API (the session model — DESIGN.md §9):
+Public API (the session model over the operator-graph plan IR —
+DESIGN.md §9/§11):
 
     from repro.core import CQPSession, plan
     sess = CQPSession(graph, engine="dense")
-    h = sess.register(plan.sssp(0))
+    h = sess.register(plan.rpq(0, plan.NFA.star(1), join_store="materialize"))
     sess.apply_updates_batched(log)
     sess.answers(h)
+    sess.nbytes_per_operator()          # per-(query, operator) bytes
+    sess.set_drop_policy(h, cfg, op="join")
 
 The engine layer (``DiffIFE``, ``EngineConfig``, …) stays importable for
-direct use; legacy one-shot entry points (``queries.sssp`` returning a bare
-engine, ``SparseDiffIFE``, ``Scratch``, ``RPQ``) keep working for one
-release via the deprecation shims below — new code should go through
-:class:`CQPSession` with :mod:`repro.core.plan` builders.
+direct use.  The PR-3 deprecation shims (``repro.core.SparseDiffIFE`` /
+``Scratch`` / ``RPQ``) are gone: import those classes from their home
+modules (``repro.core.sparse_engine``, ``repro.core.scratch``,
+``repro.core.queries``) — the session API is canonical.
 """
 
-import warnings
-
-from repro.core import plan  # noqa: F401  (the plan-builder namespace)
+from repro.core import dataflow, plan  # noqa: F401  (builder namespaces)
+from repro.core.dataflow import (
+    NFA,
+    Aggregate,
+    Ingest,
+    InitSpec,
+    Iterate,
+    Join,
+    Transform,
+)
 from repro.core.engine import (
     DiffIFE,
     EngineConfig,
@@ -31,7 +41,7 @@ from repro.core.engine import (
 )
 from repro.core.governor import GovernorConfig, MemoryGovernor
 from repro.core.graph import DynamicGraph, GraphSnapshot
-from repro.core.plan import NFA, InitSpec, QueryPlan
+from repro.core.plan import QueryPlan
 from repro.core.session import CQPSession, EngineProtocol, QueryHandle
 from repro.core.telemetry import RecomputeTelemetry
 
@@ -44,6 +54,13 @@ __all__ = [
     "NFA",
     "EngineProtocol",
     "plan",
+    # operator-graph IR
+    "dataflow",
+    "Ingest",
+    "Transform",
+    "Join",
+    "Iterate",
+    "Aggregate",
     # memory governor
     "GovernorConfig",
     "MemoryGovernor",
@@ -62,26 +79,3 @@ __all__ = [
     "DynamicGraph",
     "GraphSnapshot",
 ]
-
-# Deprecated aliases — importable from repro.core for one more release.
-_DEPRECATED = {
-    "SparseDiffIFE": ("repro.core.sparse_engine", "SparseDiffIFE"),
-    "Scratch": ("repro.core.scratch", "Scratch"),
-    "ScratchEngine": ("repro.core.scratch", "ScratchEngine"),
-    "RPQ": ("repro.core.queries", "RPQ"),
-}
-
-
-def __getattr__(name: str):
-    if name in _DEPRECATED:
-        mod_name, attr = _DEPRECATED[name]
-        warnings.warn(
-            f"repro.core.{name} is deprecated; import it from {mod_name} or "
-            "use repro.core.CQPSession with repro.core.plan builders",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        import importlib
-
-        return getattr(importlib.import_module(mod_name), attr)
-    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")

@@ -54,6 +54,17 @@ class DropConfig:
     def enabled(self) -> bool:
         return self.mode != "none"
 
+    def drops_all(self) -> bool:
+        """True when this policy selects EVERY candidate difference —
+        complete dropping (§4): p ≥ 1 under Random, or p ≥ 1 with no τ_max
+        carve-out under Degree (everything at or below τ_max drops by coin,
+        below τ_min unconditionally).  Complete dropping is what a Join
+        operator's trace supports (all-or-nothing) and what triggers the
+        host engine's per-query scratch fallback."""
+        return self.enabled() and self.p >= 1.0 and (
+            self.selection == "random" or self.tau_max == float("inf")
+        )
+
 
 class DropParams(NamedTuple):
     """Per-query selection parameters (``[Q]`` arrays, traced — not static).

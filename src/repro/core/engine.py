@@ -147,8 +147,6 @@ class EngineConfig:
     def __post_init__(self):
         if self.mode not in ("vdc", "jod"):
             raise ValueError(f"unknown mode {self.mode!r}")
-        if self.mode == "vdc" and self.drop.enabled():
-            raise ValueError("partial dropping composes with JOD only (paper §5)")
         if self.backend not in ("coo", "ell"):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.backend == "ell" and self.mode != "jod":
@@ -156,14 +154,18 @@ class EngineConfig:
 
 
 class EngineState(NamedTuple):
-    dstore: ds.DiffStore  # [Q, V, S]
-    jstore: ds.DiffStore | None  # [Q, E, S_J] (vdc only)
+    dstore: ds.DiffStore  # [Q, V, S] — the Iterate operator's difference store
+    jstore: ds.DiffStore | None  # [Q, E, S_J] — the Join operator's store (vdc)
     drop: dr.DropState
     init: Array  # f32 [Q, V] — D_0 (implicit iteration-0 diffs)
     cur: Array  # f32 [Q, V] — exact values at the last swept iteration
     repair_counts: Array  # int32 [Q, V] — dropped-diff recomputations (Fig 6b)
     active: Array  # bool [Q] — live query slots; inactive slots are scheduled
     # for no work and hold no diffs (the session's padded slot pool)
+    join_mat: Array | None = None  # bool [Q] — per-slot Join materialization
+    # (vdc engines only): False = that slot's join differences are dropped
+    # completely and its messages recompute on demand (JOD, §4) even though
+    # the engine carries a J store for its neighbours
 
 
 class MaintainStats(NamedTuple):
@@ -332,17 +334,27 @@ def make_state(
     *,
     active: Array | None = None,
     drop_rows: list[dr.DropConfig] | None = None,
+    join_rows: list[bool] | None = None,
 ) -> EngineState:
     """Engine state for ``cfg.num_queries`` slots.
 
     ``active`` marks the live slots (default: all); ``drop_rows`` supplies
-    each slot's selection parameters (default: ``cfg.drop`` broadcast).
+    each slot's selection parameters (default: ``cfg.drop`` broadcast);
+    ``join_rows`` each slot's Join materialization flag (vdc engines only;
+    default: every slot materializes — the legacy uniform VDC).
     """
     q, v = cfg.num_queries, cfg.num_vertices
     assert init.shape == (q, v)
     jstore = (
         ds.make((q, num_edges), cfg.jstore_capacity) if cfg.mode == "vdc" else None
     )
+    join_mat = None
+    if jstore is not None:
+        join_mat = (
+            jnp.ones((q,), bool)
+            if join_rows is None
+            else jnp.asarray(join_rows, bool)
+        )
     return EngineState(
         dstore=ds.make((q, v), cfg.store_capacity),
         jstore=jstore,
@@ -351,6 +363,7 @@ def make_state(
         cur=init.astype(jnp.float32),
         repair_counts=jnp.zeros((q, v), jnp.int32),
         active=jnp.ones((q,), bool) if active is None else jnp.asarray(active, bool),
+        join_mat=join_mat,
     )
 
 
@@ -388,6 +401,7 @@ def _sweep_body(
     init: Array,
     old_dstore: ds.DiffStore,
     active: Array,
+    join_mat: Array | None,
     axis: str | None,
     c: _Carry,
 ) -> _Carry:
@@ -429,7 +443,10 @@ def _sweep_body(
     if cfg.mode == "vdc":
         # Maintain J at iteration i before reading it: an edge's message
         # changes when its source changed at i-1, or the edge itself (or a
-        # sibling in-edge of its target) was touched by δE.
+        # sibling in-edge of its target) was touched by δE.  ``join_mat``
+        # gates the store per slot: a slot whose Join differences are
+        # dropped completely (§4) writes nothing and recomputes its
+        # messages on demand — JOD inside a VDC engine.
         live_msgs = edge_messages(cfg, cur_full, g)
         jprev, _, jfound = ds.lookup_le(c.jstore, i)
         j0 = edge_messages(cfg, init, g)  # implicit J from D_0
@@ -439,12 +456,14 @@ def _sweep_body(
         dirty_pad = jnp.concatenate(
             [dirty, jnp.zeros((dirty.shape[0], 1), bool)], axis=1
         )
+        jmat = join_mat[:, None]
         jdirty = c.changed_prev[:, g.src] | dirty_pad[:, dst]
-        jwrite = jdirty & (live_msgs != jprev)
+        jwrite = jdirty & (live_msgs != jprev) & jmat
         jstore, _, _ = ds.upsert(c.jstore, i, jwrite, live_msgs)
-        # VDC path: the aggregator *reads* the materialized J difference sets.
+        # VDC path: the aggregator *reads* the materialized J difference
+        # sets for materializing slots, the on-demand messages otherwise.
         jval, _, jfound2 = ds.lookup_le(jstore, i)
-        msgs = jnp.where(jfound2, jval, j0)
+        msgs = jnp.where(jmat, jnp.where(jfound2, jval, j0), live_msgs)
         new = aggregate(cfg, msgs, c.cur, g, dst=dst, num_segments=num_local)
         jwritten = c.stats.jwritten + jwrite.sum(dtype=jnp.int32)
     else:
@@ -582,7 +601,15 @@ def _maintain_core(
         horizon0 = jax.lax.pmax(stored_horizon(state.dstore), axis)
 
     body = partial(
-        _sweep_body, cfg, g, dirty, init_full, old_dstore, state.active, axis
+        _sweep_body,
+        cfg,
+        g,
+        dirty,
+        init_full,
+        old_dstore,
+        state.active,
+        state.join_mat,
+        axis,
     )
 
     def cond(c: _Carry) -> Array:
@@ -653,6 +680,7 @@ def _maintain_core(
         cur=c.cur,
         repair_counts=c.repair_counts,
         active=state.active,
+        join_mat=state.join_mat,
     )
     return new_state, stats
 
@@ -718,6 +746,7 @@ def _state_pspecs(state: EngineState) -> EngineState:
         cur=P(None, DATA_AXIS),
         repair_counts=P(None, DATA_AXIS),
         active=P(),
+        join_mat=None if state.join_mat is None else P(),
     )
 
 
@@ -1091,6 +1120,7 @@ class DiffIFE:
         mesh: Mesh | None = None,
         active: np.ndarray | None = None,
         drop_rows: list[dr.DropConfig] | None = None,
+        join_rows: list[bool] | None = None,
     ) -> None:
         self.cfg = cfg
         self.graph = graph
@@ -1117,6 +1147,7 @@ class DiffIFE:
             num_rows,
             active=active,
             drop_rows=drop_rows,
+            join_rows=join_rows,
         )
         # descending so pop() hands out the lowest free slot first
         self._free_slots: list[int] = sorted(
@@ -1134,12 +1165,16 @@ class DiffIFE:
         # MaintainStats.det_overflow; a shed runs between sweeps, so its
         # losses would otherwise vanish from telemetry entirely.
         self.det_overflow_shed = 0
+        # cumulative scheduled vertex-reruns across all sweeps: the shared
+        # recompute-volume signal apportioned to the Join operator (dropping
+        # a join trades its stored messages for exactly this recomputation)
+        self._sched_total = 0
         # initial computation: every vertex dirty, empty store (inactive
         # slots are masked out of the schedule by ``state.active``); an
         # all-inactive pool (the session's deferred-register path) has
         # nothing to compute and skips the dispatch entirely
         if active is None or bool(np.asarray(active).any()):
-            self._run(np.ones(cfg.num_vertices, dtype=bool))
+            self._run_counted(np.ones(cfg.num_vertices, dtype=bool))
 
     def _build_dispatch(self) -> None:
         """(Re)jit the two dispatch paths for the current static config."""
@@ -1232,6 +1267,12 @@ class DiffIFE:
         self.state, stats = self._maintain(self.state, self.g, jnp.asarray(dirty))
         self.last_stats = jax.tree.map(jax.device_get, stats)
 
+    def _run_counted(self, dirty: np.ndarray) -> None:
+        """_run + fold the sweep into the cumulative recompute-volume signal
+        (the batched path folds its own totals, fallback sweeps included)."""
+        self._run(dirty)
+        self._sched_total += int(self.last_stats.scheduled)
+
     def _dirty_mask(self, touched, snap: GraphSnapshot) -> np.ndarray:
         dirty = np.zeros(self.cfg.num_vertices, dtype=bool)
         for (u, v) in touched:
@@ -1250,7 +1291,7 @@ class DiffIFE:
             self._shard_sync(ops, snap)  # keep cell assignments stable (VDC)
         self.g = self._device_graph(snap)
         touched = [(u, v) for (_k, _s, u, v, _w) in ops]
-        self._run(self._dirty_mask(touched, snap))
+        self._run_counted(self._dirty_mask(touched, snap))
         return self.last_stats
 
     def _full_sweep_fallback(self, ops, total: MaintainStats) -> MaintainStats:
@@ -1302,6 +1343,7 @@ class DiffIFE:
             # accumulate on device — one host sync per log, not per chunk
             total = _sum_stats(total, stats)
         self.last_stats = jax.tree.map(jax.device_get, total)
+        self._sched_total += int(self.last_stats.scheduled)
         return self.last_stats
 
     def _encode_chunk(self, ops, ell_writes, b: int, shard_writes=None) -> UpdateBatch:
@@ -1386,7 +1428,10 @@ class DiffIFE:
         )
 
     def register_slot(
-        self, init_row: np.ndarray | Array, drop_cfg: dr.DropConfig | None = None
+        self,
+        init_row: np.ndarray | Array,
+        drop_cfg: dr.DropConfig | None = None,
+        materialize_join: bool | None = None,
     ) -> int:
         """Claim a slot for a new query and compute its trace in-engine.
 
@@ -1396,17 +1441,19 @@ class DiffIFE:
         sweep *is* the static IFE run for that query while every other
         registered query is scheduled for zero work.  Returns the slot id.
         """
-        return self.register_slots([(init_row, drop_cfg)])[0]
+        return self.register_slots([(init_row, drop_cfg, materialize_join)])[0]
 
-    def register_slots(
-        self,
-        requests: list[tuple[np.ndarray | Array, dr.DropConfig | None]],
-    ) -> list[int]:
+    def register_slots(self, requests: list[tuple]) -> list[int]:
         """Batch form of :meth:`register_slot`: claim one slot per
-        (init_row, drop_cfg) request and initialize ALL the new traces in a
-        single maintenance sweep (the per-query dirty mask seeds exactly the
-        new rows)."""
-        for _row, drop_cfg in requests:
+        (init_row, drop_cfg[, materialize_join]) request and initialize ALL
+        the new traces in a single maintenance sweep (the per-query dirty
+        mask seeds exactly the new rows).  ``materialize_join`` gates the
+        slot's Join store on vdc engines (None → materialize)."""
+        requests = [
+            (req[0], req[1], req[2] if len(req) > 2 else None)
+            for req in requests
+        ]
+        for _row, drop_cfg, _jm in requests:
             if drop_cfg is not None and drop_cfg.enabled():
                 if drop_cfg.mode != self.cfg.drop.mode:
                     raise ValueError(
@@ -1418,7 +1465,7 @@ class DiffIFE:
             self._grow_queries()
         slots = []
         st = self.state
-        for init_row, drop_cfg in requests:
+        for init_row, drop_cfg, join_flag in requests:
             slot = self._free_slots.pop()
             row = jnp.asarray(init_row, jnp.float32)
             st = self._clear_slot_state(st, slot)
@@ -1427,6 +1474,12 @@ class DiffIFE:
                 cur=st.cur.at[slot].set(row),
                 active=st.active.at[slot].set(True),
             )
+            if st.join_mat is not None:
+                st = st._replace(
+                    join_mat=st.join_mat.at[slot].set(
+                        True if join_flag is None else bool(join_flag)
+                    )
+                )
             if st.drop.params is not None:
                 st = st._replace(
                     drop=st.drop._replace(
@@ -1441,7 +1494,7 @@ class DiffIFE:
         self.state = st
         dirty = np.zeros((self.cfg.num_queries, self.cfg.num_vertices), bool)
         dirty[slots] = True
-        self._run(dirty)
+        self._run_counted(dirty)
         return slots
 
     def deregister_slot(self, slot: int) -> int:
@@ -1462,6 +1515,8 @@ class DiffIFE:
             cur=st.cur.at[slot].set(ident),
             active=st.active.at[slot].set(False),
         )
+        if st.join_mat is not None:  # freed slots rejoin the pool materialized
+            st = st._replace(join_mat=st.join_mat.at[slot].set(True))
         if st.drop.params is not None:
             st = st._replace(
                 drop=st.drop._replace(
@@ -1514,18 +1569,131 @@ class DiffIFE:
                 fixed += dr.PARAMS_ROW_NBYTES
         return {s: int(per[s]) + fixed for s in self.active_slots()}
 
+    def nbytes_per_operator(self) -> dict[int, dict[str, int]]:
+        """slot → {op_id → accounted bytes}: the per-query breakdown refined
+        to the operators that own difference stores.  ``"iterate"`` carries
+        the change-point rows plus the slot's DroppedVT/params footprint;
+        ``"join"`` (vdc engines) its J-store rows.  Per slot the operator
+        bytes sum exactly to :meth:`nbytes_per_query`'s entry."""
+        per_d = np.asarray(self.state.dstore.count).sum(axis=1) * 8
+        if self.state.drop.det is not None:
+            per_d = per_d + np.asarray(self.state.drop.det.count).sum(axis=1) * 4
+        fixed = 0
+        if self.cfg.drop.enabled():
+            if self.state.drop.flt is not None:
+                fixed += (self.state.drop.flt.num_bits + 7) // 8
+            if self.state.drop.params is not None:
+                fixed += dr.PARAMS_ROW_NBYTES
+        per_j = (
+            None
+            if self.state.jstore is None
+            else np.asarray(self.state.jstore.count).sum(axis=1) * 8
+        )
+        out: dict[int, dict[str, int]] = {}
+        for s in self.active_slots():
+            ops = {"iterate": int(per_d[s]) + fixed}
+            if per_j is not None:
+                ops["join"] = int(per_j[s])
+            out[s] = ops
+        return out
+
     def recompute_cost_per_query(self) -> dict[int, int]:
         """slot → cumulative dropped-diff repair count (the engine's cheap
         online recompute-cost signal, Fig. 6b's counter per query row)."""
         per = np.asarray(self.state.repair_counts).sum(axis=1)
         return {s: int(per[s]) for s in self.active_slots()}
 
-    def set_drop_params(self, slot: int, drop_cfg: dr.DropConfig) -> int:
-        """Rewrite a LIVE slot's selection params in place (no recompile —
-        the params are traced ``[Q]`` rows) and shed its stored diffs under
-        the new policy.  Returns the accounted bytes released (≥ 0: a shed
-        trades 8 B change points for ≤4 B DroppedVT records or Bloom bits).
+    def recompute_cost_per_operator(self) -> dict[int, dict[str, int]]:
+        """slot → {op_id → cumulative recompute cost}.  ``"iterate"`` is the
+        slot's dropped-diff repair count; ``"join"`` (vdc engines) the
+        cumulative scheduled vertex-rerun volume apportioned evenly across
+        live slots — message recomputation tracks sweep breadth, which is
+        shared, so the join signal ranks queries by bytes alone."""
+        per = np.asarray(self.state.repair_counts).sum(axis=1)
+        live = self.active_slots()
+        share = self._sched_total // max(len(live), 1)
+        out: dict[int, dict[str, int]] = {}
+        for s in live:
+            ops = {"iterate": int(per[s])}
+            if self.state.jstore is not None:
+                ops["join"] = int(share)
+            out[s] = ops
+        return out
+
+    def set_join_store(self, slot: int, materialize: bool) -> int:
+        """Flip one slot's Join-operator storage policy (vdc engines).
+
+        ``materialize=False`` drops the slot's join differences completely
+        (§4): its J-store rows are zeroed — the accounted bytes released are
+        returned — and subsequent sweeps recompute its messages on demand
+        (``join_mat`` is a traced [Q] row: no recompile).  No DroppedVT
+        record is needed: complete dropping is deterministic, so repair
+        needs no per-record memory.
+
+        ``materialize=True`` re-materializes: the slot's ``cur`` is reset to
+        its D_0 and one maintenance sweep re-walks the stored trajectory
+        (register-convergence), rewriting the J rows as it goes.  Answers
+        are recomputed exactly; returns 0.
         """
+        if not bool(np.asarray(self.state.active)[slot]):
+            raise ValueError(f"slot {slot} is not active")
+        if self.state.jstore is None:
+            if materialize:
+                raise ValueError(
+                    "engine built without a join store (mode='jod'); open "
+                    "the session with a join-materializing plan in the "
+                    "first registered batch"
+                )
+            return 0  # JOD engines hold no join differences to begin with
+        already = bool(np.asarray(self.state.join_mat)[slot])
+        if materialize == already:
+            return 0
+        st = self.state
+        if not materialize:
+            freed = int(np.asarray(st.jstore.count[slot]).sum()) * 8
+            jstore = ds.DiffStore(
+                iters=st.jstore.iters.at[slot].set(ds.IMAX),
+                vals=st.jstore.vals.at[slot].set(0.0),
+                count=st.jstore.count.at[slot].set(0),
+            )
+            self.state = st._replace(
+                jstore=jstore, join_mat=st.join_mat.at[slot].set(False)
+            )
+            return freed
+        self.state = st._replace(
+            cur=st.cur.at[slot].set(st.init[slot]),
+            join_mat=st.join_mat.at[slot].set(True),
+        )
+        dirty = np.zeros((self.cfg.num_queries, self.cfg.num_vertices), bool)
+        dirty[slot] = True
+        self._run_counted(dirty)
+        return 0
+
+    def set_drop_params(
+        self, slot: int, drop_cfg: dr.DropConfig, op_id: str = "iterate"
+    ) -> int:
+        """Rewrite a LIVE slot's drop policy for ONE operator.
+
+        ``op_id="iterate"`` (default) rewrites the slot's §5 selection
+        params in place (no recompile — the params are traced ``[Q]`` rows)
+        and sheds its stored diffs under the new policy.  ``op_id="join"``
+        routes to :meth:`set_join_store` — an enabled config (complete
+        dropping) drops the slot's join trace, a disabled one
+        re-materializes it.  Returns the accounted bytes released (≥ 0 for
+        iterate: a shed trades 8 B change points for ≤4 B DroppedVT records
+        or Bloom bits).
+        """
+        if op_id == "join":
+            if drop_cfg.enabled() and not drop_cfg.drops_all():
+                raise ValueError(
+                    "the join's differences drop completely (p ≥ 1); "
+                    "partial join dropping is unsupported"
+                )
+            return self.set_join_store(slot, not drop_cfg.enabled())
+        if op_id != "iterate":
+            raise ValueError(
+                f"operator {op_id!r} owns no engine difference store"
+            )
         if not bool(np.asarray(self.state.active)[slot]):
             raise ValueError(f"slot {slot} is not active")
         if self.state.drop.params is None:
@@ -1607,6 +1775,7 @@ class DiffIFE:
             cur=padq(st.cur, ident),
             repair_counts=padq(st.repair_counts, 0),
             active=padq(st.active, False),
+            join_mat=None if st.join_mat is None else padq(st.join_mat, True),
         )
         self.cfg = dataclasses.replace(self.cfg, num_queries=new_q)
         self._free_slots.extend(range(new_q - 1, old_q - 1, -1))

@@ -7,33 +7,49 @@ not the user, decide what incremental state to materialize, and a CQP
 serving a churning query population needs the same — a global byte budget
 enforced online by retuning each query's drop policy.
 
-**Policy ladder.**  Each registered query sits on a rung:
+**Operator granularity.**  Enforcement is addressed at ``(query, operator)``
+— the plan IR (`core/dataflow.py`) gives every query a dataflow of operators
+each owning its own difference store, and the governor walks *operators*
+along per-operator ladders:
 
-    0   its own registered policy (usually no dropping)
-    1…  escalating selection pressure — ``p`` rises along
-        ``GovernorConfig.ladder_p`` and, under Degree selection, τ_min
-        tightens by ``tau_tighten`` per rung
-    top drop-all (p = 1): the dense engine keeps only ≤4 B DroppedVT
-        records / Bloom bits and repairs on access; the host engine
-        interprets drop-all as its **scratch fallback** — the query's
-        difference index is dropped entirely and its answers are
-        re-executed from scratch per batch (zero diff bytes, maximal
-        recompute — the paper's SCRATCH endpoint, per query).
+* ``iterate`` — the §5 selection ladder:
 
-Escalation rewrites the query's ``DropParams`` row in place — PR 3 made
-selection params traced ``[Q]`` arrays, so no engine recompile — and sheds
-already-stored diffs under the new policy (``engine.shed_slot``), so memory
-falls immediately, not just for future writes.
+      0   its own registered policy (usually no dropping)
+      1…  escalating selection pressure — ``p`` rises along
+          ``GovernorConfig.ladder_p`` and, under Degree selection, τ_min
+          tightens by ``tau_tighten`` per rung
+      top drop-all (p = 1): the dense engine keeps only ≤4 B DroppedVT
+          records / Bloom bits and repairs on access; the host engine
+          interprets drop-all as its **scratch fallback** — the query's
+          difference index is dropped entirely and its answers are
+          re-executed from scratch per batch (zero diff bytes, maximal
+          recompute — the paper's SCRATCH endpoint, per query).
 
-**Victim choice.**  Over budget, the governor escalates the query with the
-most reclaimable bytes per unit of recent recompute cost
-(``bytes / (1 + cost_rate)`` from :class:`RecomputeTelemetry`) — i.e. it
-spends recomputation where it is cheapest.  Queries whose escalation
-coincides with Det-Drop overflow growth are skipped (records lost to
-eviction cannot be repaired, so pushing them harder risks staleness).
+* ``join`` — a single rung: the operator's differences drop *completely*
+  (§4's JOD, per slot): rung 1 zeroes the query's J-store rows and its
+  messages recompute on demand; stepping back down re-materializes the
+  trace with one re-derivation sweep.  This is the paper's
+  operator-dropping scenario — "drop the Join's differences, keep the
+  Iterate's" — and needs no DroppedVT bookkeeping, because complete
+  dropping repairs deterministically.
+
+Escalation rewrites the operator's policy in place — traced ``[Q]`` rows,
+no engine recompile — and sheds already-stored diffs under the new policy
+(``engine.shed_slot`` / ``engine.set_join_store``), so memory falls
+immediately, not just for future writes.
+
+**Victim choice.**  Over budget, the governor escalates the ``(query,
+operator)`` with the most reclaimable bytes per unit of recent recompute
+cost (``bytes / (1 + cost_rate)`` from :class:`RecomputeTelemetry`) — i.e.
+it spends recomputation where it is cheapest.  For an RPQ with a
+materialized join that is typically the join trace first (large, cheap to
+re-derive), the iterate's change points only under further pressure.
+Operators whose escalation coincides with Det-Drop overflow growth are
+skipped (records lost to eviction cannot be repaired, so pushing them
+harder risks staleness).
 
 **Hysteresis.**  Under ``low_water × budget`` for ``cooldown_passes``
-consecutive passes, the most escalated query steps DOWN one rung (diffs
+consecutive passes, the most escalated operator steps DOWN one rung (diffs
 regrow naturally as sweeps write points), so a transient spike does not
 pin the population at drop-all forever, and the escalate/de-escalate bands
 never overlap.
@@ -92,7 +108,7 @@ class GovernorConfig:
         )
 
     def rung_config(self, level: int, base: dr.DropConfig) -> dr.DropConfig:
-        """The DropConfig for one query at ladder ``level``.
+        """The Iterate operator's DropConfig at ladder ``level``.
 
         Level 0 restores ``base`` (the query's registered policy).  Higher
         rungs keep the query's seed when it already had one — the stateless
@@ -113,10 +129,23 @@ class GovernorConfig:
             seed=base.seed if base.enabled() else self.seed,
         )
 
+    def join_rung(self, level: int, base: dr.DropConfig | None) -> dr.DropConfig:
+        """The Join operator's single-rung ladder: level 0 restores the
+        registered policy (materialize, unless the plan registered the join
+        dropped), level ≥ 1 drops the trace completely (recompute-on-demand
+        — no partial rungs and no DroppedVT footprint, §4)."""
+        if level <= 0:
+            return base if base is not None else dr.DropConfig()
+        return dr.DropConfig(mode=self.representation, selection="random", p=1.0)
+
+    def top_level_for(self, op: str) -> int:
+        return 1 if op == "join" else self.top_level
+
 
 @dataclasses.dataclass
 class GovernorAction:
-    """One retuning decision, for the serving log / JSON report."""
+    """One retuning decision, attributed at (query, operator) granularity,
+    for the serving log / JSON report."""
 
     seq: int  # session.updates_applied when the action fired
     qid: int
@@ -126,6 +155,7 @@ class GovernorAction:
     bytes_freed: int
     nbytes_after: int
     reason: str
+    op: str = "iterate"  # the operator whose store the action retuned
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -151,89 +181,114 @@ class MemoryGovernor:
         self.budget_bytes = int(budget_bytes)
         self.cfg = cfg or GovernorConfig()
         self.telemetry = telemetry or RecomputeTelemetry()
-        self.levels: dict[int, int] = {}  # qid → ladder rung
+        # ladder rung per (qid, op_id) — the governor's (query, operator)
+        # address space; ``levels`` exposes the legacy per-query iterate view
+        self._levels: dict[tuple[int, str], int] = {}
         self.actions: list[GovernorAction] = []
-        self._base: dict[int, dr.DropConfig] = {}  # qid → registered policy
+        # (qid, op_id) → registered policy (level-0 restore point)
+        self._base: dict[tuple[int, str], dr.DropConfig | None] = {}
         # det-overflow escalation guard: overflow growth is attributed to the
-        # most recently escalated query (sheds and the drops its new policy
-        # causes are the prime suspects), which is then barred from further
-        # escalation until it de-escalates — never a global lockout
-        self._overflow_blocked: set[int] = set()
-        self._last_escalated: int | None = None
+        # most recently escalated operator (sheds and the drops its new
+        # policy causes are the prime suspects), which is then barred from
+        # further escalation until it de-escalates — never a global lockout
+        self._overflow_blocked: set[tuple[int, str]] = set()
+        self._last_escalated: tuple[int, str] | None = None
         self._overflow_mark = 0
-        # bytes each query's escalations reclaimed (net of observed regrowth)
-        # — the de-escalation guard's regrowth estimate
-        self._reclaimed: dict[int, int] = {}
+        # bytes each operator's escalations reclaimed (net of observed
+        # regrowth) — the de-escalation guard's regrowth estimate
+        self._reclaimed: dict[tuple[int, str], int] = {}
         self._calm_passes = 0
         self.passes = 0
 
+    @property
+    def levels(self) -> dict[int, int]:
+        """Legacy per-query view: each query's Iterate-operator rung."""
+        return {
+            qid: lvl for (qid, op), lvl in self._levels.items() if op == "iterate"
+        }
+
+    @property
+    def op_levels(self) -> dict[tuple[int, str], int]:
+        return dict(self._levels)
+
     # ------------------------------------------------------------ lifecycle
-    def on_register(self, qid: int, base: dr.DropConfig) -> None:
-        self.levels[qid] = 0
-        self._base[qid] = base
+    def on_register(self, qid: int, plan) -> None:
+        """Track a registered plan's droppable operators (its graph nodes;
+        engine-implicit operators surface lazily through the byte meters)."""
+        self._levels[(qid, "iterate")] = 0
+        self._base[(qid, "iterate")] = plan.drop
+        if "join" in plan.droppable_ops():
+            self._levels[(qid, "join")] = 0
+            self._base[(qid, "join")] = plan.join_drop
 
     def on_deregister(self, qid: int) -> None:
-        self.levels.pop(qid, None)
-        self._base.pop(qid, None)
-        self._overflow_blocked.discard(qid)
-        self._reclaimed.pop(qid, None)
-        if self._last_escalated == qid:
-            self._last_escalated = None
+        for key in [k for k in self._levels if k[0] == qid]:
+            self._levels.pop(key, None)
+            self._base.pop(key, None)
+            self._overflow_blocked.discard(key)
+            self._reclaimed.pop(key, None)
+            if self._last_escalated == key:
+                self._last_escalated = None
 
     # ---------------------------------------------------------- enforcement
     def enforce(self, session) -> list[GovernorAction]:
-        """One budget-enforcement pass; returns the actions taken."""
-        per_q = session._nbytes_per_query_map()
+        """One budget-enforcement pass over the (query, operator) table;
+        returns the actions taken."""
+        per_op = session._nbytes_per_op_map()
         self.telemetry.observe(
-            nbytes_per_query=per_q,
-            cost_per_query=session._recompute_cost_map(),
+            nbytes_per_query=per_op,
+            cost_per_query=session._recompute_cost_op_map(),
             stats=session.last_stats,
             updates_applied=session.updates_applied,
         )
         new_actions: list[GovernorAction] = []
-        total = sum(per_q.values())
+        total = sum(per_op.values())
         self._check_overflow(session)
         while total > self.budget_bytes and len(new_actions) < self.cfg.max_actions_per_pass:
             cands = [
-                qid
-                for qid in per_q
-                if self.levels.get(qid, 0) < self.cfg.top_level
-                and qid not in self._overflow_blocked
+                key
+                for key in per_op
+                if self._levels.get(key, 0) < self.cfg.top_level_for(key[1])
+                and key not in self._overflow_blocked
+                # an empty store has nothing to reclaim — escalating it only
+                # burns a rung (the iterate rung still thins future writes,
+                # but a join flip would be a pure no-op)
+                and not (key[1] == "join" and per_op[key] == 0)
             ]
             if not cands:
                 break
-            qid = max(
+            key = max(
                 cands,
-                key=lambda q: per_q[q] / (1.0 + self.telemetry.cost_rate(q)),
+                key=lambda k: per_op[k] / (1.0 + self.telemetry.cost_rate(k)),
             )
             # a shed's delta is exactly the global delta (it touches one
             # slot's accounted rows), so the loop never re-meters the engine
-            action = self._step(session, qid, +1, "over budget", total)
+            action = self._step(session, key, +1, "over budget", total)
             new_actions.append(action)
-            per_q[qid] = max(per_q[qid] - action.bytes_freed, 0)
+            per_op[key] = max(per_op[key] - action.bytes_freed, 0)
             total = action.nbytes_after
             self._check_overflow(session)
         if new_actions:
             self._calm_passes = 0
         elif total <= self.cfg.low_water * self.budget_bytes:
             self._calm_passes += 1
-            # predictive guard: only relieve a query whose reclaimed bytes
-            # would still fit under the low-water mark if they all came back
-            # — de-escalating at the floor just to re-escalate next pass
-            # (host: a full index rebuild each way) is the flap hysteresis
-            # exists to prevent
+            # predictive guard: only relieve an operator whose reclaimed
+            # bytes would still fit under the low-water mark if they all
+            # came back — de-escalating at the floor just to re-escalate
+            # next pass (host: a full index rebuild each way) is the flap
+            # hysteresis exists to prevent
             headroom_for = self.cfg.low_water * self.budget_bytes - total
             escalated = [
-                q
-                for q in per_q
-                if self.levels.get(q, 0) > 0
-                and self._reclaimed.get(q, 0) <= headroom_for
+                key
+                for key in per_op
+                if self._levels.get(key, 0) > 0
+                and self._reclaimed.get(key, 0) <= headroom_for
             ]
             if escalated and self._calm_passes > self.cfg.cooldown_passes:
-                # relieve the query paying the most recompute per update
-                qid = max(escalated, key=self.telemetry.cost_rate)
+                # relieve the operator paying the most recompute per update
+                key = max(escalated, key=self.telemetry.cost_rate)
                 new_actions.append(
-                    self._step(session, qid, -1, "headroom recovered", total)
+                    self._step(session, key, -1, "headroom recovered", total)
                 )
                 self._calm_passes = 0
         else:
@@ -244,9 +299,9 @@ class MemoryGovernor:
 
     def _check_overflow(self, session) -> None:
         """Attribute DroppedVT record loss (sweep evictions + shed evictions)
-        to the most recently escalated query and bar it from further
+        to the most recently escalated operator and bar it from further
         escalation — lost records cannot be repaired, so pushing the same
-        query harder risks stale answers.  De-escalation lifts the bar."""
+        store harder risks stale answers.  De-escalation lifts the bar."""
         overflow = self.telemetry.det_overflow_total + session._det_overflow_shed()
         if overflow > self._overflow_mark and self._last_escalated is not None:
             self._overflow_blocked.add(self._last_escalated)
@@ -254,28 +309,31 @@ class MemoryGovernor:
         self._overflow_mark = overflow
 
     def _step(
-        self, session, qid: int, direction: int, reason: str, total: int
+        self, session, key: tuple[int, str], direction: int, reason: str, total: int
     ) -> GovernorAction:
-        lvl = self.levels.get(qid, 0)
+        qid, op = key
+        lvl = self._levels.get(key, 0)
         new_lvl = max(lvl + direction, 0)
-        base = self._base.get(qid, dr.DropConfig())
-        freed = session._set_drop_policy_qid(
-            qid, self.cfg.rung_config(new_lvl, base)
-        )
+        base = self._base.get(key, dr.DropConfig() if op != "join" else None)
+        if op == "join":
+            cfg_new = self.cfg.join_rung(new_lvl, base)
+        else:
+            cfg_new = self.cfg.rung_config(new_lvl, base)
+        freed = session._set_op_drop_policy_qid(qid, op, cfg_new)
         if direction > 0:
-            self._last_escalated = qid
-            self._reclaimed[qid] = self._reclaimed.get(qid, 0) + max(int(freed), 0)
+            self._last_escalated = key
+            self._reclaimed[key] = self._reclaimed.get(key, 0) + max(int(freed), 0)
             after = total - int(freed)
         else:
-            # de-escalation may regrow state (host scratch-fallback exit
-            # rebuilds the diff index), so re-meter this one
-            self._overflow_blocked.discard(qid)
+            # de-escalation may regrow state (host scratch-fallback exit and
+            # join re-materialization rebuild stores), so re-meter this one
+            self._overflow_blocked.discard(key)
             after = session.nbytes()
             regrow = max(after - total, 0)
-            self._reclaimed[qid] = (
-                0 if new_lvl == 0 else max(self._reclaimed.get(qid, 0) - regrow, 0)
+            self._reclaimed[key] = (
+                0 if new_lvl == 0 else max(self._reclaimed.get(key, 0) - regrow, 0)
             )
-        self.levels[qid] = new_lvl
+        self._levels[key] = new_lvl
         return GovernorAction(
             seq=session.updates_applied,
             qid=qid,
@@ -285,6 +343,7 @@ class MemoryGovernor:
             bytes_freed=int(freed),
             nbytes_after=after,
             reason=reason,
+            op=op,
         )
 
     # ------------------------------------------------------------------ api
@@ -300,7 +359,11 @@ class MemoryGovernor:
                 1 for a in self.actions if a.kind == "deescalate"
             ),
             "levels": {str(q): lvl for q, lvl in sorted(self.levels.items())},
-            "overflow_blocked": sorted(self._overflow_blocked),
+            "op_levels": {
+                f"{q}/{op}": lvl
+                for (q, op), lvl in sorted(self._levels.items())
+            },
+            "overflow_blocked": sorted({q for (q, _op) in self._overflow_blocked}),
             "actions": [a.to_dict() for a in self.actions],
             "telemetry": self.telemetry.snapshot(),
         }

@@ -2,147 +2,223 @@
 
 The paper's system is a *continuous query processor*: clients register and
 deregister recursive queries against a dynamic graph over time, with the
-memory optimizations (dropping, recomputation) tuned per query.  Following
-DBSP's split between a declarative circuit IR and its incremental executor,
-a :class:`QueryPlan` captures everything a query means — semiring, initial
-states, iteration bound, optional NFA product (RPQ), and its own
-:class:`~repro.core.dropping.DropConfig` — without naming an engine.  Any
-engine implementing the session protocol (`core/session.py`) can register a
-plan: the dense TPU engine, the host pointer engine, or SCRATCH.
+memory optimizations (dropping, recomputation) tuned **per operator** of the
+query's dataflow.  Following DBSP's split between a declarative circuit IR
+and its incremental executor, a :class:`QueryPlan` is a validated DAG of
+typed operator nodes (:mod:`repro.core.dataflow`): ``Ingest → [Transform] →
+[Join] → Iterate → [Aggregate]``, where each operator owns its own
+difference store and :class:`~repro.core.dropping.DropConfig`.  Any engine
+implementing the session protocol (`core/session.py`) can register a plan:
+the dense TPU engine, the host pointer engine, or SCRATCH.
 
 One plan is ONE query — one row of the dense engine's leading Q axis, one
 difference index of the host engine.  Multi-source helpers return a list of
 plans (one per source).
 
+Two constructors:
+
+* the **compatibility constructor** — ``QueryPlan(kind=..., semiring=...,
+  init=..., max_iters=..., drop=..., nfa=...)`` — synthesizes the canonical
+  operator graph from the legacy single-node fields (bit-identical answers
+  and byte accounting to the pre-graph IR);
+* ``QueryPlan.from_graph(kind, ops)`` — an explicit node tuple, validated
+  (cycle detection, dangling references, node-count constraints) with the
+  legacy accessor fields derived from the graph.
+
 Plans in one session must share a **family**: the static shape of the
-compiled sweep (semiring, iteration bound, PageRank weight derivation, NFA).
-:func:`family_key` is that compatibility key; per-query knobs (source,
-drop policy) stay free.
+compiled sweep (semiring, iteration bound, PageRank weight derivation, NFA
+— i.e. everything but per-query knobs like source, drop policies, and
+aggregates).  :func:`dataflow.family_key` is that compatibility key, stable
+under node listing order.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+import json
 
 import numpy as np
 
+from repro.core import dataflow as df
 from repro.core import dropping as dr
 from repro.core import semiring as sr
+from repro.core.dataflow import NFA, Aggregate, InitSpec  # noqa: F401  (re-export)
 
 INF = np.float32(np.inf)
 
 
-# --------------------------------------------------------------------------- NFA
-@dataclasses.dataclass(frozen=True)
-class NFA:
-    """Nondeterministic automaton over edge labels.
-
-    ``delta``: label → [(state, state')] transitions; used to build the
-    product graph (v, q) whose reachability answers the RPQ.
-    """
-
-    num_states: int
-    delta: dict[int, list[tuple[int, int]]]
-    start: int
-    accept: tuple[int, ...]
-
-    @staticmethod
-    def star(label: int) -> "NFA":
-        """Q1 = a*"""
-        return NFA(1, {label: [(0, 0)]}, 0, (0,))
-
-    @staticmethod
-    def concat_star(a: int, b: int) -> "NFA":
-        """Q2 = a ∘ b*"""
-        return NFA(2, {a: [(0, 1)], b: [(1, 1)]}, 0, (1,))
-
-    @staticmethod
-    def chain(labels: Sequence[int]) -> "NFA":
-        """Q3 = l1 ∘ l2 ∘ … ∘ lk (fixed-length path template)."""
-        delta: dict[int, list[tuple[int, int]]] = {}
-        for j, lbl in enumerate(labels):
-            delta.setdefault(int(lbl), []).append((j, j + 1))
-        return NFA(len(labels) + 1, delta, 0, (len(labels),))
-
-    def key(self) -> tuple:
-        """Hashable structural identity (``delta`` is a dict)."""
-        delta = tuple(
-            (lbl, tuple(pairs)) for lbl, pairs in sorted(self.delta.items())
-        )
-        return (self.num_states, delta, self.start, self.accept)
-
-    def __hash__(self) -> int:  # delta is a dict → default frozen hash fails
-        return hash(self.key())
-
-
-# --------------------------------------------------------------------------- init spec
-@dataclasses.dataclass(frozen=True)
-class InitSpec:
-    """How to build a query's D_0 row (the implicit iteration-0 diffs).
-
-    ``kind``:
-      * ``"source"``   — ``value`` at ``source``, ``fill`` elsewhere
-        (SSSP/K-hop/RPQ; for RPQ ``source`` is the product-space id).
-      * ``"labels"``   — vertex id as the initial label (WCC).
-      * ``"constant"`` — ``fill`` everywhere (PageRank's all-ones).
-    """
-
-    kind: str = "source"
-    source: int | None = None
-    value: float = 0.0
-    fill: float = float(INF)
-
-    def build(self, num_vertices: int) -> np.ndarray:
-        if self.kind == "source":
-            row = np.full(num_vertices, self.fill, dtype=np.float32)
-            row[int(self.source)] = self.value
-            return row
-        if self.kind == "labels":
-            return np.arange(num_vertices, dtype=np.float32)
-        if self.kind == "constant":
-            return np.full(num_vertices, self.fill, dtype=np.float32)
-        raise ValueError(f"unknown init kind {self.kind!r}")
+def _semiring_eq(a: sr.Semiring, b: sr.Semiring) -> bool:
+    """Structural semiring equality (msg callables compare by identity)."""
+    return (a.name, a.reduce, a.identity, a.carry_prev, a.base, a.hop_cap) == (
+        b.name,
+        b.reduce,
+        b.identity,
+        b.carry_prev,
+        b.base,
+        b.hop_cap,
+    )
 
 
 # --------------------------------------------------------------------------- plan
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
-    """One registered query, declaratively.
+    """One registered query: a validated DAG of operator nodes.
 
-    Engine-independent: the session maps a plan onto whichever engine backs
-    it.  ``drop`` is the query's OWN dropping policy (paper §5 is tuned per
-    query/operator); the DroppedVT *representation* (det store vs Bloom) is
-    session-level because it fixes array shapes.
+    ``ops`` is the graph (the source of truth); the legacy fields
+    (``semiring``/``init``/``max_iters``/``drop``/``nfa``/…) are accessor
+    mirrors synced from the graph nodes, kept as dataclass fields so the
+    compatibility constructor and existing call sites keep working.  To
+    change a node's drop policy use :meth:`with_op_drop` — a bare
+    ``dataclasses.replace(plan, drop=...)`` is rejected because the graph
+    would silently win.
     """
 
-    kind: str  # "sssp" | "khop" | "wcc" | "pagerank" | "rpq"
-    semiring: sr.Semiring
-    init: InitSpec
-    max_iters: int
-    drop: dr.DropConfig = dataclasses.field(default_factory=dr.DropConfig)
+    kind: str  # "sssp" | "khop" | "wcc" | "pagerank" | "rpq" | free-form
+    semiring: sr.Semiring | None = None
+    init: InitSpec | None = None
+    max_iters: int | None = None
+    drop: dr.DropConfig | None = None
     nfa: NFA | None = None
     # PageRank: edge weights derive from out-degrees (alpha / outdeg)
     weight_from_degree: bool = False
     alpha: float = 0.85
+    ops: tuple[df.OpNode, ...] | None = None
 
+    def __post_init__(self):
+        if self.ops is None:
+            if self.semiring is None or self.init is None or self.max_iters is None:
+                raise ValueError(
+                    "the compatibility constructor needs semiring, init and "
+                    "max_iters (or pass an explicit operator graph via ops=)"
+                )
+            if self.drop is None:
+                object.__setattr__(self, "drop", dr.DropConfig())
+            object.__setattr__(
+                self,
+                "ops",
+                df.canonical(
+                    semiring=self.semiring,
+                    init=self.init,
+                    max_iters=int(self.max_iters),
+                    drop=self.drop,
+                    nfa=self.nfa,
+                    weight_from_degree=self.weight_from_degree,
+                    alpha=self.alpha,
+                ),
+            )
+            return
+        nodes = df.validate(self.ops)
+        it = next(n for n in nodes.values() if n.kind == "iterate")
+        join = next((n for n in nodes.values() if n.kind == "join"), None)
+        tf = next((n for n in nodes.values() if n.kind == "transform"), None)
+        derived = dict(
+            semiring=it.semiring,
+            init=it.init,
+            max_iters=int(it.max_iters),
+            drop=it.drop,
+            nfa=None if join is None else join.nfa,
+            weight_from_degree=tf is not None and tf.weight_from_degree,
+            alpha=0.85 if tf is None else float(tf.alpha),
+        )
+        mismatched = []
+        if self.semiring is not None and not _semiring_eq(
+            self.semiring, derived["semiring"]
+        ):
+            mismatched.append("semiring")
+        for name in ("init", "max_iters", "drop", "nfa"):
+            given = getattr(self, name)
+            if given is not None and given != derived[name]:
+                mismatched.append(name)
+        if self.weight_from_degree and not derived["weight_from_degree"]:
+            mismatched.append("weight_from_degree")
+        if self.alpha != 0.85 and self.alpha != derived["alpha"]:
+            mismatched.append("alpha")
+        if mismatched:
+            raise ValueError(
+                f"legacy fields {mismatched} disagree with the operator graph"
+                " — the graph is the source of truth; use with_op_drop() /"
+                " from_graph() instead of dataclasses.replace"
+            )
+        for name, val in derived.items():
+            object.__setattr__(self, name, val)
+
+    # ----------------------------------------------------------- constructors
+    @staticmethod
+    def from_graph(kind: str, ops) -> "QueryPlan":
+        """Build a plan from an explicit (validated) operator-node tuple."""
+        return QueryPlan(kind=kind, ops=tuple(ops))
+
+    # ------------------------------------------------------------- graph api
+    def node(self, op_id: str) -> df.OpNode:
+        for n in self.ops:
+            if n.op_id == op_id:
+                return n
+        raise KeyError(f"plan has no operator {op_id!r}")
+
+    def op_ids(self) -> tuple[str, ...]:
+        return tuple(n.op_id for n in self.ops)
+
+    def op_of_kind(self, kind: str) -> df.OpNode | None:
+        return next((n for n in self.ops if n.kind == kind), None)
+
+    def droppable_ops(self) -> tuple[str, ...]:
+        """Operators that own a difference store (governor-addressable)."""
+        return tuple(
+            n.op_id for n in self.ops if n.kind in df.DROPPABLE_OPS
+        )
+
+    @property
+    def aggregate(self) -> Aggregate | None:
+        return self.op_of_kind("aggregate")
+
+    @property
+    def join_drop(self) -> dr.DropConfig | None:
+        join = self.op_of_kind("join")
+        return None if join is None else join.drop
+
+    def join_policy(self) -> str:
+        """The Join operator's storage policy: ``"none"`` (no join node),
+        ``"auto"`` (inherit the engine mode — legacy), ``"materialize"``
+        (VDC trace) or ``"drop"`` (complete dropping, JOD §4)."""
+        join = self.op_of_kind("join")
+        if join is None:
+            return "none"
+        if join.drop is None:
+            return "auto"
+        return "drop" if join.drop.enabled() else "materialize"
+
+    def with_op_drop(self, op_id: str, cfg: dr.DropConfig | None) -> "QueryPlan":
+        """A copy with operator ``op_id``'s drop policy replaced (the
+        session's primitive for mid-stream policy rewrites)."""
+        node = self.node(op_id)
+        if node.kind not in df.DROPPABLE_OPS:
+            raise ValueError(
+                f"operator {op_id!r} ({node.kind}) owns no difference store"
+            )
+        if node.kind == "iterate" and cfg is None:
+            cfg = dr.DropConfig()
+        new_ops = tuple(
+            dataclasses.replace(n, drop=cfg) if n.op_id == op_id else n
+            for n in self.ops
+        )
+        return QueryPlan(kind=self.kind, ops=new_ops)
+
+    def with_aggregate(
+        self, agg: str = "topk", *, k: int = 8, bins: int = 8
+    ) -> "QueryPlan":
+        """A copy with an Aggregate node appended (or replaced)."""
+        it = self.op_of_kind("iterate")
+        node = Aggregate(inputs=(it.op_id,), agg=agg, k=int(k), bins=int(bins))
+        new_ops = tuple(n for n in self.ops if n.kind != "aggregate") + (node,)
+        return QueryPlan(kind=self.kind, ops=new_ops)
+
+    # ---------------------------------------------------------------- family
     def family_key(self) -> tuple:
         """Static-compatibility key: plans sharing a session must agree on
         everything that shapes the compiled sweep (per-query knobs — source,
-        drop selection — stay free)."""
-        s = self.semiring
-        return (
-            s.name,
-            s.reduce,
-            s.identity,
-            s.carry_prev,
-            s.base,
-            s.hop_cap,
-            int(self.max_iters),
-            bool(self.weight_from_degree),
-            float(self.alpha),
-            None if self.nfa is None else self.nfa.key(),
-        )
+        drop selection, aggregates — stay free).  Stable under node listing
+        order (``dataflow.family_key`` sorts node keys)."""
+        return df.family_key(self.ops)
 
     def build_init(self, num_vertices: int) -> np.ndarray:
         """D_0 row over the engine's vertex space.
@@ -158,6 +234,23 @@ class QueryPlan:
             return spec.build(num_vertices)
         return self.init.build(num_vertices)
 
+    # ------------------------------------------------------------------ JSON
+    def to_json(self) -> dict:
+        """JSON-able plan graph (``from_json`` round-trips it)."""
+        return {
+            "kind": self.kind,
+            "nodes": [df.node_to_dict(n) for n in self.ops],
+        }
+
+    @staticmethod
+    def from_json(obj: dict | str) -> "QueryPlan":
+        if isinstance(obj, str):
+            obj = json.loads(obj)
+        return QueryPlan.from_graph(
+            obj.get("kind", "custom"),
+            tuple(df.node_from_dict(n) for n in obj["nodes"]),
+        )
+
 
 # --------------------------------------------------------------------------- builders
 def sssp(
@@ -167,12 +260,14 @@ def sssp(
     drop: dr.DropConfig | None = None,
 ) -> QueryPlan:
     """Single-source shortest-distance field (Bellman-Ford IFE)."""
-    return QueryPlan(
-        kind="sssp",
-        semiring=sr.min_plus(),
-        init=InitSpec(kind="source", source=int(source)),
-        max_iters=int(max_iters),
-        drop=drop or dr.DropConfig(),
+    return QueryPlan.from_graph(
+        "sssp",
+        df.canonical(
+            semiring=sr.min_plus(),
+            init=InitSpec(kind="source", source=int(source)),
+            max_iters=int(max_iters),
+            drop=drop,
+        ),
     )
 
 
@@ -183,12 +278,14 @@ def khop(
     drop: dr.DropConfig | None = None,
 ) -> QueryPlan:
     """Vertices within ≤ k hops of the source; iterations bounded by k."""
-    return QueryPlan(
-        kind="khop",
-        semiring=sr.min_hop(float(k)),
-        init=InitSpec(kind="source", source=int(source)),
-        max_iters=int(k),
-        drop=drop or dr.DropConfig(),
+    return QueryPlan.from_graph(
+        "khop",
+        df.canonical(
+            semiring=sr.min_hop(float(k)),
+            init=InitSpec(kind="source", source=int(source)),
+            max_iters=int(k),
+            drop=drop,
+        ),
     )
 
 
@@ -199,12 +296,14 @@ def wcc(
 ) -> QueryPlan:
     """Weakly connected components: min-label propagation (the caller's
     graph must carry both edge directions)."""
-    return QueryPlan(
-        kind="wcc",
-        semiring=sr.min_label(),
-        init=InitSpec(kind="labels"),
-        max_iters=int(max_iters),
-        drop=drop or dr.DropConfig(),
+    return QueryPlan.from_graph(
+        "wcc",
+        df.canonical(
+            semiring=sr.min_label(),
+            init=InitSpec(kind="labels"),
+            max_iters=int(max_iters),
+            drop=drop,
+        ),
     )
 
 
@@ -214,15 +313,19 @@ def pagerank(
     alpha: float = 0.85,
     drop: dr.DropConfig | None = None,
 ) -> QueryPlan:
-    """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2)."""
-    return QueryPlan(
-        kind="pagerank",
-        semiring=sr.pagerank(alpha),
-        init=InitSpec(kind="constant", fill=1.0),
-        max_iters=int(iters),
-        drop=drop or dr.DropConfig(),
-        weight_from_degree=True,
-        alpha=float(alpha),
+    """Pregel-style PageRank, fixed ``iters`` rounds (paper §6.1.2): the
+    canonical graph routes the ingest through a Transform node deriving
+    edge weights from out-degrees (α / outdeg)."""
+    return QueryPlan.from_graph(
+        "pagerank",
+        df.canonical(
+            semiring=sr.pagerank(alpha),
+            init=InitSpec(kind="constant", fill=1.0),
+            max_iters=int(iters),
+            drop=drop,
+            weight_from_degree=True,
+            alpha=float(alpha),
+        ),
     )
 
 
@@ -232,17 +335,42 @@ def rpq(
     *,
     max_iters: int = 64,
     drop: dr.DropConfig | None = None,
+    join_store: str = "auto",
 ) -> QueryPlan:
     """Regular path query: reachability on the NFA-product graph.
 
-    The session owns the product construction; ``init.source`` is stored in
-    *base* space and mapped to (source, start-state) at registration.
+    The canonical graph is ``Ingest → Join(nfa) → Iterate``: the session
+    reads the Join node to own the product construction, so the engines
+    never see automata; ``init.source`` is stored in *base* space and mapped
+    to (source, start-state) at registration.
+
+    ``join_store`` is the Join operator's own storage policy:
+
+    * ``"auto"``        — inherit the engine mode (legacy behavior);
+    * ``"materialize"`` — keep the per-edge message trace (VDC on the
+      product graph);
+    * ``"drop"``        — complete dropping (§4): the trace is never stored,
+      messages recompute on demand ("drop the Join's differences, keep the
+      Iterate's").
     """
-    return QueryPlan(
-        kind="rpq",
-        semiring=sr.min_hop(),
-        init=InitSpec(kind="source", source=int(source)),
-        max_iters=int(max_iters),
-        drop=drop or dr.DropConfig(),
-        nfa=nfa,
+    if join_store not in ("auto", "materialize", "drop"):
+        raise ValueError(
+            f"unknown join_store {join_store!r}; "
+            "choose auto | materialize | drop"
+        )
+    join_drop = {
+        "auto": None,
+        "materialize": dr.DropConfig(),
+        "drop": dr.DropConfig(mode="det", selection="random", p=1.0),
+    }[join_store]
+    return QueryPlan.from_graph(
+        "rpq",
+        df.canonical(
+            semiring=sr.min_hop(),
+            init=InitSpec(kind="source", source=int(source)),
+            max_iters=int(max_iters),
+            drop=drop,
+            nfa=nfa,
+            join_drop=join_drop,
+        ),
     )

@@ -93,6 +93,9 @@ def engine_from_plans(
                 f"plan drop mode {p.drop.mode!r} does not match the "
                 f"engine's DroppedVT representation {spec.mode!r}"
             )
+    # a plan whose Join node materializes its trace needs the VDC join store
+    if any(p.join_policy() == "materialize" for p in plans):
+        mode = "vdc"
     v = graph.num_vertices
     cfg = engine_config_for(
         first,
@@ -114,6 +117,7 @@ def engine_from_plans(
         batch_capacity=batch_capacity,
         mesh=mesh,
         drop_rows=[p.drop for p in plans],
+        join_rows=[p.join_policy() != "drop" for p in plans],
     )
 
 
@@ -221,6 +225,7 @@ class RPQ:
         product_capacity: int | None = None,
         batch_capacity: int = 32,
         drop: dr.DropConfig | None = None,
+        join_store: str = "auto",
         **kw,
     ) -> None:
         self.base = graph
@@ -237,7 +242,9 @@ class RPQ:
         )
         self.handles = self.session.register_many(
             [
-                qplan.rpq(s, nfa, max_iters=max_iters, drop=drop)
+                qplan.rpq(
+                    s, nfa, max_iters=max_iters, drop=drop, join_store=join_store
+                )
                 for s in self.sources
             ]
         )

@@ -140,6 +140,10 @@ class ScratchEngine:
     def nbytes_per_query(self) -> dict[int, int]:
         return {s: 0 for s in sorted(self.plans)}  # SCRATCH holds no diffs
 
+    def nbytes_per_operator(self) -> dict[int, dict[str, int]]:
+        """Operator-addressed view: zero by construction for every store."""
+        return {s: {"iterate": 0} for s in sorted(self.plans)}
+
     def recompute_cost_per_query(self) -> dict[int, int]:
         """Every slot pays the full re-execution; apportion the cumulative
         scheduled count evenly so the governor's signals stay comparable."""
@@ -147,7 +151,11 @@ class ScratchEngine:
         total = 0 if self.last_stats is None else int(self.last_stats.scheduled)
         return {s: total // n for s in sorted(self.plans)}
 
-    def set_drop_params(self, slot: int, cfg) -> int:
+    def recompute_cost_per_operator(self) -> dict[int, dict[str, int]]:
+        per = self.recompute_cost_per_query()
+        return {s: {"iterate": c} for s, c in per.items()}
+
+    def set_drop_params(self, slot: int, cfg, op_id: str = "iterate") -> int:
         """SCRATCH is already the zero-memory endpoint of the ladder."""
         if slot not in self.plans:
             raise ValueError(f"slot {slot} is not registered")

@@ -57,7 +57,13 @@ ENGINES = ("dense", "host", "scratch")
 class EngineProtocol(Protocol):
     """What a session expects from an engine: a runtime query lifecycle on
     one dynamic graph.  ``register_plan`` computes the new query's state
-    in-engine; ``deregister_plan`` returns the accounted bytes released."""
+    in-engine; ``deregister_plan`` returns the accounted bytes released.
+
+    Difference state is **operator-addressed**: every per-query meter has an
+    operator-granular refinement keyed ``(slot, op_id)`` — per slot the
+    operator bytes sum to the query bytes — and ``set_drop_params`` rewrites
+    ONE operator's policy (``"iterate"``: §5 selection params; ``"join"``:
+    complete dropping / re-materialization of the join trace)."""
 
     def register_plan(self, plan: qp.QueryPlan) -> int: ...
 
@@ -75,9 +81,15 @@ class EngineProtocol(Protocol):
 
     def nbytes_per_query(self) -> dict[int, int]: ...
 
+    def nbytes_per_operator(self) -> dict[int, dict[str, int]]: ...
+
     def recompute_cost_per_query(self) -> dict[int, int]: ...
 
-    def set_drop_params(self, slot: int, cfg: dr.DropConfig) -> int: ...
+    def recompute_cost_per_operator(self) -> dict[int, dict[str, int]]: ...
+
+    def set_drop_params(
+        self, slot: int, cfg: dr.DropConfig, op_id: str = "iterate"
+    ) -> int: ...
 
     def active_slots(self) -> list[int]: ...
 
@@ -159,15 +171,28 @@ class DenseEngine:
             active=np.zeros(q_cap, bool),
         )
 
+    def _join_flag(self, plan: qp.QueryPlan) -> bool | None:
+        """The plan's Join materialization flag for the engine slot;
+        validates that an explicitly materializing plan lands on an engine
+        that carries a join store."""
+        policy = plan.join_policy()
+        if policy == "materialize" and self.impl.state.jstore is None:
+            raise ValueError(
+                "plan materializes the Join but the session engine runs JOD "
+                "(no join store); include a join-materializing plan in the "
+                "opening batch or open the session with mode='vdc'"
+            )
+        return policy != "drop"
+
     def register_plan(self, plan: qp.QueryPlan) -> int:
-        return self.impl.register_slot(
-            plan.build_init(self.impl.cfg.num_vertices), plan.drop
-        )
+        return self.register_plans([plan])[0]
 
     def register_plans(self, plans: list[qp.QueryPlan]) -> list[int]:
         v = self.impl.cfg.num_vertices
+        # validate the whole batch before any slot commits (atomicity)
+        flags = [self._join_flag(p) for p in plans]
         return self.impl.register_slots(
-            [(p.build_init(v), p.drop) for p in plans]
+            [(p.build_init(v), p.drop, f) for p, f in zip(plans, flags)]
         )
 
     def deregister_plan(self, slot: int) -> int:
@@ -191,11 +216,19 @@ class DenseEngine:
     def nbytes_per_query(self) -> dict[int, int]:
         return self.impl.nbytes_per_query()
 
+    def nbytes_per_operator(self) -> dict[int, dict[str, int]]:
+        return self.impl.nbytes_per_operator()
+
     def recompute_cost_per_query(self) -> dict[int, int]:
         return self.impl.recompute_cost_per_query()
 
-    def set_drop_params(self, slot: int, cfg: dr.DropConfig) -> int:
-        return self.impl.set_drop_params(slot, cfg)
+    def recompute_cost_per_operator(self) -> dict[int, dict[str, int]]:
+        return self.impl.recompute_cost_per_operator()
+
+    def set_drop_params(
+        self, slot: int, cfg: dr.DropConfig, op_id: str = "iterate"
+    ) -> int:
+        return self.impl.set_drop_params(slot, cfg, op_id=op_id)
 
     @property
     def det_overflow_shed(self) -> int:
@@ -361,7 +394,7 @@ class CQPSession:
             self._plans[qid] = plan
             self.registered_total += 1
             if self._governor is not None:
-                self._governor.on_register(qid, plan.drop)
+                self._governor.on_register(qid, plan)
             handles.append(QueryHandle(qid=qid, plan=plan))
         self._govern()
         return handles
@@ -414,6 +447,11 @@ class CQPSession:
             # size the slot pool for the opening batch — avoids a cascade of
             # geometric regrows before the first sweep even runs
             kw["min_slots"] = max(int(kw["min_slots"]), len(plans))
+            # a plan whose Join node materializes its trace needs the VDC
+            # join store allocated — the engine mode is derived from the
+            # operator graph ("auto" joins inherit the session's mode kw)
+            if any(p.join_policy() == "materialize" for p in plans):
+                kw["mode"] = "vdc"
             self._impl = DenseEngine(
                 self._egraph,
                 first_plan,
@@ -516,6 +554,46 @@ class CQPSession:
         )
         return np.isfinite(d[:, list(plan.nfa.accept)]).any(axis=-1)
 
+    def aggregate(self, handle: QueryHandle) -> dict:
+        """Evaluate the plan's Aggregate operator over the query's answers.
+
+        Stateless post-processing (the node owns no difference store): RPQ
+        answers are first reduced to base-vertex space (min over NFA
+        states).  ``topk`` returns the k best finite values with their
+        vertices; ``histogram`` buckets the finite values into equal-width
+        bins and counts the unreachable rest.
+        """
+        plan = self._plans[self._require_qid(handle)]
+        node = plan.aggregate
+        if node is None:
+            raise ValueError("plan has no aggregate operator")
+        vals = self.answers(handle)
+        if plan.nfa is not None:
+            # a product vertex only matches the RPQ at an ACCEPTING state —
+            # reduce over those columns alone (as reachable() does), else
+            # partial-path prefixes pollute the aggregate
+            vals = vals.reshape(
+                self.graph.num_vertices, plan.nfa.num_states
+            )[:, list(plan.nfa.accept)].min(axis=1)
+        finite = np.isfinite(vals)
+        out = {"op": node.op_id, "agg": node.agg}
+        if node.agg == "topk":
+            idx = np.nonzero(finite)[0]
+            order = idx[np.argsort(vals[idx], kind="stable")][: node.k]
+            out["vertices"] = [int(i) for i in order]
+            out["values"] = [float(vals[i]) for i in order]
+            return out
+        if node.agg == "histogram":
+            f = vals[finite]
+            counts, edges = np.histogram(
+                f, bins=node.bins
+            ) if f.size else (np.zeros(node.bins, int), np.arange(node.bins + 1.0))
+            out["counts"] = [int(c) for c in counts]
+            out["edges"] = [float(e) for e in edges]
+            out["unreachable"] = int((~finite).sum())
+            return out
+        raise ValueError(f"unknown aggregate {node.agg!r}")
+
     def handles(self) -> list[QueryHandle]:
         return [QueryHandle(qid=q, plan=self._plans[q]) for q in sorted(self._plans)]
 
@@ -529,11 +607,40 @@ class CQPSession:
         per = self._nbytes_per_query_map()
         return [per[qid] for qid in sorted(self._plans)]
 
+    def nbytes_per_operator(self) -> list[dict[str, int]]:
+        """Per-query bytes refined to the operators owning difference
+        stores, aligned with :meth:`handles` (ascending qid).  Every
+        droppable operator of the plan graph appears (0 bytes when its
+        store is dropped or the engine never materializes it); per query
+        the operator bytes sum to :meth:`nbytes_per_query`'s entry."""
+        per = self._nbytes_per_op_map()
+        out = []
+        for qid in sorted(self._plans):
+            ops = {
+                op: bytes_ for (q, op), bytes_ in per.items() if q == qid
+            }
+            out.append(ops)
+        return out
+
     def _nbytes_per_query_map(self) -> dict[int, int]:
         if self._impl is None:
             return {}
         by_slot = self._impl.nbytes_per_query()
         return {qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()}
+
+    def _nbytes_per_op_map(self) -> dict[tuple[int, str], int]:
+        """(qid, op_id) → accounted bytes — the governor's victim table."""
+        if self._impl is None:
+            return {}
+        by_slot = self._impl.nbytes_per_operator()
+        out: dict[tuple[int, str], int] = {}
+        for qid, slot in self._handles.items():
+            ops = dict(by_slot.get(slot, {"iterate": 0}))
+            for op in self._plans[qid].droppable_ops():
+                ops.setdefault(op, 0)  # e.g. a JOD engine's (empty) join op
+            for op, bytes_ in ops.items():
+                out[(qid, op)] = int(bytes_)
+        return out
 
     def _recompute_cost_map(self) -> dict[int, int]:
         if self._impl is None:
@@ -541,12 +648,31 @@ class CQPSession:
         by_slot = self._impl.recompute_cost_per_query()
         return {qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()}
 
+    def _recompute_cost_op_map(self) -> dict[tuple[int, str], int]:
+        if self._impl is None:
+            return {}
+        by_slot = self._impl.recompute_cost_per_operator()
+        out: dict[tuple[int, str], int] = {}
+        for qid, slot in self._handles.items():
+            ops = dict(by_slot.get(slot, {"iterate": 0}))
+            for op in self._plans[qid].droppable_ops():
+                ops.setdefault(op, 0)
+            for op, cost in ops.items():
+                out[(qid, op)] = int(cost)
+        return out
+
     # --------------------------------------------------------- drop policy
-    def set_drop_policy(self, handle: QueryHandle, cfg: dr.DropConfig) -> int:
-        """Rewrite a live query's §5 selection policy mid-stream (the
-        governor's primitive, exposed for manual tuning).  The engine sheds
-        stored diffs the new policy selects; returns the bytes released."""
-        return self._set_drop_policy_qid(self._require_qid(handle), cfg)
+    def set_drop_policy(
+        self, handle: QueryHandle, cfg: dr.DropConfig, op: str = "iterate"
+    ) -> int:
+        """Rewrite ONE operator's drop policy of a live query mid-stream
+        (the governor's primitive, exposed for manual tuning).
+
+        ``op="iterate"`` (default) is the §5 selection rewrite: the engine
+        sheds stored diffs the new policy selects.  ``op="join"`` drops the
+        query's join trace completely (an enabled config) or re-materializes
+        it (a disabled one).  Returns the bytes released."""
+        return self._set_op_drop_policy_qid(self._require_qid(handle), op, cfg)
 
     def _require_qid(self, handle: QueryHandle) -> int:
         if handle.qid not in self._handles:
@@ -554,8 +680,18 @@ class CQPSession:
         return handle.qid
 
     def _set_drop_policy_qid(self, qid: int, cfg: dr.DropConfig) -> int:
-        freed = self._impl.set_drop_params(self._handles[qid], cfg)
-        self._plans[qid] = dataclasses.replace(self._plans[qid], drop=cfg)
+        return self._set_op_drop_policy_qid(qid, "iterate", cfg)
+
+    def _set_op_drop_policy_qid(
+        self, qid: int, op: str, cfg: dr.DropConfig
+    ) -> int:
+        freed = self._impl.set_drop_params(self._handles[qid], cfg, op_id=op)
+        plan = self._plans[qid]
+        if any(n.op_id == op for n in plan.ops):
+            self._plans[qid] = plan.with_op_drop(op, cfg)
+        # else: the engine's implicit operator (e.g. a legacy plan's join
+        # trace under mode="vdc") — engine state changed, plan graph has no
+        # node to annotate
         self.bytes_shed_total += max(int(freed), 0)
         return int(freed)
 
@@ -599,6 +735,7 @@ class CQPSession:
             "bytes_shed_total": self.bytes_shed_total,
             "nbytes": self.nbytes(),
             "nbytes_per_query": self.nbytes_per_query(),
+            "nbytes_per_operator": self.nbytes_per_operator(),
             "query_qids": sorted(self._plans),
         }
         if self._governor is not None:

@@ -74,7 +74,8 @@ class SparseDiffIFE:
         # governor scratch fallback: slots whose difference index was dropped
         # entirely — answers re-executed from scratch per batch (slot → row)
         self._scratch_rows: dict[int, np.ndarray] = {}
-        self._drop_cfg: dict[int, dr.DropConfig] = {}  # recorded policies
+        # recorded policies, keyed slot (iterate) or (slot, op_id)
+        self._drop_cfg: dict = {}
         self.sources = [] if sources is None else [int(s) for s in sources]
         for s in self.sources:
             if khop is not None:
@@ -110,6 +111,7 @@ class SparseDiffIFE:
         del self.plans[slot], self.diffs[slot], self._init_rows[slot]
         self._scratch_rows.pop(slot, None)
         self._drop_cfg.pop(slot, None)
+        self._drop_cfg.pop((slot, "join"), None)
         self.work_per_slot.pop(slot, None)
         self._free.append(slot)
         self._free.sort(reverse=True)
@@ -126,11 +128,25 @@ class SparseDiffIFE:
         """slot → accounted diff bytes (scratch-fallback slots hold none)."""
         return {s: self.slot_nbytes(s) for s in sorted(self.plans)}
 
+    def nbytes_per_operator(self) -> dict[int, dict[str, int]]:
+        """slot → {op_id → bytes}: the host engine is the paper's pointer
+        machine — JOD by construction, so the Iterate's difference index is
+        the only store (the Join's differences are always recomputed)."""
+        return {s: {"iterate": self.slot_nbytes(s)} for s in sorted(self.plans)}
+
     def recompute_cost_per_query(self) -> dict[int, int]:
         """slot → cumulative aggregator re-runs charged to that query."""
         return {s: self.work_per_slot.get(s, 0) for s in sorted(self.plans)}
 
-    def set_drop_params(self, slot: int, cfg: dr.DropConfig) -> int:
+    def recompute_cost_per_operator(self) -> dict[int, dict[str, int]]:
+        return {
+            s: {"iterate": self.work_per_slot.get(s, 0)}
+            for s in sorted(self.plans)
+        }
+
+    def set_drop_params(
+        self, slot: int, cfg: dr.DropConfig, op_id: str = "iterate"
+    ) -> int:
         """Host form of the policy ladder — two effective rungs.
 
         The pointer engine has no DroppedVT repair path, so partial rungs
@@ -140,18 +156,22 @@ class SparseDiffIFE:
         (paper's SCRATCH endpoint, applied per query).  De-escalating below
         drop-all rebuilds the index from the live adjacency (one static IFE
         run — register-convergence makes this exact).  Returns bytes freed.
+
+        ``op_id="join"`` is a recorded no-op: the pointer engine never
+        materializes the Join's differences (it is the paper's JOD machine),
+        so there is nothing to drop or re-materialize.
         """
         if slot not in self.plans:
             raise ValueError(f"slot {slot} is not registered")
+        if op_id == "join":
+            self._drop_cfg[(slot, "join")] = cfg
+            return 0
+        if op_id != "iterate":
+            raise ValueError(
+                f"operator {op_id!r} owns no engine difference store"
+            )
         self._drop_cfg[slot] = cfg
-        # drop-all means the policy selects EVERY candidate: p ≥ 1 under
-        # Random, or p ≥ 1 with no τ_max carve-out under Degree (everything
-        # at or below τ_max drops by coin, below τ_min unconditionally)
-        scratch = (
-            cfg.enabled()
-            and cfg.p >= 1.0
-            and (cfg.selection == "random" or cfg.tau_max == INF)
-        )
+        scratch = cfg.drops_all()
         if scratch and slot not in self._scratch_rows:
             freed = self.slot_nbytes(slot)
             self.diffs[slot] = defaultdict(list)

@@ -121,15 +121,20 @@ class RecomputeTelemetry:
 
     def snapshot(self) -> dict:
         """JSON-friendly view for serving telemetry."""
+
+        def fmt(key) -> str:
+            # the governor meters (qid, op_id) keys; legacy callers use qids
+            return "/".join(str(p) for p in key) if isinstance(key, tuple) else str(key)
+
         return {
             "observations": self.observations,
             "det_overflow_total": self.det_overflow_total,
             "global_ewma": {k: round(v, 3) for k, v in self._global.items()},
             "per_query": {
-                str(qid): {
+                fmt(qid): {
                     "nbytes": sig.nbytes,
                     "cost_rate": round(sig.cost_rate or 0.0, 3),
                 }
-                for qid, sig in sorted(self._per_query.items())
+                for qid, sig in sorted(self._per_query.items(), key=lambda kv: fmt(kv[0]))
             },
         }

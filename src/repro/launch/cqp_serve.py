@@ -20,11 +20,19 @@ query along the drop-policy ladder; ``--governor det|prob`` picks the
 provisioned DroppedVT representation.  The JSON report then carries the
 per-query byte breakdown, the governor's action log, and its headroom.
 
+``--plan-file plans.json`` registers operator-graph plans loaded from JSON
+(the ``QueryPlan.to_json`` schema — DESIGN.md §11) instead of the synthetic
+``--query`` batch; the JSON report carries ``nbytes_per_operator``, the
+per-(query, operator) byte breakdown, either way.
+
 Examples::
 
     PYTHONPATH=src python -m repro.launch.cqp_serve --smoke
     PYTHONPATH=src python -m repro.launch.cqp_serve \
         --v 512 --e 2048 --queries 16 --updates 256 --batch 32 --backend ell
+    # operator-graph plans from JSON (e.g. an RPQ with a materialized join)
+    PYTHONPATH=src python -m repro.launch.cqp_serve --smoke --json \
+        --plan-file plans.json --backend coo
     # churn: register before chunk 2, deregister before chunk 4, on all engines
     for eng in dense host scratch; do
       PYTHONPATH=src python -m repro.launch.cqp_serve --smoke --json \
@@ -67,10 +75,34 @@ def make_mesh(kind: str, shards: int | None):
     return make_production_mesh()
 
 
+def load_plan_file(path: str):
+    """Operator-graph plans from JSON: a list of plan objects (or
+    ``{"plans": [...]}``), each ``{"kind": ..., "nodes": [...]}`` in the
+    :meth:`repro.core.plan.QueryPlan.to_json` schema.  All plans must share
+    one family (one session compiles one sweep shape)."""
+    from repro.core.plan import QueryPlan
+
+    with open(path) as fh:
+        payload = json.load(fh)
+    if isinstance(payload, dict):
+        payload = payload.get("plans", [payload])
+    if not payload:
+        raise SystemExit(f"plan file {path!r} holds no plans")
+    try:
+        plans = [QueryPlan.from_json(obj) for obj in payload]
+    except (KeyError, ValueError) as exc:
+        raise SystemExit(f"plan file {path!r}: {exc}") from exc
+    return plans
+
+
 def initial_plans(args):
     """The query batch registered before the stream starts."""
     from repro.core import plan
 
+    if args.plan_file is not None:
+        plans = load_plan_file(args.plan_file)
+        args.queries = len(plans)
+        return plans
     if args.query == "sssp":
         return [
             plan.sssp(s, max_iters=args.max_iters) for s in range(args.queries)
@@ -248,6 +280,10 @@ def serve(args) -> dict:
         "deregister_ms": [float(x) for x in dereg_ms],
         "bytes_freed": int(bytes_freed),
         "nbytes_per_query": [int(x) for x in session.nbytes_per_query()],
+        "nbytes_per_operator": [
+            {op: int(b) for op, b in ops.items()}
+            for ops in session.nbytes_per_operator()
+        ],
         "init_s": t_init,
         "compile_s": t_compile,
     }
@@ -306,6 +342,15 @@ def main() -> None:
     ap.add_argument("--max-iters", type=int, default=48)
     ap.add_argument("--delete-fraction", type=float, default=0.2)
     ap.add_argument("--query", choices=("sssp", "khop", "pagerank"), default="sssp")
+    ap.add_argument(
+        "--plan-file",
+        default=None,
+        metavar="PLANS_JSON",
+        help="register operator-graph plans loaded from a JSON file "
+        "(QueryPlan.to_json schema) instead of the --query/--queries batch; "
+        "the synthetic stream carries edge label 0, so RPQ plans should "
+        "match label 0",
+    )
     ap.add_argument(
         "--engine",
         choices=("dense", "host", "scratch"),
@@ -376,6 +421,11 @@ def main() -> None:
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
+    if args.plan_file is not None and args.register_at:
+        ap.error(
+            "--register-at derives churn plans from --query and cannot "
+            "be combined with --plan-file (one session, one family)"
+        )
     if args.emulate_devices:
         if "jax" in sys.modules:
             ap.error("--emulate-devices must run before jax is imported")

@@ -1,0 +1,560 @@
+"""Operator-graph plan IR (DESIGN.md §11): validation, family keys, JSON,
+per-operator dropping, and governor attribution at (query, operator).
+
+The acceptance property: per-operator dropping is demonstrably FINER than
+per-query dropping — an RPQ session that drops only the Join operator's
+differences holds fewer bytes than whole-query dropping at equal answer
+exactness — and legacy single-node plans stay bit-identical through the
+compatibility constructor.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dataflow as df
+from repro.core import dropping as dr
+from repro.core import plan as qplan
+from repro.core.governor import GovernorConfig
+from repro.core.graph import DynamicGraph
+from repro.core.session import ENGINES, CQPSession
+from repro.launch.mesh import make_data_mesh
+
+V = 16
+MAX_ITERS = 16
+NDEV = jax.device_count()
+
+needs8 = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def labelled_workload(seed=3, v=V, e=56, nbatches=4):
+    rng = np.random.default_rng(seed)
+    seen = {}
+    while len(seen) < e:
+        u, w = int(rng.integers(0, v)), int(rng.integers(0, v))
+        if u != w:
+            seen[(u, w)] = (u, w, 1.0, 1 + int(rng.integers(0, 2)))
+    edges = list(seen.values())
+    initial, pool = edges[: e * 3 // 4], edges[e * 3 // 4 :]
+    present = {(u, w) for (u, w, _x, _l) in initial}
+    labels = {(u, w): l for (u, w, _x, l) in edges}
+    batches = []
+    for _ in range(nbatches):
+        batch = []
+        for _ in range(4):
+            if present and rng.random() < 0.3:
+                u, w = sorted(present)[int(rng.integers(0, len(present)))]
+                batch.append((u, w, labels[(u, w)], 1.0, -1))
+                present.discard((u, w))
+            elif pool:
+                u, w, x, l = pool.pop()
+                batch.append((u, w, l, x, +1))
+                present.add((u, w))
+        batches.append(batch)
+    return initial, batches
+
+
+# ------------------------------------------------------------------ validation
+def test_graph_validation_rejects_cycles_and_dangling_refs():
+    nfa = df.NFA.star(1)
+    with pytest.raises(ValueError, match="cycle"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Join(inputs=("iterate",), nfa=nfa),
+                df.Iterate(inputs=("join",), semiring=qplan.sr.min_hop()),
+            )
+        )
+    with pytest.raises(ValueError, match="dangling"):
+        df.validate(
+            (df.Ingest(), df.Iterate(inputs=("nope",), semiring=qplan.sr.min_plus()))
+        )
+    with pytest.raises(ValueError, match="duplicate"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Ingest(),
+                df.Iterate(inputs=("ingest",), semiring=qplan.sr.min_plus()),
+            )
+        )
+    with pytest.raises(ValueError, match="consumes itself"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Iterate(
+                    op_id="it", inputs=("it",), semiring=qplan.sr.min_plus()
+                ),
+            )
+        )
+    with pytest.raises(ValueError, match="exactly one iterate"):
+        df.validate((df.Ingest(),))
+    with pytest.raises(ValueError, match="exactly one ingest"):
+        df.validate((df.Iterate(inputs=(), semiring=qplan.sr.min_plus()),))
+    with pytest.raises(ValueError, match="not connected"):
+        df.validate(
+            (df.Ingest(), df.Iterate(inputs=(), semiring=qplan.sr.min_plus()))
+        )
+    with pytest.raises(ValueError, match="must consume the iterate"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Iterate(inputs=("ingest",), semiring=qplan.sr.min_plus()),
+                df.Aggregate(inputs=("ingest",)),
+            )
+        )
+    # join dropping is all-or-nothing (§4): partial p rejected
+    with pytest.raises(ValueError, match="completely"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Join(nfa=nfa, drop=dr.DropConfig(mode="det", p=0.5)),
+                df.Iterate(inputs=("join",), semiring=qplan.sr.min_hop()),
+            )
+        )
+    with pytest.raises(ValueError, match="needs an NFA"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Join(nfa=None),
+                df.Iterate(inputs=("join",), semiring=qplan.sr.min_hop()),
+            )
+        )
+    # store-owning nodes are engine-addressed by kind: ids are pinned
+    with pytest.raises(ValueError, match="canonical id"):
+        df.validate(
+            (
+                df.Ingest(),
+                df.Iterate(
+                    op_id="fixpoint",
+                    inputs=("ingest",),
+                    semiring=qplan.sr.min_plus(),
+                ),
+            )
+        )
+
+
+def test_family_key_stable_under_node_reordering():
+    nfa = df.NFA.concat_star(1, 2)
+    a = qplan.rpq(0, nfa, max_iters=MAX_ITERS)
+    shuffled = qplan.QueryPlan.from_graph("rpq", tuple(reversed(a.ops)))
+    assert a.family_key() == shuffled.family_key()
+    # per-query knobs stay free: source, drop policies, aggregates
+    assert a.family_key() == qplan.rpq(7, nfa, max_iters=MAX_ITERS).family_key()
+    assert (
+        a.family_key()
+        == qplan.rpq(
+            0, nfa, max_iters=MAX_ITERS, drop=dr.DropConfig(mode="det", p=0.5)
+        ).family_key()
+    )
+    assert (
+        a.family_key()
+        == qplan.rpq(0, nfa, max_iters=MAX_ITERS, join_store="drop").family_key()
+    )
+    assert a.family_key() == a.with_aggregate("topk", k=3).family_key()
+    # structural knobs are not free
+    assert a.family_key() != qplan.rpq(0, df.NFA.star(1), max_iters=MAX_ITERS).family_key()
+    assert a.family_key() != qplan.rpq(0, nfa, max_iters=MAX_ITERS + 1).family_key()
+    assert qplan.sssp(0).family_key() != qplan.khop(0).family_key()
+
+
+def test_nfa_and_initspec_hash_equality_edge_cases():
+    # delta insertion order and per-label pair order are both normalized
+    a = df.NFA(2, {1: [(0, 1)], 2: [(1, 1)]}, 0, (1,))
+    b = df.NFA(2, {2: [(1, 1)], 1: [(0, 1)]}, 0, (1,))
+    assert a == b and hash(a) == hash(b) and a.key() == b.key()
+    c = df.NFA(2, {1: [(0, 1), (1, 1)]}, 0, (0, 1))
+    d = df.NFA(2, {1: [(1, 1), (0, 1)]}, 0, (1, 0))
+    assert c == d and hash(c) == hash(d)
+    assert a != df.NFA(2, {1: [(0, 1)], 2: [(1, 1)]}, 1, (1,))  # start differs
+    assert len({a, b, c, d}) == 2  # usable as dict/set keys
+    # InitSpec: frozen value equality, inf fills included
+    assert df.InitSpec(kind="source", source=3) == df.InitSpec(
+        kind="source", source=3
+    )
+    assert hash(df.InitSpec(fill=float("inf"))) == hash(df.InitSpec())
+    assert df.InitSpec(kind="source", source=0) != df.InitSpec(
+        kind="source", source=None
+    )
+    # plans whose NFAs differ only in listing order share a family
+    pa = qplan.rpq(0, a, max_iters=MAX_ITERS)
+    pb = qplan.rpq(0, b, max_iters=MAX_ITERS)
+    assert pa.family_key() == pb.family_key()
+
+
+def test_plan_json_round_trip():
+    nfa = df.NFA.concat_star(1, 2)
+    plans = [
+        qplan.sssp(3, max_iters=24, drop=dr.DropConfig(mode="det", p=0.4)),
+        qplan.khop(1, k=4),
+        qplan.wcc(max_iters=32),
+        qplan.pagerank(iters=6, alpha=0.9),
+        qplan.rpq(2, nfa, max_iters=24, join_store="materialize"),
+        qplan.rpq(2, nfa, max_iters=24, join_store="drop"),
+        qplan.sssp(0).with_aggregate("histogram", bins=4),
+    ]
+    for p in plans:
+        blob = json.dumps(p.to_json())  # must be JSON-serializable
+        p2 = qplan.QueryPlan.from_json(json.loads(blob))
+        assert p2.kind == p.kind
+        assert p2.family_key() == p.family_key()
+        assert p2.to_json() == p.to_json()
+        assert p2.join_policy() == p.join_policy()
+        assert p2.drop == p.drop
+        assert (p2.aggregate is None) == (p.aggregate is None)
+
+
+def test_compatibility_constructor_and_graph_sync_guard():
+    legacy = qplan.QueryPlan(
+        kind="sssp",
+        semiring=qplan.sr.min_plus(),
+        init=df.InitSpec(kind="source", source=0),
+        max_iters=MAX_ITERS,
+    )
+    built = qplan.sssp(0, max_iters=MAX_ITERS)
+    assert legacy.family_key() == built.family_key()
+    assert [n.kind for n in legacy.ops] == ["ingest", "iterate"]
+    # pagerank's canonical graph routes through a Transform node
+    assert [n.kind for n in qplan.pagerank().ops] == [
+        "ingest",
+        "transform",
+        "iterate",
+    ]
+    # a bare replace would silently lose against the graph: rejected
+    with pytest.raises(ValueError, match="with_op_drop"):
+        dataclasses.replace(built, drop=dr.DropConfig(mode="det", p=0.5))
+    p2 = built.with_op_drop("iterate", dr.DropConfig(mode="det", p=0.5))
+    assert p2.drop.p == 0.5 and p2.node("iterate").drop.p == 0.5
+    with pytest.raises(ValueError, match="owns no difference store"):
+        built.with_op_drop("ingest", dr.DropConfig(mode="det", p=1.0))
+
+
+# -------------------------------------------------- per-operator dropping
+def test_join_only_dropping_finer_than_whole_query():
+    """The acceptance inequality: on an RPQ with a materialized join, drop
+    the Join's differences ALONE (keep the Iterate's) and hold fewer bytes
+    than whole-query dropping — at equal (exact) answers."""
+    initial, batches = labelled_workload(seed=5)
+    nfa = qplan.NFA.concat_star(1, 2)
+
+    def run(join_store, drop=None, **kw):
+        s = CQPSession(DynamicGraph(V, initial, capacity=256), engine="dense", **kw)
+        hs = s.register_many(
+            [
+                qplan.rpq(q, nfa, max_iters=MAX_ITERS, drop=drop, join_store=join_store)
+                for q in (0, 5)
+            ]
+        )
+        for b in batches:
+            s.apply_updates(b)
+        return s, hs
+
+    ref = CQPSession(DynamicGraph(V, initial, capacity=256), engine="host")
+    rh = ref.register_many(
+        [qplan.rpq(q, nfa, max_iters=MAX_ITERS) for q in (0, 5)]
+    )
+    for b in batches:
+        ref.apply_updates(b)
+
+    whole, hw = run(
+        "materialize",
+        drop=dr.DropConfig(mode="det", selection="random", p=0.5, seed=7),
+    )
+    op_only, ho = run("drop")
+
+    for s, hs in ((whole, hw), (op_only, ho)):
+        for h, r in zip(hs, rh):
+            np.testing.assert_array_equal(s.reachable(h), ref.reachable(r))
+            np.testing.assert_array_equal(s.answers(h), ref.answers(r))
+    assert op_only.nbytes() < whole.nbytes(), (
+        op_only.nbytes(),
+        whole.nbytes(),
+    )
+    # the refinement is visible per operator: whole-query kept the join
+    # trace (it cannot partial-drop), operator dropping zeroed it
+    per_w = whole.nbytes_per_operator()
+    per_o = op_only.nbytes_per_operator()
+    assert sum(ops["join"] for ops in per_w) > 0
+    assert all(ops["join"] == 0 for ops in per_o)
+
+
+@pytest.mark.parametrize("engine", ENGINES)
+def test_nbytes_per_operator_sums_to_per_query(engine):
+    initial, batches = labelled_workload(seed=9)
+    plain = [(u, w, x) for (u, w, x, _l) in initial]
+    s = CQPSession(DynamicGraph(V, plain, capacity=256), engine=engine)
+    s.register_many([qplan.sssp(i, max_iters=MAX_ITERS) for i in range(3)])
+    s.apply_updates([(u, w, 0, x, sg) for (u, w, _l, x, sg) in batches[0]])
+    per_q = s.nbytes_per_query()
+    per_op = s.nbytes_per_operator()
+    assert len(per_q) == len(per_op) == 3
+    for q_bytes, ops in zip(per_q, per_op):
+        assert sum(ops.values()) == q_bytes
+        assert "iterate" in ops
+    assert sum(per_q) == s.nbytes()
+
+
+def test_set_drop_policy_join_roundtrip_stays_exact():
+    """Dropping the join mid-stream frees its bytes; re-materializing
+    rebuilds the trace; answers stay exact throughout (vs a never-dropped
+    twin and the host engine)."""
+    initial, batches = labelled_workload(seed=11)
+    nfa = qplan.NFA.star(1)
+
+    def make():
+        s = CQPSession(DynamicGraph(V, initial, capacity=256), engine="dense")
+        h = s.register(
+            qplan.rpq(0, nfa, max_iters=MAX_ITERS, join_store="materialize")
+        )
+        return s, h
+
+    a, ha = make()
+    b, hb = make()
+    ref = CQPSession(DynamicGraph(V, initial, capacity=256), engine="host")
+    rh = ref.register(qplan.rpq(0, nfa, max_iters=MAX_ITERS))
+
+    a.apply_updates(batches[0])
+    b.apply_updates(batches[0])
+    ref.apply_updates(batches[0])
+    before = a.nbytes_per_operator()[0]
+    assert before["join"] > 0
+    freed = a.set_drop_policy(ha, dr.DropConfig(mode="det", p=1.0), op="join")
+    assert freed == before["join"]
+    assert a.nbytes_per_operator()[0]["join"] == 0
+    assert a.handles()[0].plan.join_policy() == "drop"
+    # maintained through further updates in the dropped state
+    a.apply_updates(batches[1])
+    b.apply_updates(batches[1])
+    ref.apply_updates(batches[1])
+    np.testing.assert_array_equal(a.answers(ha), b.answers(hb))
+    np.testing.assert_array_equal(a.reachable(ha), ref.reachable(rh))
+    # re-materialize: join bytes regrow, answers unchanged
+    assert a.set_drop_policy(ha, dr.DropConfig(), op="join") == 0
+    assert a.nbytes_per_operator()[0]["join"] > 0
+    a.apply_updates(batches[2])
+    b.apply_updates(batches[2])
+    ref.apply_updates(batches[2])
+    np.testing.assert_array_equal(a.answers(ha), b.answers(hb))
+    np.testing.assert_array_equal(a.reachable(ha), ref.reachable(rh))
+    # partial join dropping is rejected end-to-end
+    with pytest.raises(ValueError, match="completely|unsupported"):
+        a.set_drop_policy(ha, dr.DropConfig(mode="det", p=0.5), op="join")
+
+
+def test_vdc_with_iterate_dropping_stays_exact():
+    """The operator IR decouples the join store from §5 dropping: a VDC
+    engine (materialized join) now composes with iterate-partial dropping —
+    answers stay exact against the host engine."""
+    initial, batches = labelled_workload(seed=13)
+    plain = [(u, w, x) for (u, w, x, _l) in initial]
+    plog = [
+        [(u, w, 0, x, sg) for (u, w, _l, x, sg) in b] for b in batches
+    ]
+    s = CQPSession(
+        DynamicGraph(V, plain, capacity=256),
+        engine="dense",
+        mode="vdc",
+        drop=dr.DropConfig(mode="det"),
+    )
+    hs = s.register_many(
+        [
+            qplan.sssp(
+                0,
+                max_iters=MAX_ITERS,
+                drop=dr.DropConfig(mode="det", selection="random", p=0.5, seed=3),
+            ),
+            qplan.sssp(5, max_iters=MAX_ITERS),
+        ]
+    )
+    ref = CQPSession(DynamicGraph(V, plain, capacity=256), engine="host")
+    rh = ref.register_many(
+        [qplan.sssp(0, max_iters=MAX_ITERS), qplan.sssp(5, max_iters=MAX_ITERS)]
+    )
+    for b in plog:
+        s.apply_updates(b)
+        ref.apply_updates(b)
+        for h, r in zip(hs, rh):
+            np.testing.assert_array_equal(s.answers(h), ref.answers(r))
+    # the dropping query stores fewer iterate bytes; both hold join bytes
+    per = s.nbytes_per_operator()
+    assert per[0]["iterate"] < per[1]["iterate"]
+    assert per[0]["join"] > 0 and per[1]["join"] > 0
+
+
+@needs8
+def test_join_dropping_sharded_answers_parity():
+    """Join-only dropping under the 8-shard mesh stays answer-identical to
+    the unsharded session across drops and re-materializations."""
+    initial, batches = labelled_workload(seed=15)
+    nfa = qplan.NFA.concat_star(1, 2)
+
+    def make(shards):
+        mesh = make_data_mesh(shards) if shards > 1 else None
+        s = CQPSession(
+            DynamicGraph(V, initial, capacity=256), engine="dense", mesh=mesh
+        )
+        hs = s.register_many(
+            [
+                qplan.rpq(q, nfa, max_iters=MAX_ITERS, join_store="materialize")
+                for q in (0, 5)
+            ]
+        )
+        return s, hs
+
+    a, ha = make(1)
+    b, hb = make(8)
+
+    def check():
+        for x, y in zip(ha, hb):
+            np.testing.assert_array_equal(a.answers(x), b.answers(y))
+
+    check()
+    for j, batch in enumerate(batches):
+        a.apply_updates(batch)
+        b.apply_updates(batch)
+        check()
+        if j == 1:
+            # each session frees exactly its own slot's join bytes (the
+            # sharded edge-cell layout may store a slightly different J
+            # change-point set, so cross-shard byte equality is not claimed
+            # — answers are)
+            fa = a.set_drop_policy(ha[0], dr.DropConfig(mode="det", p=1.0), op="join")
+            fb = b.set_drop_policy(hb[0], dr.DropConfig(mode="det", p=1.0), op="join")
+            assert fa >= 0 and fb >= 0
+            assert a.nbytes_per_operator()[0]["join"] == 0
+            assert b.nbytes_per_operator()[0]["join"] == 0
+            check()
+        if j == 2:
+            a.set_drop_policy(ha[0], dr.DropConfig(), op="join")
+            b.set_drop_policy(hb[0], dr.DropConfig(), op="join")
+            check()
+
+
+def test_aggregate_rpq_reduces_over_accepting_states_only():
+    """An RPQ aggregate must report MATCHES: product entries at
+    non-accepting states (e.g. the source's start-state init) are partial
+    paths, not answers."""
+    initial, batches = labelled_workload(seed=21)
+    nfa = qplan.NFA.concat_star(1, 2)  # accept state 1 only
+    s = CQPSession(DynamicGraph(V, initial, capacity=256), engine="dense")
+    h = s.register(
+        qplan.rpq(0, nfa, max_iters=MAX_ITERS).with_aggregate("topk", k=V)
+    )
+    s.apply_updates(batches[0])
+    reach = s.reachable(h)
+    top = s.aggregate(h)
+    assert set(top["vertices"]) == set(np.nonzero(reach)[0])
+    hist = s.aggregate(
+        s.register(
+            qplan.rpq(0, nfa, max_iters=MAX_ITERS).with_aggregate(
+                "histogram", bins=4
+            )
+        )
+    )
+    assert hist["unreachable"] == int((~reach).sum())
+    assert sum(hist["counts"]) == int(reach.sum())
+
+
+# ------------------------------------------------------- governor attribution
+def test_governor_attributes_actions_per_operator():
+    """Under a budget, an RPQ session with materialized joins escalates at
+    (query, operator) granularity — the action log names the operator, the
+    join trace is reclaimed, and answers stay exact."""
+    initial, batches = labelled_workload(seed=17, e=64, nbatches=5)
+    nfa = qplan.NFA.concat_star(1, 2)
+    plans = [
+        qplan.rpq(q, nfa, max_iters=MAX_ITERS, join_store="materialize")
+        for q in (0, 5)
+    ]
+
+    plain = CQPSession(DynamicGraph(V, initial, capacity=256), engine="dense")
+    hp = plain.register_many(plans)
+    for b in batches:
+        plain.apply_updates(b)
+    peak = plain.nbytes()
+    join_bytes = sum(ops["join"] for ops in plain.nbytes_per_operator())
+    assert join_bytes > 0
+
+    budget = max(peak - join_bytes // 2, 64)  # reclaimable by join drops alone
+    s = CQPSession(
+        DynamicGraph(V, initial, capacity=256),
+        engine="dense",
+        budget_bytes=budget,
+        governor=GovernorConfig(representation="prob", bloom_bits=1 << 7),
+    )
+    hs = s.register_many(plans)
+    for b in batches:
+        s.apply_updates(b)
+    assert s.nbytes() <= budget
+    gov = s.stats()["governor"]
+    assert any(a["op"] == "join" and a["kind"] == "escalate" for a in gov["actions"])
+    assert any(lvl > 0 for key, lvl in gov["op_levels"].items() if key.endswith("/join"))
+    json.dumps(gov)  # snapshot stays JSON-serializable with op keys
+    for h, p in zip(hs, hp):
+        np.testing.assert_array_equal(s.answers(h), plain.answers(p))
+
+
+# ------------------------------------------------------------------- serving
+def test_cqp_serve_plan_file_subprocess(tmp_path):
+    """cqp_serve --plan-file: operator-graph plans load from JSON and the
+    report carries the per-(query, operator) byte breakdown."""
+    nfa = qplan.NFA.star(0)  # the synthetic stream carries label 0
+    plans = [
+        qplan.rpq(s, nfa, max_iters=12, join_store="materialize").to_json()
+        for s in (0, 3)
+    ]
+    plan_file = tmp_path / "plans.json"
+    plan_file.write_text(json.dumps({"plans": plans}))
+    env = dict(os.environ)
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src") + os.pathsep + env.get(
+        "PYTHONPATH", ""
+    )
+    out = subprocess.run(
+        [
+            sys.executable,
+            "-m",
+            "repro.launch.cqp_serve",
+            "--smoke",
+            "--json",
+            "--backend",
+            "coo",
+            "--plan-file",
+            str(plan_file),
+        ],
+        env=env,
+        capture_output=True,
+        text=True,
+        timeout=560,
+    )
+    assert out.returncode == 0, out.stdout + out.stderr
+    payload = json.loads(out.stdout.strip().splitlines()[-1])
+    assert payload["queries"] == 2
+    per_op = payload["nbytes_per_operator"]
+    assert len(per_op) == payload["final_queries"]
+    assert all("join" in ops and "iterate" in ops for ops in per_op)
+    assert sum(sum(ops.values()) for ops in per_op) == sum(
+        payload["nbytes_per_query"]
+    )
+
+
+def test_core_deprecation_shims_removed():
+    """PR-3's repro.core shims are gone: the home modules are canonical."""
+    import repro.core as core
+
+    for name in ("SparseDiffIFE", "Scratch", "RPQ"):
+        with pytest.raises(AttributeError):
+            getattr(core, name)
+    # the home modules keep working
+    from repro.core.queries import RPQ  # noqa: F401
+    from repro.core.scratch import Scratch, ScratchEngine  # noqa: F401
+    from repro.core.sparse_engine import SparseDiffIFE  # noqa: F401
