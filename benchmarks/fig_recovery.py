@@ -1,0 +1,117 @@
+"""Durability cost/benefit: checkpoint overhead and restore-vs-replay gain.
+
+Two rows for the DESIGN.md §12 recovery story, measured on a dense-engine
+session serving the standard smoke workload:
+
+* ``fig_recovery/checkpoint`` — mean wall time of one synchronous session
+  checkpoint; ``derived`` reports the serving-time overhead percentage of
+  checkpointing every K chunks, plus checkpoint bytes vs live accounted
+  diff-store bytes (the snapshot carries the full arrays, the live figure
+  only the accounted trace — their ratio is the durability tax on disk).
+* ``fig_recovery/restore`` — wall time of restore-latest + replay of the
+  post-checkpoint log suffix, against a cold *genesis replay* (rebuild the
+  session from the initial graph and re-ingest the whole log); ``derived``
+  carries the speedup, the number the checkpoint cadence buys at MTTR time.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from benchmarks.common import emit
+from repro.core import plan as qplan
+from repro.core.graph import DynamicGraph
+from repro.core.session import CQPSession
+from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
+
+V, E, QUERIES, UPDATES, BATCH, MAX_ITERS = 64, 256, 4, 64, 8, 24
+EVERY = 2  # checkpoint every K chunks
+
+
+def _workload():
+    edges = powerlaw_graph(V, E, seed=0)
+    initial, pool = split_90_10(edges, seed=0)
+    stream = update_stream(
+        initial, V, num_batches=UPDATES // BATCH, batch_size=BATCH,
+        insert_pool=pool, delete_fraction=0.2, seed=1,
+    )
+    log = [u for batch in stream for u in batch]
+    chunks = [log[i : i + BATCH] for i in range(0, len(log), BATCH)]
+    return initial, chunks
+
+
+def _session(initial):
+    graph = DynamicGraph(V, initial, capacity=E * 4 + 64)
+    s = CQPSession(
+        graph, engine="dense", batch_capacity=BATCH, min_slots=QUERIES
+    )
+    s.register_many(
+        [qplan.sssp(i, max_iters=MAX_ITERS) for i in range(QUERIES)]
+    )
+    return s
+
+
+def main() -> None:
+    initial, chunks = _workload()
+
+    # baseline serve (warm chunk 0 first so compile stays out of both sides)
+    s = _session(initial)
+    s.apply_updates_batched(chunks[0], batch_size=BATCH)
+    t0 = time.perf_counter()
+    for c in chunks[1:]:
+        s.apply_updates_batched(c, batch_size=BATCH)
+    t_plain = time.perf_counter() - t0
+
+    with tempfile.TemporaryDirectory() as d:
+        s = _session(initial)
+        s.apply_updates_batched(chunks[0], batch_size=BATCH)
+        ckpt_s = []
+        t0 = time.perf_counter()
+        for k, c in enumerate(chunks[1:], start=1):
+            s.apply_updates_batched(c, batch_size=BATCH)
+            if (k + 1) % EVERY == 0:
+                t1 = time.perf_counter()
+                s.checkpoint(d, step=k + 1, extra={"next_chunk": k + 1})
+                ckpt_s.append(time.perf_counter() - t1)
+        t_ckpt = time.perf_counter() - t0
+        arrays, _meta = s.state_dict()
+        ckpt_bytes = sum(int(a.nbytes) for a in arrays.values())
+        live_bytes = s.nbytes()
+        overhead_pct = 100.0 * max(t_ckpt - t_plain, 0.0) / t_plain
+        emit(
+            "fig_recovery/checkpoint",
+            sum(ckpt_s) / len(ckpt_s) * 1e6,
+            f"overhead_pct={overhead_pct:.1f};every={EVERY};"
+            f"ckpt_bytes={ckpt_bytes};live_bytes={live_bytes}",
+        )
+
+        # crash after the last chunk: restore latest + replay the suffix
+        t0 = time.perf_counter()
+        r = CQPSession.restore(d)
+        cursor = int(r.restore_info["extra"]["next_chunk"])
+        for c in chunks[cursor:]:
+            r.apply_updates_batched(c, batch_size=BATCH)
+        t_restore = time.perf_counter() - t0
+
+        # genesis replay: no checkpoint, recompute everything from scratch
+        t0 = time.perf_counter()
+        g = _session(initial)
+        for c in chunks:
+            g.apply_updates_batched(c, batch_size=BATCH)
+        t_genesis = time.perf_counter() - t0
+        assert (
+            r.nbytes_per_operator() == g.nbytes_per_operator()
+        ), "restore+replay must land on the genesis-replay state"
+        emit(
+            "fig_recovery/restore",
+            t_restore * 1e6,
+            f"genesis_us={t_genesis * 1e6:.1f};"
+            f"speedup={t_genesis / max(t_restore, 1e-9):.2f};"
+            f"replayed_chunks={len(chunks) - cursor};"
+            f"total_chunks={len(chunks)}",
+        )
+
+
+if __name__ == "__main__":
+    main()

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.fig_governor_budget",
     "benchmarks.fig_operator_drop",
     "benchmarks.fig_shard_scaling",
+    "benchmarks.fig_recovery",
 ]
 
 

@@ -2,6 +2,7 @@
 
 from repro.checkpoint.store import (  # noqa: F401
     CheckpointManager,
+    load_checkpoint,
     restore_checkpoint,
     save_checkpoint,
 )

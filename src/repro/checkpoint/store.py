@@ -41,18 +41,28 @@ def _leaf_paths(tree) -> list[tuple[str, Any]]:
     return out
 
 
-def save_checkpoint(directory: str, step: int, tree: Pytree) -> str:
-    """Synchronous atomic save; returns the final step dir."""
+def save_checkpoint(directory: str, step: int, tree: Pytree, *,
+                    meta: dict | None = None) -> str:
+    """Synchronous atomic save; returns the final step dir.
+
+    ``meta`` (JSON-able) rides along in the manifest so a restore can rebuild
+    host-side structure (plans, free lists, cursors) before touching arrays.
+    """
     final = os.path.join(directory, f"step_{step:08d}")
     tmp = final + ".tmp"
     os.makedirs(tmp, exist_ok=True)
     manifest = {"step": step, "leaves": {}}
+    if meta is not None:
+        manifest["meta"] = meta
     arrays = {}
     for key, leaf in _leaf_paths(tree):
         arr = np.asarray(jax.device_get(leaf))
         arrays[key] = arr
         manifest["leaves"][key] = {"shape": list(arr.shape), "dtype": str(arr.dtype)}
-    np.savez(os.path.join(tmp, "shard_0.npz"), **{k.replace("/", "__"): v for k, v in arrays.items()})
+    npz_path = os.path.join(tmp, "shard_0.npz")
+    np.savez(npz_path, **{k.replace("/", "__"): v for k, v in arrays.items()})
+    with open(npz_path, "rb+") as f:
+        os.fsync(f.fileno())
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
         f.flush()
@@ -74,18 +84,67 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def restore_checkpoint(directory: str, target_tree: Pytree, step: int | None = None,
-                       shardings=None) -> tuple[Pytree, int]:
-    """Restore into the structure of ``target_tree``; reshards onto the
-    current mesh when ``shardings`` (matching tree of NamedSharding) given."""
+def load_checkpoint(directory: str, step: int | None = None
+                    ) -> tuple[dict[str, np.ndarray], dict, int]:
+    """Load a checkpoint's raw leaves keyed by path, plus its manifest.
+
+    Unlike :func:`restore_checkpoint` this needs no target tree — callers that
+    must rebuild host structure from ``manifest["meta"]`` *before* they know
+    the tree shape (e.g. ``CQPSession.restore``) start here.
+    """
     if step is None:
         step = latest_step(directory)
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {directory}")
     d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
     data = np.load(os.path.join(d, "shard_0.npz"))
-    keys = [k for k, _ in _leaf_paths(target_tree)]
-    leaves = [data[k.replace("/", "__")] for k in keys]
+    arrays = {k: data[k.replace("/", "__")] for k in manifest["leaves"]}
+    return arrays, manifest, step
+
+
+def _validate_leaf(key: str, manifest: dict, target, directory: str) -> None:
+    entry = manifest["leaves"].get(key)
+    if entry is None:
+        raise ValueError(
+            f"checkpoint {directory} has no leaf {key!r}; "
+            f"saved leaves: {sorted(manifest['leaves'])}"
+        )
+    want = np.asarray(target)
+    if tuple(entry["shape"]) != want.shape:
+        raise ValueError(
+            f"checkpoint leaf {key!r} has shape {tuple(entry['shape'])} but the "
+            f"restore target expects {want.shape}"
+        )
+    if entry["dtype"] != str(want.dtype):
+        raise ValueError(
+            f"checkpoint leaf {key!r} has dtype {entry['dtype']} but the "
+            f"restore target expects {want.dtype}"
+        )
+
+
+def restore_checkpoint(directory: str, target_tree: Pytree, step: int | None = None,
+                       shardings=None) -> tuple[Pytree, int]:
+    """Restore into the structure of ``target_tree``; reshards onto the
+    current mesh when ``shardings`` (matching tree of NamedSharding) given.
+
+    Every target leaf is validated against the manifest (presence, shape,
+    dtype) so a mismatched tree fails with a named error instead of a numpy
+    broadcast crash downstream.
+    """
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {directory}")
+    d = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(d, "shard_0.npz"))
+    leaves = []
+    for key, target in _leaf_paths(target_tree):
+        _validate_leaf(key, manifest, target, d)
+        leaves.append(data[key.replace("/", "__")])
     treedef = jax.tree.structure(target_tree)
     tree = jax.tree.unflatten(treedef, leaves)
     if shardings is not None:
@@ -105,19 +164,19 @@ class CheckpointManager:
         self._thread: threading.Thread | None = None
         os.makedirs(directory, exist_ok=True)
 
-    def save(self, step: int, tree: Pytree) -> None:
+    def save(self, step: int, tree: Pytree, *, meta: dict | None = None) -> None:
         host_tree = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
         if self.async_write:
             self.wait()  # double buffer: at most one write in flight
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree), daemon=True
+                target=self._write, args=(step, host_tree, meta), daemon=True
             )
             self._thread.start()
         else:
-            self._write(step, host_tree)
+            self._write(step, host_tree, meta)
 
-    def _write(self, step: int, tree: Pytree) -> None:
-        save_checkpoint(self.directory, step, tree)
+    def _write(self, step: int, tree: Pytree, meta: dict | None = None) -> None:
+        save_checkpoint(self.directory, step, tree, meta=meta)
         self._gc()
 
     def wait(self) -> None:
@@ -126,12 +185,17 @@ class CheckpointManager:
             self._thread = None
 
     def _gc(self) -> None:
+        entries = os.listdir(self.directory)
         steps = sorted(
-            d for d in os.listdir(self.directory)
-            if d.startswith("step_") and not d.endswith(".tmp")
+            d for d in entries if d.startswith("step_") and not d.endswith(".tmp")
         )
         for d in steps[: -self.keep]:
             shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
+        # a SIGKILLed writer can strand a .tmp dir; at most one write is ever
+        # in flight (ours, already renamed), so any .tmp seen here is stale
+        for d in entries:
+            if d.startswith("step_") and d.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, d), ignore_errors=True)
 
     def restore_latest(self, target_tree: Pytree, shardings=None):
         self.wait()

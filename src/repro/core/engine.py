@@ -1781,6 +1781,139 @@ class DiffIFE:
         self._free_slots.extend(range(new_q - 1, old_q - 1, -1))
         self._build_dispatch()
 
+    # ------------------------------------------------------------ durability
+    def export_state(self) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, meta) snapshot of the difference trace.
+
+        Arrays are *global* (device_get assembles sharded carries) and the
+        VDC J store is converted from the mesh-dependent cell layout to the
+        canonical edge-slot layout ``[Q, E_cap, S_J]`` — so a checkpoint
+        taken at 8 shards is layout-independent and restores at any shard
+        count (:meth:`import_state` scatters rows into the new cell layout).
+        """
+        st = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), self.state)
+        arrays: dict[str, np.ndarray] = {}
+
+        def put_store(prefix: str, store: ds.DiffStore) -> None:
+            arrays[prefix + "/iters"] = np.asarray(store.iters)
+            arrays[prefix + "/vals"] = np.asarray(store.vals)
+            arrays[prefix + "/count"] = np.asarray(store.count)
+
+        put_store("dstore", st.dstore)
+        if st.jstore is not None:
+            jst = st.jstore
+            if self._shard_index is not None:
+                idx = np.full(self.graph.capacity, -1, np.int32)
+                for slot, lin in self._shard_index.cell_of.items():
+                    idx[slot] = lin
+                jst = jax.tree.map(
+                    lambda x: np.asarray(jax.device_get(x)),
+                    ds.gather_rows(self.state.jstore, jnp.asarray(idx)),
+                )
+            put_store("jstore", jst)
+        drop = st.drop
+        if drop.det is not None:
+            put_store("drop_det", drop.det)
+        if drop.flt is not None:
+            arrays["drop_flt/bits"] = np.asarray(drop.flt.bits)
+        arrays["drop/det_overflow"] = np.asarray(drop.det_overflow)
+        arrays["drop/max_iter"] = np.asarray(drop.max_iter)
+        if drop.params is not None:
+            for f in dr.DropParams._fields:
+                arrays[f"drop_params/{f}"] = np.asarray(getattr(drop.params, f))
+        arrays["init"] = st.init
+        arrays["cur"] = st.cur
+        arrays["repair_counts"] = st.repair_counts
+        arrays["active"] = st.active
+        if st.join_mat is not None:
+            arrays["join_mat"] = st.join_mat
+        meta = {
+            "slot_capacity": self.cfg.num_queries,
+            "mode": self.cfg.mode,
+            "free_slots": [int(s) for s in self._free_slots],
+            "det_overflow_shed": int(self.det_overflow_shed),
+            "sched_total": int(self._sched_total),
+            "ell_width": int(self._ell_width),
+        }
+        return arrays, meta
+
+    def import_state(self, arrays: dict, meta: dict) -> None:
+        """Load a snapshot produced by :meth:`export_state`.
+
+        The engine must have been constructed for the same restored graph
+        and slot capacity (an all-inactive pool skips the initial sweep, so
+        construction is cheap); the J store is scattered into *this* mesh's
+        cell layout and every carry is placed via ``elastic.reshard`` when
+        sharded.
+        """
+        if int(meta["slot_capacity"]) != self.cfg.num_queries:
+            raise ValueError(
+                f"checkpoint has {meta['slot_capacity']} query slots but the "
+                f"engine was built with {self.cfg.num_queries}"
+            )
+
+        def get_store(prefix: str) -> ds.DiffStore:
+            return ds.DiffStore(
+                iters=jnp.asarray(arrays[prefix + "/iters"]),
+                vals=jnp.asarray(arrays[prefix + "/vals"]),
+                count=jnp.asarray(arrays[prefix + "/count"]),
+            )
+
+        jstore = None
+        if "jstore/iters" in arrays:
+            jstore = get_store("jstore")
+            if self._shard_index is not None:
+                size = self.num_shards * self._shard_index.shard_capacity
+                idx = np.full(size, -1, np.int32)
+                for slot, lin in self._shard_index.cell_of.items():
+                    idx[lin] = slot
+                jstore = ds.gather_rows(jstore, jnp.asarray(idx))
+        det = get_store("drop_det") if "drop_det/iters" in arrays else None
+        flt = None
+        if "drop_flt/bits" in arrays:
+            flt = bloom_lib.BloomFilter(
+                jnp.asarray(arrays["drop_flt/bits"]), self.cfg.drop.bloom_hashes
+            )
+        params = None
+        if "drop_params/p" in arrays:
+            params = dr.DropParams(
+                **{
+                    f: jnp.asarray(arrays[f"drop_params/{f}"])
+                    for f in dr.DropParams._fields
+                }
+            )
+        state = EngineState(
+            dstore=get_store("dstore"),
+            jstore=jstore,
+            drop=dr.DropState(
+                det=det,
+                flt=flt,
+                det_overflow=jnp.asarray(arrays["drop/det_overflow"]),
+                max_iter=jnp.asarray(arrays["drop/max_iter"]),
+                params=params,
+            ),
+            init=jnp.asarray(arrays["init"]),
+            cur=jnp.asarray(arrays["cur"]),
+            repair_counts=jnp.asarray(arrays["repair_counts"]),
+            active=jnp.asarray(arrays["active"]),
+            join_mat=jnp.asarray(arrays["join_mat"]) if "join_mat" in arrays else None,
+        )
+        if self.num_shards > 1:
+            from repro.runtime import elastic
+
+            state = elastic.reshard(state, _state_pspecs(state), self.mesh)
+        self.state = state
+        self._free_slots = [int(s) for s in meta["free_slots"]]
+        self.det_overflow_shed = int(meta["det_overflow_shed"])
+        self._sched_total = int(meta["sched_total"])
+        width = int(meta.get("ell_width", 0))
+        if self.cfg.backend == "ell" and width > self._ell_width:
+            # the saved run had grown its bucketed-ELL width; match it so the
+            # replayed suffix hits the same compiled shapes
+            self._ell_width = width
+            self.g = self._device_graph(self.graph.snapshot())
+        self.last_stats = None
+
     # ------------------------------------------------------------------- api
     def answers(self) -> np.ndarray:
         return np.asarray(answers(self.cfg, self.state))

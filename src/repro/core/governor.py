@@ -346,6 +346,71 @@ class MemoryGovernor:
             op=op,
         )
 
+    # ------------------------------------------------------------ durability
+    def state_dict(self) -> dict:
+        """JSON-able full state: ladder rungs, restore-point policies,
+        overflow guard, hysteresis counters, action log, telemetry EWMAs."""
+
+        def cfg_dict(cfg: dr.DropConfig | None) -> dict | None:
+            return None if cfg is None else dataclasses.asdict(cfg)
+
+        return {
+            "budget_bytes": self.budget_bytes,
+            "cfg": dataclasses.asdict(self.cfg),
+            "levels": [
+                {"qid": q, "op": op, "level": lvl}
+                for (q, op), lvl in self._levels.items()
+            ],
+            "base": [
+                {"qid": q, "op": op, "cfg": cfg_dict(cfg)}
+                for (q, op), cfg in self._base.items()
+            ],
+            "overflow_blocked": [list(k) for k in self._overflow_blocked],
+            "last_escalated": (
+                None if self._last_escalated is None else list(self._last_escalated)
+            ),
+            "overflow_mark": self._overflow_mark,
+            "reclaimed": [
+                {"qid": q, "op": op, "bytes": b}
+                for (q, op), b in self._reclaimed.items()
+            ],
+            "calm_passes": self._calm_passes,
+            "passes": self.passes,
+            "actions": [a.to_dict() for a in self.actions],
+            "telemetry": self.telemetry.state_dict(),
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.budget_bytes = int(state["budget_bytes"])
+        cfg = dict(state["cfg"])
+        cfg["ladder_p"] = tuple(cfg["ladder_p"])
+        self.cfg = GovernorConfig(**cfg)
+        self._levels = {
+            (int(e["qid"]), e["op"]): int(e["level"]) for e in state["levels"]
+        }
+        self._base = {
+            (int(e["qid"]), e["op"]): (
+                None if e["cfg"] is None else dr.DropConfig(**e["cfg"])
+            )
+            for e in state["base"]
+        }
+        self._overflow_blocked = {
+            (int(q), op) for q, op in state["overflow_blocked"]
+        }
+        self._last_escalated = (
+            None
+            if state["last_escalated"] is None
+            else (int(state["last_escalated"][0]), state["last_escalated"][1])
+        )
+        self._overflow_mark = int(state["overflow_mark"])
+        self._reclaimed = {
+            (int(e["qid"]), e["op"]): int(e["bytes"]) for e in state["reclaimed"]
+        }
+        self._calm_passes = int(state["calm_passes"])
+        self.passes = int(state["passes"])
+        self.actions = [GovernorAction(**a) for a in state["actions"]]
+        self.telemetry.load_state(state["telemetry"])
+
     # ------------------------------------------------------------------ api
     def headroom(self, session) -> int:
         return self.budget_bytes - session.nbytes()

@@ -120,6 +120,50 @@ class DynamicGraph:
             self.in_degree[v] += 1
             self._slot[(u, v, lbl)] = i
 
+    # ------------------------------------------------------------ durability
+    def state_dict(self) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, meta) capturing the full mutable state.
+
+        The free list is saved as an *ordered* array: slot recycling order
+        decides which slot a replayed insert lands in, so replay determinism
+        requires restoring it exactly — not recomputing it from ``valid``.
+        """
+        arrays = {
+            "src": self.src.copy(),
+            "dst": self.dst.copy(),
+            "weight": self.weight.copy(),
+            "label": self.label.copy(),
+            "valid": self.valid.copy(),
+            "out_degree": self.out_degree.copy(),
+            "in_degree": self.in_degree.copy(),
+            "free": np.asarray(self._free, dtype=np.int64),
+        }
+        meta = {
+            "num_vertices": self.num_vertices,
+            "weighted": self.weighted,
+            "version": self.version,
+        }
+        return arrays, meta
+
+    @classmethod
+    def from_state(cls, meta: dict, arrays: dict) -> "DynamicGraph":
+        g = cls(
+            int(meta["num_vertices"]),
+            [],
+            capacity=int(arrays["src"].shape[0]),
+            weighted=bool(meta["weighted"]),
+        )
+        for name in ("src", "dst", "weight", "label", "valid",
+                     "out_degree", "in_degree"):
+            getattr(g, name)[:] = arrays[name]
+        g._free = [int(x) for x in arrays["free"]]
+        g._slot = {
+            (int(g.src[i]), int(g.dst[i]), int(g.label[i])): int(i)
+            for i in np.nonzero(g.valid)[0]
+        }
+        g.version = int(meta["version"])
+        return g
+
     # ------------------------------------------------------------------ api
     @property
     def num_edges(self) -> int:

@@ -205,3 +205,39 @@ class ScratchEngine:
 
     def nbytes(self) -> int:
         return 0  # no differences maintained
+
+    # ------------------------------------------------------------ durability
+    def export_state(self) -> tuple[dict[str, np.ndarray], dict]:
+        """SCRATCH holds no differences: the checkpoint is just the plan
+        rows plus the work counters the governor reads.  Answers are
+        re-derived from the restored graph at import time."""
+        meta = {
+            "num_slots": int(self._num_slots),
+            "free_slots": [int(s) for s in self._free],
+            "plans": {str(s): p.to_json() for s, p in self.plans.items()},
+            "last_iters": (
+                None if self.last_stats is None else int(self.last_stats.iters_run)
+            ),
+            "last_scheduled": (
+                None if self.last_stats is None else int(self.last_stats.scheduled)
+            ),
+        }
+        return {}, meta
+
+    def import_state(self, arrays: dict, meta: dict) -> None:
+        del arrays
+        self.plans = {
+            int(s): qp.QueryPlan.from_json(p) for s, p in meta["plans"].items()
+        }
+        self._num_slots = int(meta["num_slots"])
+        self._free = [int(s) for s in meta["free_slots"]]
+        self._rows = {
+            s: p.build_init(self.cfg.num_vertices) for s, p in self.plans.items()
+        }
+        self._rerun()
+        if meta["last_iters"] is not None:
+            # the pre-crash run's counters, not the import rerun's, so the
+            # governor's recompute signal continues where it left off
+            self.last_stats = ScratchStats(
+                jnp.int32(meta["last_iters"]), jnp.int32(meta["last_scheduled"])
+            )

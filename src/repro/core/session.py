@@ -41,6 +41,7 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.checkpoint import store as ckpt_store
 from repro.core import dropping as dr
 from repro.core import plan as qp
 from repro.core.engine import DiffIFE, EngineConfig, MaintainStats
@@ -50,6 +51,9 @@ from repro.core.scratch import ScratchEngine
 from repro.core.sparse_engine import SparseDiffIFE
 
 ENGINES = ("dense", "host", "scratch")
+
+# session checkpoint manifest-meta layout version
+CHECKPOINT_FORMAT = 1
 
 
 # --------------------------------------------------------------------------- protocol
@@ -318,11 +322,14 @@ class CQPSession:
         self._product_capacity = product_capacity
         self._impl: EngineProtocol | None = None
         self._family: tuple | None = None
+        self._family_plan: qp.QueryPlan | None = None  # fixed the sweep shape
         self._nfa: qp.NFA | None = None
         self._egraph: DynamicGraph = graph  # product graph under an NFA family
         self._handles: dict[int, int] = {}  # qid → engine slot
         self._plans: dict[int, qp.QueryPlan] = {}
         self._next_qid = 0
+        self._runtime: dict = {}  # serving-runtime observers (stats()["runtime"])
+        self.restore_info: dict | None = None  # set by CQPSession.restore
         # lifetime counters (stats())
         self.registered_total = 0
         self.deregistered_total = 0
@@ -433,6 +440,7 @@ class CQPSession:
     # ------------------------------------------------------- engine build
     def _build_engine(self, plans: list[qp.QueryPlan]) -> None:
         first_plan = plans[0]
+        self._family_plan = first_plan
         if self._drop_spec is None:
             # representation inferred from the first drop-enabled plan of the
             # initial batch; later plans may use any selection params under
@@ -748,6 +756,19 @@ class CQPSession:
             out["last_maintain"] = {
                 k: int(v) for k, v in zip(ls._fields, ls)
             }
+        if self._runtime:
+            rt: dict = {}
+            det = self._runtime.get("straggler")
+            if det is not None:
+                rt["straggler"] = {
+                    "observed": det.seen,
+                    "ewma_s": det.ewma,
+                    "events": [dataclasses.asdict(e) for e in det.events],
+                }
+            sup = self._runtime.get("supervisor")
+            if sup is not None:
+                rt["fault"] = sup.metrics()
+            out["runtime"] = rt
         return out
 
     @property
@@ -760,3 +781,207 @@ class CQPSession:
         if isinstance(self._impl, DenseEngine):
             return self._impl.impl.nbytes_per_device()
         return [self.nbytes()]
+
+    # ------------------------------------------------------------ durability
+    def attach_runtime(self, *, straggler=None, supervisor=None) -> None:
+        """Register serving-runtime observers; they surface in
+        ``stats()["runtime"]`` (straggler events / recovery metrics)."""
+        if straggler is not None:
+            self._runtime["straggler"] = straggler
+        if supervisor is not None:
+            self._runtime["supervisor"] = supervisor
+
+    def state_dict(self, *, extra: dict | None = None) -> tuple[dict, dict]:
+        """(arrays, meta): everything needed to rebuild this session.
+
+        Arrays carry the graph(s) and the engine's difference trace; meta
+        (JSON-able, rides in the checkpoint manifest) carries plans, handle
+        table, qid cursor, counters, drop/governor state, and ``extra`` (the
+        caller's update-log cursor).  What is NOT saved is recomputed
+        deterministically at restore: host adjacency dicts, init rows, the
+        mesh-dependent shard/cell layout, compiled dispatch.
+        """
+        arrays: dict[str, np.ndarray] = {}
+        g_arrays, g_meta = self.graph.state_dict()
+        arrays.update({f"graph/{k}": v for k, v in g_arrays.items()})
+        c = {
+            "registered_total": self.registered_total,
+            "deregistered_total": self.deregistered_total,
+            "updates_applied": self.updates_applied,
+            "bytes_freed_total": self.bytes_freed_total,
+            "bytes_shed_total": self.bytes_shed_total,
+        }
+        meta: dict = {
+            "format": CHECKPOINT_FORMAT,
+            "engine": self.engine_kind,
+            "kw": dict(self._kw),
+            "drop_spec": (
+                None
+                if self._drop_spec is None
+                else dataclasses.asdict(self._drop_spec)
+            ),
+            "product_capacity": self._product_capacity,
+            "graph": g_meta,
+            "egraph": None,
+            "family_plan": None,
+            "plans": {str(q): p.to_json() for q, p in self._plans.items()},
+            "handles": {str(q): int(s) for q, s in self._handles.items()},
+            "next_qid": self._next_qid,
+            "counters": c,
+            "engine_state": self._impl is not None,
+            "engine_meta": None,
+            "governor": None,
+            "user": extra,
+        }
+        if self._impl is not None:
+            meta["family_plan"] = self._family_plan.to_json()
+            if self._nfa is not None:
+                e_arrays, e_meta = self._egraph.state_dict()
+                arrays.update({f"egraph/{k}": v for k, v in e_arrays.items()})
+                meta["egraph"] = e_meta
+            impl = (
+                self._impl.impl
+                if isinstance(self._impl, DenseEngine)
+                else self._impl
+            )
+            en_arrays, en_meta = impl.export_state()
+            if isinstance(self._impl, DenseEngine):
+                en_meta["mode"] = impl.cfg.mode
+            arrays.update({f"engine/{k}": v for k, v in en_arrays.items()})
+            meta["engine_meta"] = en_meta
+        if self._governor is not None:
+            meta["governor"] = self._governor.state_dict()
+        return arrays, meta
+
+    def checkpoint(
+        self, directory: str, *, step: int | None = None,
+        extra: dict | None = None,
+    ) -> str:
+        """Synchronous atomic snapshot into ``directory``; returns the step
+        dir.  ``step`` defaults to the cumulative ingested-update count; pass
+        ``extra`` for the serving loop's log cursor.  (The recovery
+        supervisor drives the async keep-N path via
+        :class:`~repro.checkpoint.CheckpointManager` instead.)"""
+        arrays, meta = self.state_dict(extra=extra)
+        step = self.updates_applied if step is None else int(step)
+        return ckpt_store.save_checkpoint(directory, step, arrays, meta=meta)
+
+    @classmethod
+    def restore(
+        cls, directory: str, *, step: int | None = None, mesh=None,
+    ) -> "CQPSession":
+        """Rebuild a session from the latest (or ``step``'s) checkpoint.
+
+        ``mesh`` is the *current* mesh — restore reshards the engine carries
+        onto it (``runtime/elastic.reshard``), so a checkpoint taken at 8
+        shards restores at 1 or 4.  Replaying the same update-log suffix then
+        yields answers bit-identical to an uninterrupted run (min-family
+        semirings; see DESIGN.md §12).  ``session.restore_info`` carries the
+        restored step and the saver's ``extra`` cursor.
+        """
+        arrays, manifest, step = ckpt_store.load_checkpoint(directory, step)
+        meta = manifest.get("meta")
+        if meta is None:
+            raise ValueError(
+                f"checkpoint in {directory} carries no session meta — was it "
+                "written by CQPSession.checkpoint / the recovery supervisor?"
+            )
+        if int(meta.get("format", 0)) != CHECKPOINT_FORMAT:
+            raise ValueError(
+                f"unsupported session checkpoint format {meta.get('format')!r}"
+            )
+
+        def sub(prefix: str) -> dict:
+            return {
+                k[len(prefix):]: v
+                for k, v in arrays.items()
+                if k.startswith(prefix)
+            }
+
+        graph = DynamicGraph.from_state(meta["graph"], sub("graph/"))
+        drop = (
+            None
+            if meta["drop_spec"] is None
+            else dr.DropConfig(**meta["drop_spec"])
+        )
+        gov = meta["governor"]
+        gcfg = None
+        if gov is not None:
+            cfg_d = dict(gov["cfg"])
+            cfg_d["ladder_p"] = tuple(cfg_d["ladder_p"])
+            gcfg = GovernorConfig(**cfg_d)
+        sess = cls(
+            graph,
+            engine=meta["engine"],
+            mesh=mesh,
+            drop=drop,
+            product_capacity=meta["product_capacity"],
+            budget_bytes=None if gov is None else int(gov["budget_bytes"]),
+            governor=gcfg,
+            **meta["kw"],
+        )
+        sess._plans = {
+            int(q): qp.QueryPlan.from_json(p) for q, p in meta["plans"].items()
+        }
+        sess._handles = {int(q): int(s) for q, s in meta["handles"].items()}
+        sess._next_qid = int(meta["next_qid"])
+        for name, val in meta["counters"].items():
+            setattr(sess, name, int(val))
+        if meta["engine_state"]:
+            first = qp.QueryPlan.from_json(meta["family_plan"])
+            sess._family_plan = first
+            sess._family = first.family_key()
+            sess._nfa = first.nfa
+            if meta["egraph"] is not None:
+                sess._egraph = DynamicGraph.from_state(
+                    meta["egraph"], sub("egraph/")
+                )
+            else:
+                sess._egraph = graph
+            em = meta["engine_meta"]
+            en_arrays = sub("engine/")
+            if sess.engine_kind == "dense":
+                if sess._drop_spec is None:
+                    sess._drop_spec = first.drop
+                kw = dict(sess._kw)
+                # the saved pool size is itself a power of two, so min_slots
+                # = slot_capacity reconstructs the exact q_cap (and with it
+                # the saved free list's meaning); an all-inactive pool skips
+                # the constructor sweep, so import lands on untouched state
+                kw["min_slots"] = int(em["slot_capacity"])
+                kw["mode"] = em["mode"]
+                eng = DenseEngine(
+                    sess._egraph,
+                    first,
+                    drop_spec=sess._drop_spec,
+                    mesh=mesh,
+                    **kw,
+                )
+                eng.impl.import_state(en_arrays, em)
+                sess._impl = eng
+            elif sess.engine_kind == "host":
+                imp = SparseDiffIFE(
+                    sess._egraph, max_iters=int(first.max_iters)
+                )
+                imp.import_state(en_arrays, em)
+                sess._impl = imp
+            else:
+                cfg = engine_config_for(
+                    first,
+                    num_queries=1,
+                    num_vertices=sess._egraph.num_vertices,
+                    backend=sess._kw["backend"],
+                    ell_block_v=sess._kw["ell_block_v"],
+                    interpret=sess._kw["interpret"],
+                )
+                imp = ScratchEngine(cfg, sess._egraph)
+                imp.import_state(en_arrays, em)
+                sess._impl = imp
+        elif sess._plans:
+            # a session checkpointed before its first engine build: plans
+            # exist only if an engine did, so this indicates a corrupt meta
+            raise ValueError("checkpoint has live plans but no engine state")
+        if gov is not None:
+            sess._governor.load_state(gov)
+        sess.restore_info = {"step": step, "extra": meta.get("user")}
+        return sess

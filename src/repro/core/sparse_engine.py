@@ -26,6 +26,7 @@ label propagation) — the query classes the paper's scalability study runs.
 
 from __future__ import annotations
 
+import dataclasses
 from collections import defaultdict
 from typing import Sequence
 
@@ -346,3 +347,89 @@ class SparseDiffIFE:
         return sum(
             len(p) for q in self.plans for p in self.diffs[q].values()
         )
+
+    # ------------------------------------------------------------ durability
+    def export_state(self) -> tuple[dict[str, np.ndarray], dict]:
+        """(arrays, meta) snapshot: change points flattened to parallel
+        arrays, plans/policies/work counters as JSON-able meta.  Adjacency is
+        NOT saved — it is rebuilt from the restored :class:`DynamicGraph`."""
+        slots: list[int] = []
+        vtxs: list[int] = []
+        its: list[int] = []
+        vals: list[float] = []
+        for s in sorted(self.diffs):
+            for v in sorted(self.diffs[s]):
+                for (i, val) in self.diffs[s][v]:
+                    slots.append(s)
+                    vtxs.append(v)
+                    its.append(i)
+                    vals.append(val)
+        arrays = {
+            "diff_slot": np.asarray(slots, np.int64),
+            "diff_vtx": np.asarray(vtxs, np.int64),
+            "diff_iter": np.asarray(its, np.int64),
+            "diff_val": np.asarray(vals, np.float64),
+        }
+        for s, row in self._scratch_rows.items():
+            arrays[f"scratch_row/{s}"] = np.asarray(row, np.float32)
+        drop_cfg = []
+        for key, cfg in self._drop_cfg.items():
+            slot, op = (key if isinstance(key, tuple) else (key, None))
+            drop_cfg.append({
+                "slot": int(slot),
+                "op": op,
+                "cfg": None if cfg is None else dataclasses.asdict(cfg),
+            })
+        meta = {
+            "num_slots": int(self._num_slots),
+            "free_slots": [int(s) for s in self._free],
+            "max_iters": int(self.max_iters),
+            "work": int(self.work),
+            "work_per_slot": {str(s): int(w) for s, w in self.work_per_slot.items()},
+            "plans": {str(s): p.to_json() for s, p in self.plans.items()},
+            "drop_cfg": drop_cfg,
+            "sources": [int(s) for s in self.sources],
+        }
+        return arrays, meta
+
+    def import_state(self, arrays: dict, meta: dict) -> None:
+        """Load a snapshot produced by :meth:`export_state`.  The engine
+        must have been constructed on the restored graph (adjacency dicts
+        come from the constructor); init rows rebuild deterministically from
+        each plan."""
+        self.plans = {
+            int(s): qp.QueryPlan.from_json(p) for s, p in meta["plans"].items()
+        }
+        self._num_slots = int(meta["num_slots"])
+        self._free = [int(s) for s in meta["free_slots"]]
+        self.max_iters = int(meta["max_iters"])
+        self.work = int(meta["work"])
+        self.work_per_slot = {
+            int(s): int(w) for s, w in meta["work_per_slot"].items()
+        }
+        self.sources = [int(s) for s in meta.get("sources", [])]
+        self.diffs = {s: defaultdict(list) for s in self.plans}
+        for s, v, i, val in zip(
+            arrays["diff_slot"], arrays["diff_vtx"],
+            arrays["diff_iter"], arrays["diff_val"],
+        ):
+            # saved in per-(slot, vertex) list order, so the sorted-by-
+            # iteration change-point invariant is preserved verbatim
+            self.diffs[int(s)][int(v)].append((int(i), float(val)))
+        self._init_rows = {
+            s: p.build_init(self.graph.num_vertices) for s, p in self.plans.items()
+        }
+        self._scratch_rows = {
+            int(k.split("/", 1)[1]): np.asarray(arrays[k], np.float32)
+            for k in arrays
+            if k.startswith("scratch_row/")
+        }
+        self._drop_cfg = {}
+        for entry in meta["drop_cfg"]:
+            key = (
+                (int(entry["slot"]), entry["op"])
+                if entry["op"] is not None
+                else int(entry["slot"])
+            )
+            cfg = entry["cfg"]
+            self._drop_cfg[key] = None if cfg is None else dr.DropConfig(**cfg)

@@ -119,6 +119,48 @@ class RecomputeTelemetry:
         sig = self._per_query.get(qid)
         return 0 if sig is None else sig.nbytes
 
+    # ------------------------------------------------------------ durability
+    def state_dict(self) -> dict:
+        """JSON-able full state (EWMAs as exact float reprs via JSON doubles)."""
+        return {
+            "alpha": self.alpha,
+            "updates_seen": self._updates_seen,
+            "global": dict(self._global),
+            "det_overflow_total": self.det_overflow_total,
+            "observations": self.observations,
+            "per_query": [
+                {
+                    "key": list(k) if isinstance(k, tuple) else k,
+                    "cost_total": sig.cost_total,
+                    "cost_rate": sig.cost_rate,
+                    "nbytes": sig.nbytes,
+                }
+                for k, sig in self._per_query.items()
+            ],
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.alpha = float(state["alpha"])
+        self._updates_seen = int(state["updates_seen"])
+        self._global = {k: float(v) for k, v in state["global"].items()}
+        self.det_overflow_total = int(state["det_overflow_total"])
+        self.observations = int(state["observations"])
+        self._per_query = {}
+        for entry in state["per_query"]:
+            k = entry["key"]
+            key = tuple(k) if isinstance(k, list) else k
+            self._per_query[key] = _QuerySignals(
+                cost_total=int(entry["cost_total"]),
+                cost_rate=(
+                    None if entry["cost_rate"] is None else float(entry["cost_rate"])
+                ),
+                nbytes=int(entry["nbytes"]),
+            )
+        # the stats object identity from the saved process is meaningless
+        # here; None means the next observe() folds its stats exactly once —
+        # the same thing the uninterrupted run would have done next
+        self._last_stats_id = None
+
     def snapshot(self) -> dict:
         """JSON-friendly view for serving telemetry."""
 

@@ -43,6 +43,10 @@ Examples::
         --budget-bytes 4096 --governor prob
     XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
         python -m repro.launch.cqp_serve --smoke --mesh data
+    # durability drill: checkpoint every 2 chunks, inject a fault before
+    # chunk 3, restore + replay — answers match the uninterrupted run
+    PYTHONPATH=src python -m repro.launch.cqp_serve --smoke --json \
+        --checkpoint-dir /tmp/cqp_ckpt --checkpoint-every 2 --inject-fault-at 3
 """
 
 from __future__ import annotations
@@ -129,9 +133,9 @@ def churn_plan(args, seq: int):
     return plan.pagerank(iters=min(10, args.max_iters))
 
 
-def build_session(args):
-    from repro.core.graph import DynamicGraph
-    from repro.core.session import CQPSession
+def build_log(args):
+    """The run's deterministic workload, fully derived from the args/seed —
+    a restore rebuilds the identical log and replays its suffix."""
     from repro.data.graphgen import powerlaw_graph, split_90_10, update_stream
 
     edges = powerlaw_graph(args.v, args.e, seed=args.seed)
@@ -146,6 +150,14 @@ def build_session(args):
         seed=args.seed + 1,
     )
     log = [u for batch in stream for u in batch]
+    return edges, initial, log
+
+
+def build_session(args):
+    from repro.core.graph import DynamicGraph
+    from repro.core.session import CQPSession
+
+    edges, initial, log = build_log(args)
     graph = DynamicGraph(args.v, initial, capacity=len(edges) * 4 + 64)
     mesh = make_mesh(args.mesh, args.shards)
     if mesh is not None and args.engine != "dense":
@@ -176,13 +188,34 @@ def build_session(args):
 
 def serve(args) -> dict:
     t0 = time.perf_counter()
-    session, handles, log = build_session(args)
+    restore_latency = None
+    start_chunk = 0
+    if args.restore:
+        from repro.core.session import CQPSession
+
+        mesh = make_mesh(args.mesh, args.shards)
+        if mesh is not None and args.engine != "dense":
+            raise SystemExit("--mesh shards the dense engine only")
+        session = CQPSession.restore(args.checkpoint_dir, mesh=mesh)
+        initial_plans(args)  # normalize args.queries (plan files / pagerank)
+        handles = session.handles()
+        extra = (session.restore_info or {}).get("extra") or {}
+        start_chunk = int(extra.get("next_chunk", 0))
+        _, _, log = build_log(args)
+        restore_latency = time.perf_counter() - t0
+    else:
+        session, handles, log = build_session(args)
     t_init = time.perf_counter() - t0
 
     b = args.batch
     chunks = [log[i : i + b] for i in range(0, len(log), b)]
     if not chunks:
         raise SystemExit("empty update log — raise --updates")
+    if start_chunk > len(chunks):
+        raise SystemExit(
+            f"checkpoint cursor {start_chunk} past the {len(chunks)}-chunk "
+            "log — restore with the args the checkpointed run used"
+        )
     # repeated flags at the same chunk index fire that many events
     register_at = Counter(args.register_at or [])
     deregister_at = Counter(args.deregister_at or [])
@@ -193,71 +226,134 @@ def serve(args) -> dict:
                 f"1..{len(chunks) - 1} ({len(chunks)} chunks)"
             )
 
-    # warmup chunk: traces + compiles the batched step (reported separately)
-    t0 = time.perf_counter()
-    session.apply_updates_batched(chunks[0], batch_size=b)
-    t_compile = time.perf_counter() - t0
+    def dev_peak(s):
+        # unsharded, per-device == total: don't pay a second per-chunk fetch
+        return max(s.nbytes_per_device()) if s.num_shards > 1 else s.nbytes()
 
-    # unsharded, per-device == total: don't pay a second per-chunk fetch
-    dev_peak = (
-        (lambda: max(session.nbytes_per_device()))
-        if session.num_shards > 1
-        else session.nbytes
-    )
-    lat_s: list[float] = []
-    reg_ms: list[float] = []
-    dereg_ms: list[float] = []
-    bytes_freed = 0
-    peak_bytes = session.nbytes()
-    peak_dev_bytes = dev_peak()
-    served = len(chunks[0])
-    churn_seq = 0
-    t_churn = 0.0
     # governor settling window: the first SETTLE post-warmup chunks may run
     # over budget while policies escalate; the peak after it must respect it
     settle = 2
-    settled_peak = 0
-    settled_samples = 0
-    t_serve0 = time.perf_counter()
-    for k, chunk in enumerate(chunks[1:], start=1):
-        for _ in range(register_at.get(k, 0)):
+    # mutable run metrics, shared with the per-chunk closure: a fault
+    # restart swaps the session object, so nothing below closes over it
+    M = {
+        "handles": handles,
+        "lat": [],
+        "reg_ms": [],
+        "dereg_ms": [],
+        "bytes_freed": 0,
+        "served": 0,
+        "warmup_served": 0,
+        "peak": session.nbytes(),
+        "peak_dev": dev_peak(session),
+        "t_compile": 0.0,
+        "t_serve": 0.0,
+        # replay determinism: a restored session derives the next churn
+        # source from how many churn registers already happened
+        "churn_seq": max(session.registered_total - args.queries, 0),
+        "settled_peak": 0,
+        "settled_samples": 0,
+    }
+
+    def run_chunk(s, k, chunk):
+        if k == 0 and M["t_compile"] == 0.0:
+            # warmup chunk: traces + compiles the batched step (reported
+            # separately; churn indices are validated mid-stream only)
             t0 = time.perf_counter()
-            handles.append(session.register(churn_plan(args, churn_seq)))
-            dt = time.perf_counter() - t0
-            reg_ms.append(dt * 1e3)
-            t_churn += dt
-            churn_seq += 1
-        for _ in range(deregister_at.get(k, 0)):
-            if not handles:
-                break
+            s.apply_updates_batched(chunk, batch_size=b)
+            M["t_compile"] = time.perf_counter() - t0
+            M["served"] += len(chunk)
+            M["warmup_served"] = len(chunk)
+        else:
+            for _ in range(register_at.get(k, 0)):
+                t0 = time.perf_counter()
+                M["handles"].append(s.register(churn_plan(args, M["churn_seq"])))
+                M["reg_ms"].append((time.perf_counter() - t0) * 1e3)
+                M["churn_seq"] += 1
+            for _ in range(deregister_at.get(k, 0)):
+                if not M["handles"]:
+                    break
+                t0 = time.perf_counter()
+                M["bytes_freed"] += s.deregister(M["handles"].pop(0))
+                M["dereg_ms"].append((time.perf_counter() - t0) * 1e3)
             t0 = time.perf_counter()
-            bytes_freed += session.deregister(handles.pop(0))
+            s.apply_updates_batched(chunk, batch_size=b)
             dt = time.perf_counter() - t0
-            dereg_ms.append(dt * 1e3)
-            t_churn += dt
-        t0 = time.perf_counter()
-        session.apply_updates_batched(chunk, batch_size=b)
-        lat_s.append(time.perf_counter() - t0)
-        served += len(chunk)
-        peak_bytes = max(peak_bytes, session.nbytes())
-        peak_dev_bytes = max(peak_dev_bytes, dev_peak())
+            M["lat"].append(dt)
+            M["t_serve"] += dt
+            M["served"] += len(chunk)
+        M["peak"] = max(M["peak"], s.nbytes())
+        M["peak_dev"] = max(M["peak_dev"], dev_peak(s))
         if k > settle:
-            settled_peak = max(settled_peak, session.nbytes())
-            settled_samples += 1
-    if settled_samples == 0:
+            M["settled_peak"] = max(M["settled_peak"], s.nbytes())
+            M["settled_samples"] += 1
+
+    sup = det = None
+    if args.checkpoint_dir is not None:
+        from repro.core.session import CQPSession
+        from repro.runtime.fault import FaultPolicy, InjectedFault
+        from repro.runtime.recovery import RecoverySupervisor
+        from repro.runtime.straggler import StragglerDetector
+
+        det = StragglerDetector()
+        fired: set[int] = set()
+        inject_at = set(args.inject_fault_at or [])
+
+        def injector(k: int) -> None:
+            if k in inject_at and k not in fired:
+                fired.add(k)  # one-shot: the drill must recover, not loop
+                raise InjectedFault(f"injected fault before chunk {k}")
+
+        def restore_fn(directory):
+            if directory is None:
+                # no checkpoint landed before the fault: genesis replay
+                s, M["handles"], _ = build_session(args)
+                start = 0
+            else:
+                s = CQPSession.restore(
+                    directory, mesh=make_mesh(args.mesh, args.shards)
+                )
+                M["handles"] = s.handles()
+                extra = (s.restore_info or {}).get("extra") or {}
+                start = int(extra.get("next_chunk", 0))
+            M["churn_seq"] = max(s.registered_total - args.queries, 0)
+            s.attach_runtime(straggler=det, supervisor=sup)
+            return s, start
+
+        sup = RecoverySupervisor(
+            args.checkpoint_dir,
+            FaultPolicy(
+                max_restarts=args.max_restarts,
+                checkpoint_every=args.checkpoint_every,
+                backoff_s=args.backoff_s,
+            ),
+            keep=args.checkpoint_keep,
+            restore_fn=restore_fn,
+            fault_injector=injector,
+            straggler=det,
+        )
+        session.attach_runtime(straggler=det, supervisor=sup)
+        session = sup.run(session, chunks, run_chunk, start_chunk=start_chunk)
+    else:
+        for k in range(start_chunk, len(chunks)):
+            run_chunk(session, k, chunks[k])
+
+    if M["settled_samples"] == 0:
         # stream shorter than the settling window: judge the final state
         # rather than vacuously reporting a respected budget
-        settled_peak = session.nbytes()
-    t_serve = time.perf_counter() - t_serve0 - t_churn
+        M["settled_peak"] = session.nbytes()
 
-    steady = bool(lat_s)
+    steady = bool(M["lat"])
     if not steady:
         # single-chunk log: the only measurement includes trace+compile
         print(
             "warning: update log fits one chunk — latencies include compile; "
             "raise --updates past --batch for steady-state numbers"
         )
-    lat = np.asarray(lat_s if steady else [t_compile])
+    lat = np.asarray(M["lat"] if steady else [M["t_compile"]])
+    served = M["served"]
+    reg_ms, dereg_ms = M["reg_ms"], M["dereg_ms"]
+    bytes_freed = M["bytes_freed"]
+    t_compile = M["t_compile"]
     out = {
         "engine": args.engine,
         "queries": args.queries,
@@ -266,14 +362,16 @@ def serve(args) -> dict:
         "backend": args.backend,
         "updates_served": served,
         "updates_per_sec": (
-            (served - len(chunks[0])) / t_serve if steady else served / t_compile
+            (served - M["warmup_served"]) / max(M["t_serve"], 1e-9)
+            if steady
+            else served / max(t_compile, 1e-9)
         ),
         "p50_ms": float(np.percentile(lat, 50) * 1e3),
         "p99_ms": float(np.percentile(lat, 99) * 1e3),
         "steady_state": steady,
-        "peak_diff_bytes": int(peak_bytes),
+        "peak_diff_bytes": int(M["peak"]),
         "shards": session.num_shards,
-        "peak_diff_bytes_per_device": int(peak_dev_bytes),
+        "peak_diff_bytes_per_device": int(M["peak_dev"]),
         "registers": len(reg_ms),
         "deregisters": len(dereg_ms),
         "register_ms": [float(x) for x in reg_ms],
@@ -287,13 +385,24 @@ def serve(args) -> dict:
         "init_s": t_init,
         "compile_s": t_compile,
     }
+    if sup is not None:
+        rec = sup.metrics()
+        rec["checkpoint_dir"] = args.checkpoint_dir
+        rec["checkpoint_every"] = args.checkpoint_every
+        rec["live_nbytes"] = int(session.nbytes())
+        rec["restore_latency_s"] = restore_latency
+        rec["straggler_events"] = len(det.events)
+        out["recovery"] = rec
+        runtime = session.stats().get("runtime")
+        if runtime is not None:
+            out["runtime"] = runtime
     if session.governor is not None:
         gov = session.governor
         out["governor"] = {
             **gov.snapshot(session),
             "representation": gov.cfg.representation,
-            "settled_peak_bytes": int(settled_peak),
-            "budget_respected": bool(settled_peak <= gov.budget_bytes),
+            "settled_peak_bytes": int(M["settled_peak"]),
+            "budget_respected": bool(M["settled_peak"] <= gov.budget_bytes),
         }
     print(
         f"cqp_serve[{args.query}/{args.engine}/{args.backend}] "
@@ -326,6 +435,16 @@ def serve(args) -> dict:
             f"({'respected' if g['budget_respected'] else 'VIOLATED'}; "
             f"{g['escalations']} escalation(s), "
             f"{g['deescalations']} de-escalation(s))"
+        )
+    if "recovery" in out:
+        r = out["recovery"]
+        ckpt_s = sum(r["checkpoint_s"])
+        print(
+            f"  recovery: {r['checkpoints']} checkpoint(s) "
+            f"({ckpt_s * 1e3:.1f} ms total, {r['checkpoint_bytes']} bytes "
+            f"vs {r['live_nbytes']} live), {r['restarts']} restart(s), "
+            f"{r['replayed_chunks']} chunk(s) replayed, "
+            f"{r['straggler_events']} straggler event(s)"
         )
     if args.json:
         print(json.dumps(out))
@@ -417,10 +536,59 @@ def main() -> None:
         help="emulate N host devices (sets XLA_FLAGS before jax init; "
         "equivalent to XLA_FLAGS=--xla_force_host_platform_device_count=N)",
     )
+    ap.add_argument(
+        "--checkpoint-dir",
+        default=None,
+        metavar="DIR",
+        help="enable durability: periodic session checkpoints into DIR via "
+        "the async keep-N CheckpointManager (DESIGN.md §12)",
+    )
+    ap.add_argument(
+        "--checkpoint-every",
+        type=int,
+        default=4,
+        metavar="CHUNKS",
+        help="checkpoint every K streamed chunks (0 disables the periodic "
+        "snapshots while keeping the recovery supervisor active)",
+    )
+    ap.add_argument(
+        "--checkpoint-keep", type=int, default=3,
+        help="checkpoints retained on disk (older ones are GCed)",
+    )
+    ap.add_argument(
+        "--restore",
+        action="store_true",
+        help="restore the latest checkpoint from --checkpoint-dir and "
+        "resume at its saved log cursor (the CLI args must match the "
+        "checkpointed run so the rebuilt log is identical)",
+    )
+    ap.add_argument(
+        "--inject-fault-at",
+        type=int,
+        action="append",
+        default=None,
+        metavar="CHUNK",
+        help="recovery drill: raise InjectedFault before chunk CHUNK "
+        "(one-shot, repeatable); the supervisor restores the latest "
+        "checkpoint and replays the log suffix",
+    )
+    ap.add_argument(
+        "--max-restarts", type=int, default=5,
+        help="restarts tolerated before the fault is re-raised",
+    )
+    ap.add_argument(
+        "--backoff-s", type=float, default=0.0,
+        help="delay before each restart",
+    )
     ap.add_argument("--json", action="store_true", help="emit a JSON result line")
     args = ap.parse_args()
     if args.batch < 1:
         ap.error("--batch must be >= 1")
+    if args.restore and args.checkpoint_dir is None:
+        ap.error("--restore needs --checkpoint-dir")
+    if args.inject_fault_at and args.checkpoint_dir is None:
+        ap.error("--inject-fault-at needs --checkpoint-dir (the drill "
+                 "restores from it)")
     if args.plan_file is not None and args.register_at:
         ap.error(
             "--register-at derives churn plans from --query and cannot "

@@ -43,13 +43,15 @@ class Supervisor:
     def __init__(
         self,
         ckpt: CheckpointManager,
-        policy: FaultPolicy = FaultPolicy(),
+        policy: FaultPolicy | None = None,
         *,
         fault_injector: Callable[[int], None] | None = None,
         on_restart: Callable[[object, int], object] | None = None,
     ) -> None:
         self.ckpt = ckpt
-        self.policy = policy
+        # a `FaultPolicy()` default argument would be one shared mutable
+        # instance across every Supervisor; build a fresh one per instance
+        self.policy = policy if policy is not None else FaultPolicy()
         self.fault_injector = fault_injector
         self.on_restart = on_restart
         self.restarts = 0

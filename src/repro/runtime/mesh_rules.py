@@ -72,16 +72,29 @@ def logical_to_spec(axes: tuple, mesh: Mesh) -> P:
 
 
 def _is_axes_leaf(x) -> bool:
+    # PartitionSpec is a tuple subclass whose elements are str/None — it would
+    # satisfy the generic check below, so test for it explicitly first
+    if isinstance(x, P):
+        return True
     return isinstance(x, tuple) and all(isinstance(e, (str, type(None))) for e in x)
 
 
+def _clip_spec(spec: P, mesh: Mesh) -> P:
+    """Drop mesh axes the target mesh doesn't have (elastic restore)."""
+    return P(*(ax if ax in mesh.axis_names else None for ax in spec))
+
+
 def shardings_for(specs_tree, mesh: Mesh):
-    """Map a tree of logical-axis tuples to NamedShardings."""
-    return jax.tree.map(
-        lambda axes: NamedSharding(mesh, logical_to_spec(axes, mesh)),
-        specs_tree,
-        is_leaf=_is_axes_leaf,
-    )
+    """Map a tree of logical-axis tuples (or raw PartitionSpecs) to
+    NamedShardings.  Raw specs pass through, clipped to the mesh's axes, so
+    engine-internal spec trees (``_state_pspecs``) reshard via the same path
+    as logical-axis trees."""
+    def to_sharding(axes):
+        if isinstance(axes, P):
+            return NamedSharding(mesh, _clip_spec(axes, mesh))
+        return NamedSharding(mesh, logical_to_spec(axes, mesh))
+
+    return jax.tree.map(to_sharding, specs_tree, is_leaf=_is_axes_leaf)
 
 
 def replicated(mesh: Mesh) -> NamedSharding:

@@ -1,0 +1,135 @@
+"""Recovery supervisor for the serving loop — ``fault.Supervisor``'s CQP twin.
+
+The training supervisor restores a *state pytree*; a CQP restart must rebuild
+a whole session (host graph, plans, engine, governor) and re-ingest the
+suffix of the update log.  ``RecoverySupervisor`` owns that loop:
+
+* periodic checkpoints every ``policy.checkpoint_every`` chunks through an
+  async keep-N :class:`~repro.checkpoint.CheckpointManager`, with the log
+  cursor riding in the manifest meta;
+* on fault (``InjectedFault`` or any ``RuntimeError``): restart backoff,
+  ``max_restarts`` exhaustion re-raises, then ``restore_fn`` rebuilds the
+  session from the latest checkpoint (or from genesis when none landed yet)
+  and the loop resumes at the restored cursor — deterministic replay makes
+  the answers bit-identical to an uninterrupted run (DESIGN.md §12);
+* an optional :class:`~repro.runtime.straggler.StragglerDetector` observes
+  per-chunk wall time.
+
+``restore_fn(directory | None) -> (session, next_chunk)`` is the caller's
+rebuild hook: with a directory it should ``CQPSession.restore`` and read the
+cursor from ``restore_info``; with ``None`` (no checkpoint on disk yet) it
+rebuilds from genesis at chunk 0.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from typing import Callable
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime.fault import FaultPolicy, InjectedFault
+from repro.runtime.straggler import StragglerDetector
+
+log = logging.getLogger("repro.recovery")
+
+
+class RecoverySupervisor:
+    """Checkpoint/restart driver for a ``CQPSession`` serving loop."""
+
+    def __init__(
+        self,
+        directory: str,
+        policy: FaultPolicy | None = None,
+        *,
+        keep: int = 3,
+        async_write: bool = True,
+        restore_fn: Callable[[str | None], tuple[object, int]],
+        fault_injector: Callable[[int], None] | None = None,
+        straggler: StragglerDetector | None = None,
+    ) -> None:
+        self.manager = CheckpointManager(directory, keep=keep, async_write=async_write)
+        self.policy = policy if policy is not None else FaultPolicy()
+        self.restore_fn = restore_fn
+        self.fault_injector = fault_injector
+        self.straggler = straggler
+        self.restarts = 0
+        self.history: list[str] = []
+        self.checkpoints = 0
+        self.checkpoint_s: list[float] = []
+        self.checkpoint_bytes = 0  # host bytes of the last snapshot taken
+        self.restores: list[dict] = []
+
+    # ------------------------------------------------------------------ api
+    def checkpoint(self, session, next_chunk: int) -> None:
+        """Snapshot ``session`` with the log cursor ``next_chunk``."""
+        t0 = time.perf_counter()
+        arrays, meta = session.state_dict(extra={"next_chunk": int(next_chunk)})
+        self.checkpoint_bytes = sum(int(a.nbytes) for a in arrays.values())
+        self.manager.save(next_chunk, arrays, meta=meta)
+        self.checkpoint_s.append(time.perf_counter() - t0)
+        self.checkpoints += 1
+        self.history.append(f"ckpt@{next_chunk}")
+
+    def run(
+        self,
+        session,
+        chunks: list,
+        step_fn: Callable[[object, int, object], None],
+        *,
+        start_chunk: int = 0,
+    ):
+        """Drive ``step_fn(session, k, chunks[k])`` over the log with
+        checkpoint-every-K and restart-on-fault; returns the final session."""
+        k = int(start_chunk)
+        n = len(chunks)
+        every = self.policy.checkpoint_every
+        while k < n:
+            try:
+                if self.fault_injector is not None:
+                    self.fault_injector(k)
+                t0 = time.perf_counter()
+                step_fn(session, k, chunks[k])
+                if self.straggler is not None:
+                    self.straggler.observe(k, time.perf_counter() - t0)
+                k += 1
+                if every and k % every == 0:
+                    self.checkpoint(session, k)
+            except (InjectedFault, RuntimeError) as e:
+                self.restarts += 1
+                self.history.append(f"fault@{k}:{type(e).__name__}")
+                log.warning(
+                    "chunk %d failed (%s); restart %d", k, e, self.restarts
+                )
+                if self.restarts > self.policy.max_restarts:
+                    raise
+                if self.policy.backoff_s:
+                    time.sleep(self.policy.backoff_s)
+                self.manager.wait()  # never restore past an in-flight write
+                fault_chunk = k
+                t0 = time.perf_counter()
+                try:
+                    session, k = self.restore_fn(self.manager.directory)
+                except FileNotFoundError:
+                    # no checkpoint landed yet → rebuild from genesis
+                    session, k = self.restore_fn(None)
+                self.restores.append({
+                    "latency_s": time.perf_counter() - t0,
+                    "resumed_chunk": int(k),
+                    "replayed_chunks": int(fault_chunk - k),
+                })
+                self.history.append(f"resume@{k}")
+        self.manager.wait()
+        return session
+
+    def metrics(self) -> dict:
+        """Recovery counters for ``session.stats()["runtime"]`` / reports."""
+        return {
+            "restarts": self.restarts,
+            "checkpoints": self.checkpoints,
+            "checkpoint_s": list(self.checkpoint_s),
+            "checkpoint_bytes": self.checkpoint_bytes,
+            "restores": list(self.restores),
+            "replayed_chunks": sum(r["replayed_chunks"] for r in self.restores),
+            "history": list(self.history),
+        }

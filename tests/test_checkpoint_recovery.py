@@ -1,0 +1,460 @@
+"""Crash-safety: checkpoint → kill → restore → replay ≡ uninterrupted run.
+
+The durability contract (DESIGN.md §12): a `CQPSession` checkpoint plus a
+deterministic replay of the update-log suffix reproduces the answers of a
+run that never crashed, bit for bit — across engines, drop policies, and
+shard counts (including restoring an 8-shard checkpoint onto a smaller
+mesh).  The "crash" is real in spirit: the post-checkpoint session object
+is mutated further and then discarded, so the restored session can only
+succeed from what hit the disk.
+
+A subprocess test SIGKILLs `cqp_serve` mid-run and asserts the atomic-
+rename invariant: every non-`.tmp` `step_*` directory on disk is complete
+and loadable, no matter where the kill landed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import dropping as dr
+from repro.core import plan as qplan
+from repro.core.graph import DynamicGraph
+from repro.core.session import CQPSession
+from repro.launch.mesh import make_data_mesh
+
+V = 16
+MAX_ITERS = 16
+NDEV = jax.device_count()
+
+needs8 = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+
+def workload(seed: int = 5, label: int = 0, steps: int = 12):
+    """(initial edges, update log) over one edge label."""
+    rng = np.random.default_rng(seed)
+    seen = {}
+    while len(seen) < 40:
+        u, w = int(rng.integers(0, V)), int(rng.integers(0, V))
+        if u != w:
+            seen[(u, w)] = (u, w, float(rng.integers(1, 9)), label)
+    edges = list(seen.values())
+    initial, pool = edges[:30], edges[30:]
+    present = {(u, w) for (u, w, _x, _l) in initial}
+    log = []
+    for _ in range(steps):
+        if present and rng.random() < 0.35:
+            u, w = sorted(present)[int(rng.integers(0, len(present)))]
+            log.append((u, w, label, 1.0, -1))
+            present.discard((u, w))
+        elif pool:
+            u, w, x, lbl = pool.pop()
+            log.append((u, w, lbl, x, +1))
+            present.add((u, w))
+    return initial, log
+
+
+def labeled_workload(seed: int = 9):
+    """Cycle over labels {1, 2} plus a mixed-label update log (for RPQ)."""
+    initial = [(i, (i + 1) % V, 1.0, 1 + (i % 2)) for i in range(V)]
+    rng = np.random.default_rng(seed)
+    log = []
+    for t in range(10):
+        u, w = int(rng.integers(0, V)), int(rng.integers(0, V))
+        if u == w:
+            continue
+        log.append((u, w, 1 + (t % 2), 1.0, +1))
+    log.append((0, 1, 1, 1.0, -1))  # delete a cycle edge mid-stream
+    return initial, log
+
+
+PROB = dr.DropConfig(
+    mode="prob", selection="random", p=0.4, seed=7, bloom_bits=1 << 12
+)
+
+
+def _plans(policy):
+    if policy == "join-drop":
+        nfa = qplan.NFA.concat_star(1, 2)
+        return [
+            qplan.rpq(0, nfa, max_iters=MAX_ITERS, join_store="materialize"),
+            qplan.rpq(4, nfa, max_iters=MAX_ITERS, join_store="drop"),
+        ]
+    drop = PROB if policy == "prob" else None
+    return [
+        qplan.sssp(0, max_iters=MAX_ITERS, drop=drop),
+        qplan.sssp(7, max_iters=MAX_ITERS),
+    ]
+
+
+def _workload(policy):
+    return labeled_workload() if policy == "join-drop" else workload()
+
+
+def _session(initial, engine, shards, **kw):
+    mesh = make_data_mesh(shards) if shards > 1 else None
+    graph = DynamicGraph(V, initial, capacity=256)
+    return CQPSession(graph, engine=engine, mesh=mesh, **kw)
+
+
+# the full ISSUE matrix with invalid combos pruned: the sharded sweep and
+# NFA-product joins are dense-only; the scratch baseline stores no trace,
+# so its drop axis is vacuous
+CELLS = [
+    pytest.param(
+        engine,
+        shards,
+        policy,
+        id=f"{engine}-{shards}shard-{policy}",
+        marks=(needs8,) if shards == 8 else (),
+    )
+    for engine in ("dense", "host", "scratch")
+    for shards in (1, 8)
+    for policy in ("none", "prob", "join-drop")
+    if not (engine != "dense" and (shards == 8 or policy == "join-drop"))
+    if not (engine == "scratch" and policy != "none")
+]
+
+
+@pytest.mark.parametrize("engine,shards,policy", CELLS)
+def test_checkpoint_restore_replay_parity(engine, shards, policy, tmp_path):
+    """checkpoint → crash → restore → replay suffix == uninterrupted run."""
+    initial, log = _workload(policy)
+    plans = _plans(policy)
+    cut = len(log) // 2
+    mesh = make_data_mesh(shards) if shards == 8 else None
+
+    ref = _session(initial, engine, shards)
+    rh = ref.register_many(plans)
+    ref.apply_updates(log)
+
+    s = _session(initial, engine, shards)
+    sh = s.register_many(plans)
+    s.apply_updates(log[:cut])
+    s.checkpoint(str(tmp_path))
+    # post-checkpoint progress that the crash destroys: the restored
+    # session must not see any of it
+    s.apply_updates(log[cut:])
+    crashed = [np.asarray(s.answers(h)) for h in sh]
+    del s
+
+    r = CQPSession.restore(str(tmp_path), mesh=mesh)
+    assert r.restore_info["step"] == cut or r.restore_info["step"] >= 0
+    rhandles = r.handles()
+    assert [h.qid for h in rhandles] == [h.qid for h in sh]
+    r.apply_updates(log[cut:])
+
+    for h_ref, h_r, crash in zip(rh, rhandles, crashed):
+        want = np.asarray(ref.answers(h_ref))
+        np.testing.assert_array_equal(np.asarray(r.answers(h_r)), want)
+        np.testing.assert_array_equal(crash, want)  # crashed run was right too
+    assert r.nbytes() == ref.nbytes()
+    assert r.nbytes_per_operator() == ref.nbytes_per_operator()
+    assert r.updates_applied == ref.updates_applied
+
+
+@pytest.mark.parametrize("engine", ["dense", "host", "scratch"])
+def test_churn_between_checkpoint_and_crash(engine, tmp_path):
+    """register/deregister after the checkpoint are crash-lost session
+    mutations; the replay re-issues them and still converges."""
+    initial, log = workload()
+    cut = len(log) // 2
+    extra = qplan.sssp(3, max_iters=MAX_ITERS)
+
+    def churn_and_finish(sess, handles):
+        handles = list(handles)
+        handles.append(sess.register(extra))
+        sess.deregister(handles.pop(0))  # retire the oldest query
+        sess.apply_updates(log[cut:])
+        return handles
+
+    ref = _session(initial, engine, 1)
+    rh = ref.register_many(_plans("none"))
+    ref.apply_updates(log[:cut])
+    rh = churn_and_finish(ref, rh)
+
+    s = _session(initial, engine, 1)
+    sh = s.register_many(_plans("none"))
+    s.apply_updates(log[:cut])
+    s.checkpoint(str(tmp_path))
+    churn_and_finish(s, sh)  # lost in the crash
+    del s
+
+    r = CQPSession.restore(str(tmp_path))
+    rhand = churn_and_finish(r, r.handles())
+    assert [h.qid for h in rhand] == [h.qid for h in rh]
+    for h_ref, h_r in zip(rh, rhand):
+        np.testing.assert_array_equal(
+            np.asarray(r.answers(h_r)), np.asarray(ref.answers(h_ref))
+        )
+    assert r.nbytes_per_operator() == ref.nbytes_per_operator()
+
+
+@needs8
+@pytest.mark.parametrize("restore_shards", [1, 4])
+def test_checkpoint_at_8_restores_on_smaller_mesh(restore_shards, tmp_path):
+    """Elastic restore: an 8-shard checkpoint lands on a 1- or 4-shard mesh
+    with identical answers and per-shard bytes summing to the global."""
+    initial, log = workload()
+    cut = len(log) // 2
+    plans = _plans("none")
+
+    ref = _session(initial, "dense", 1)
+    rh = ref.register_many(plans)
+    ref.apply_updates(log)
+
+    s = _session(initial, "dense", 8)
+    s.register_many(plans)
+    s.apply_updates(log[:cut])
+    s.checkpoint(str(tmp_path))
+    del s
+
+    mesh = make_data_mesh(restore_shards) if restore_shards > 1 else None
+    r = CQPSession.restore(str(tmp_path), mesh=mesh)
+    assert r.num_shards == restore_shards
+    r.apply_updates(log[cut:])
+    for h_ref, h_r in zip(rh, r.handles()):
+        np.testing.assert_array_equal(
+            np.asarray(r.answers(h_r)), np.asarray(ref.answers(h_ref))
+        )
+    per_dev = r.nbytes_per_device()
+    assert len(per_dev) == restore_shards
+    assert sum(per_dev) == r.nbytes() == ref.nbytes()
+
+
+def test_governor_escalations_survive_checkpoint(tmp_path):
+    """A budget-governed session checkpoints mid-escalation: the restored
+    governor continues from the saved levels/EWMAs and lands on the same
+    levels, bytes, and answers as the uninterrupted run."""
+    edges = [(i, (i + 1) % V, 1.0) for i in range(V)]
+    log = [
+        ((3 * k) % V, (5 * k + 1) % V, 0, 1.0, +1)
+        for k in range(10)
+        if (3 * k) % V != (5 * k + 1) % V
+    ]
+
+    def build(budget):
+        s = CQPSession(
+            DynamicGraph(V, edges, capacity=128),
+            engine="dense",
+            budget_bytes=budget,
+        )
+        s.register_many([qplan.sssp(i, max_iters=16) for i in range(3)])
+        return s
+
+    probe = build(10**9)
+    for u in log[:5]:
+        probe.apply_updates([u])
+    budget = int(probe.nbytes() * 0.6)  # force escalations before the cut
+
+    ref = build(budget)
+    for u in log:
+        ref.apply_updates([u])
+
+    s = build(budget)
+    for u in log[:5]:
+        s.apply_updates([u])
+    assert any(v > 0 for v in s.governor._levels.values())
+    s.checkpoint(str(tmp_path))
+    del s
+
+    r = CQPSession.restore(str(tmp_path))
+    for u in log[5:]:
+        r.apply_updates([u])
+    for h_ref, h_r in zip(ref.handles(), r.handles()):
+        np.testing.assert_array_equal(
+            np.asarray(r.answers(h_r)), np.asarray(ref.answers(h_ref))
+        )
+    assert r.nbytes() == ref.nbytes()
+    assert r.governor._levels == ref.governor._levels
+    assert len(r.governor.actions) == len(ref.governor.actions)
+
+
+def test_restore_validates_meta(tmp_path):
+    """Foreign checkpoints (no session meta) are rejected with a clear error."""
+    from repro.checkpoint import store
+
+    store.save_checkpoint(str(tmp_path), 0, {"x": np.zeros(3)})
+    with pytest.raises(ValueError, match="no session meta"):
+        CQPSession.restore(str(tmp_path))
+
+
+def test_property_checkpoint_roundtrip_random_streams(tmp_path):
+    """Hypothesis: for random update streams and a random checkpoint point,
+    restore(checkpoint(s)) + replay equals the uninterrupted run, and the
+    per-operator byte accounting survives the round trip."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @st.composite
+    def stream(draw):
+        mk = st.tuples(
+            st.integers(0, V - 1), st.integers(0, V - 1), st.integers(1, 9)
+        )
+        edges = [
+            (u, w, float(x))
+            for (u, w, x) in draw(st.lists(mk, min_size=6, max_size=24))
+            if u != w
+        ]
+        edges = list({(u, w): (u, w, x) for (u, w, x) in edges}.values())
+        present = {(u, w) for (u, w, _x) in edges}
+        ops = []
+        for _ in range(draw(st.integers(2, 10))):
+            if present and draw(st.booleans()):
+                u, w = draw(st.sampled_from(sorted(present)))
+                ops.append((u, w, 0, 1.0, -1))
+                present.discard((u, w))
+            else:
+                u, w = draw(st.integers(0, V - 1)), draw(st.integers(0, V - 1))
+                if u == w:
+                    continue
+                ops.append((u, w, 0, float(draw(st.integers(1, 9))), +1))
+                present.add((u, w))
+        cut = draw(st.integers(0, len(ops)))
+        src = draw(st.integers(0, V - 1))
+        return edges, ops, cut, src
+
+    case = [0]
+
+    @settings(max_examples=6, deadline=None)
+    @given(wl=stream())
+    def run(wl):
+        edges, ops, cut, src = wl
+        case[0] += 1
+        for engine in ("dense", "host"):
+            ref = CQPSession(
+                DynamicGraph(V, edges, capacity=256), engine=engine
+            )
+            h_ref = ref.register(qplan.sssp(src, max_iters=MAX_ITERS))
+            ref.apply_updates(ops)
+
+            s = CQPSession(DynamicGraph(V, edges, capacity=256), engine=engine)
+            s.register(qplan.sssp(src, max_iters=MAX_ITERS))
+            s.apply_updates(ops[:cut])
+            d = str(tmp_path / f"case{case[0]}-{engine}")
+            s.checkpoint(d)
+            del s
+
+            r = CQPSession.restore(d)
+            r.apply_updates(ops[cut:])
+            (h_r,) = r.handles()
+            np.testing.assert_array_equal(
+                np.asarray(r.answers(h_r)), np.asarray(ref.answers(h_ref))
+            )
+            want = [sum(o.values()) for o in ref.nbytes_per_operator()]
+            got = [sum(o.values()) for o in r.nbytes_per_operator()]
+            assert got == want
+
+    run()
+
+
+# --------------------------------------------------------------- subprocess
+
+SERVE = [sys.executable, "-m", "repro.launch.cqp_serve", "--smoke", "--json"]
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    return env
+
+
+def test_cqp_serve_fault_drill_subprocess(tmp_path):
+    """`--inject-fault-at` restores the latest checkpoint, replays, and the
+    final per-query bytes match a run that never faulted."""
+    plain = subprocess.run(
+        SERVE, env=_env(), capture_output=True, text=True, timeout=600
+    )
+    assert plain.returncode == 0, plain.stderr
+    baseline = json.loads(plain.stdout.strip().splitlines()[-1])
+
+    drill = subprocess.run(
+        SERVE
+        + [
+            "--checkpoint-dir", str(tmp_path),
+            "--checkpoint-every", "2",
+            "--inject-fault-at", "3",
+        ],
+        env=_env(), capture_output=True, text=True, timeout=600,
+    )
+    assert drill.returncode == 0, drill.stderr
+    out = json.loads(drill.stdout.strip().splitlines()[-1])
+    rec = out["recovery"]
+    assert rec["restarts"] == 1
+    assert rec["replayed_chunks"] >= 0
+    assert any(h.startswith("fault@3") for h in rec["history"])
+    assert any(h.startswith("resume@") for h in rec["history"])
+    assert rec["checkpoints"] >= 1 and rec["checkpoint_bytes"] > 0
+    assert out["nbytes_per_query"] == baseline["nbytes_per_query"]
+    assert out["runtime"]["fault"]["restarts"] == 1
+    assert out["runtime"]["straggler"]["observed"] > 0
+
+
+def test_cqp_serve_sigkill_leaves_only_complete_checkpoints(tmp_path):
+    """SIGKILL mid-run: whatever landed in the checkpoint dir is either a
+    `.tmp` staging dir (ignored, GCed later) or a fully loadable step —
+    the atomic-rename invariant."""
+    from repro.checkpoint import store
+
+    proc = subprocess.Popen(
+        SERVE
+        + [
+            "--updates", "4096", "--batch", "8",
+            "--checkpoint-dir", str(tmp_path),
+            "--checkpoint-every", "1",
+        ],
+        env=_env(), stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+    )
+    try:
+        deadline = time.time() + 300
+        while time.time() < deadline:
+            if any(
+                d.startswith("step_") and not d.endswith(".tmp")
+                for d in os.listdir(tmp_path)
+            ):
+                break
+            if proc.poll() is not None:
+                pytest.fail(
+                    "cqp_serve exited before its first checkpoint: "
+                    + proc.stderr.read().decode()
+                )
+            time.sleep(0.01)
+        else:
+            pytest.fail("no checkpoint appeared before the deadline")
+        proc.send_signal(signal.SIGKILL)
+        proc.wait(timeout=60)
+    finally:
+        if proc.poll() is None:
+            proc.kill()
+            proc.wait(timeout=60)
+
+    steps = sorted(
+        d for d in os.listdir(tmp_path)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    assert steps, "at least one complete checkpoint must have survived"
+    for d in steps:
+        # completeness: manifest + every declared leaf present and typed
+        arrays, manifest, step = store.load_checkpoint(
+            str(tmp_path), int(d.split("_")[1])
+        )
+        assert set(arrays) == set(manifest["leaves"])
+        for key, spec in manifest["leaves"].items():
+            assert list(arrays[key].shape) == list(spec["shape"])
+            assert str(arrays[key].dtype) == spec["dtype"]
+    # and the latest one restores into a working session
+    r = CQPSession.restore(str(tmp_path))
+    assert r.restore_info["extra"]["next_chunk"] >= 1
+    assert r.num_queries > 0

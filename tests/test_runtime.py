@@ -177,3 +177,178 @@ def test_neighbor_sampler_shapes_and_reachability():
     assert n >= 3 and e > 0
     # all edges reference in-range local ids
     assert sub.edge_src[:e].max() < n and sub.edge_dst[:e].max() < n
+
+
+# ------------------------------------------------ durability seam (ISSUE 6)
+
+
+def test_fault_policy_not_shared_between_supervisors(tmp_path):
+    """Each Supervisor gets its own FaultPolicy: mutating one must not leak
+    into another (the dataclass-default-instance bug)."""
+    a = Supervisor(CheckpointManager(str(tmp_path / "a")))
+    b = Supervisor(CheckpointManager(str(tmp_path / "b")))
+    assert a.policy is not b.policy
+    a.policy.max_restarts = 0
+    assert b.policy.max_restarts == FaultPolicy().max_restarts
+
+
+def test_fault_supervisor_max_restarts_exhaustion_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_write=False)
+
+    def injector(step):
+        raise InjectedFault("permanent failure")
+
+    sup = Supervisor(
+        mgr, FaultPolicy(max_restarts=2, checkpoint_every=100),
+        fault_injector=injector,
+    )
+    import pytest
+
+    with pytest.raises(InjectedFault, match="permanent"):
+        sup.run({"x": jnp.zeros(())},
+                lambda s, k: StepResult(state=s, metrics={}), num_steps=3)
+    # the failing step was retried max_restarts times before giving up
+    assert sup.restarts == 3
+    assert sum(e.startswith("fault@0") for e in sup.history) == 3
+
+
+def test_straggler_warmup_and_policy_callback():
+    det = StragglerDetector(threshold=2.0, warmup=3)
+    hits = []
+    det.on_straggler(lambda ev: hits.append(ev.step))
+    # outliers INSIDE the warmup window never flag (the EWMA is seeding) —
+    # they fold into the baseline instead of raising events
+    assert det.observe(0, 0.1) is False
+    assert det.observe(1, 1.0) is False
+    for i in range(2, 8):
+        det.observe(i, 0.1)
+    # the baseline decayed back toward 0.1: a true outlier now flags and
+    # fires the registered policy callback
+    assert det.observe(8, 10.0) is True
+    assert hits == [8]
+    # flagged samples are excluded from the EWMA (no self-poisoning): the
+    # next normal sample is judged against the clean baseline
+    assert det.ewma < 1.0
+    assert det.observe(9, 0.1) is False
+    assert det.events[-1].step == 8
+
+
+def test_checkpoint_manager_async_never_overlaps(tmp_path, monkeypatch):
+    """The async writer double-buffers: a save waits for the in-flight write
+    before spawning the next, so at most one write runs at any time."""
+    from repro.checkpoint import store as store_mod
+
+    live = {"n": 0, "max": 0}
+    real = store_mod.save_checkpoint
+
+    def tracked(directory, step, tree, **kw):
+        live["n"] += 1
+        live["max"] = max(live["max"], live["n"])
+        try:
+            return real(directory, step, tree, **kw)
+        finally:
+            live["n"] -= 1
+
+    monkeypatch.setattr(store_mod, "save_checkpoint", tracked)
+    m = CheckpointManager(str(tmp_path), keep=2, async_write=True)
+    for s in range(1, 6):
+        m.save(s, _tree())
+    m.wait()
+    assert live["max"] == 1
+    assert sorted(os.listdir(str(tmp_path))) == ["step_00000004", "step_00000005"]
+
+
+def test_restore_validates_manifest(tmp_path):
+    """Restore against a mismatched target tree names the bad leaf instead
+    of crashing deep in numpy."""
+    import pytest
+
+    d = str(tmp_path)
+    save_checkpoint(d, 3, _tree())
+    bad_shape = {"w": jnp.zeros((2, 2)), "nested": {"b": jnp.ones((5,), jnp.int32)}}
+    with pytest.raises(ValueError, match="shape"):
+        restore_checkpoint(d, bad_shape)
+    bad_dtype = {
+        "w": jnp.zeros((3, 4)),
+        "nested": {"b": jnp.ones((5,), jnp.float32)},
+    }
+    with pytest.raises(ValueError, match="dtype"):
+        restore_checkpoint(d, bad_dtype)
+    missing = {"extra": jnp.zeros((1,)), **_tree()}
+    with pytest.raises(ValueError, match="extra"):
+        restore_checkpoint(d, missing)
+
+
+def test_load_checkpoint_meta_roundtrip(tmp_path):
+    from repro.checkpoint import load_checkpoint
+
+    d = str(tmp_path)
+    save_checkpoint(d, 11, _tree(), meta={"next_chunk": 4, "note": "hi"})
+    arrays, manifest, step = load_checkpoint(d)
+    assert step == 11
+    assert manifest["meta"] == {"next_chunk": 4, "note": "hi"}
+    assert set(arrays) == {"w", "nested/b"}
+    np.testing.assert_array_equal(arrays["w"], _tree()["w"])
+
+
+def test_recovery_supervisor_cqp_integration(tmp_path):
+    """RecoverySupervisor drives a real CQPSession: fault mid-stream →
+    restore + replay equals the uninterrupted run, and the session surfaces
+    the runtime blocks in stats()."""
+    from repro.core import plan as qplan
+    from repro.core.graph import DynamicGraph
+    from repro.core.session import CQPSession
+    from repro.runtime.recovery import RecoverySupervisor
+
+    v = 16
+    edges = [(i, (i + 1) % v, 1.0) for i in range(v)]
+    log = [((3 * k) % v, (5 * k + 1) % v, 0, 1.0, +1) for k in range(8)]
+    log = [u for u in log if u[0] != u[1]]
+    chunks = [log[i : i + 2] for i in range(0, len(log), 2)]
+
+    def fresh():
+        s = CQPSession(DynamicGraph(v, edges, capacity=128), engine="host")
+        h = s.register(qplan.sssp(0, max_iters=16))
+        return s, h
+
+    ref, h_ref = fresh()
+    for c in chunks:
+        ref.apply_updates(c)
+
+    fired = {"done": False}
+
+    def injector(k):
+        if k == 2 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("drill")
+
+    def restore_fn(directory):
+        if directory is None:
+            s, _ = fresh()
+            return s, 0
+        s = CQPSession.restore(directory)
+        return s, int(s.restore_info["extra"]["next_chunk"])
+
+    det = StragglerDetector()
+    sup = RecoverySupervisor(
+        str(tmp_path),
+        FaultPolicy(checkpoint_every=1, max_restarts=2),
+        restore_fn=restore_fn,
+        fault_injector=injector,
+        straggler=det,
+    )
+    session, _h = fresh()
+    session.attach_runtime(straggler=det, supervisor=sup)
+
+    def step_fn(s, k, chunk):
+        s.apply_updates(chunk)
+
+    session = sup.run(session, chunks, step_fn)
+    session.attach_runtime(straggler=det, supervisor=sup)  # post-restore obj
+    (h,) = session.handles()
+    np.testing.assert_array_equal(session.answers(h), ref.answers(h_ref))
+    assert sup.restarts == 1
+    assert sup.metrics()["replayed_chunks"] == 0  # ckpt@2 landed pre-fault
+    rt = session.stats()["runtime"]
+    assert rt["fault"]["restarts"] == 1
+    assert rt["straggler"]["observed"] == len(chunks)
