@@ -2,15 +2,19 @@
 
 Not a paper figure — the repo-native throughput study motivating the batched
 pipeline (DBSP/Graphsurge-style: batch deltas through one compiled dataflow).
-For each backend (COO segment-reduce vs Pallas ELL-SpMV) and batch size B,
-a fixed update log is streamed through ``apply_updates_batched``; B=1 via
-the per-update host path is the baseline.  ``us_per_call`` is µs per update;
-``derived`` carries updates/sec and the speedup over the per-update path.
+For each backend (COO segment-reduce, Pallas ELL-SpMV, fused maintenance
+megakernel) and batch size B, a fixed update log is streamed through
+``apply_updates_batched``; B=1 via the per-update host path is the baseline.
+``us_per_call`` is µs per update; ``derived`` carries updates/sec and the
+speedup over the per-update path.  The closing ``fused_vs_stitched`` rows
+compare the fused megakernel directly against the stitched ELL path at each
+batch size (>1 means the single-dispatch sweep wins).
 
-Off-TPU the ELL rows run the kernel in interpret mode (a correctness
-fallback an order of magnitude slower than the segment-reduce), so on CPU
-the machine-neutral signal is the COO speedup column; on TPU the compiled
-Mosaic kernel makes the ELL rows the headline.
+Off-TPU the ELL and fused rows run their kernels in interpret mode (a
+correctness fallback an order of magnitude slower than the segment-reduce),
+so on CPU the machine-neutral signal is the COO speedup column; on TPU the
+compiled Mosaic kernels make the ELL/fused rows the headline and the
+``fused_vs_stitched`` ratio measures the dispatch-fusion payoff.
 """
 
 from __future__ import annotations
@@ -39,7 +43,8 @@ def main() -> None:
     )
     log = [u for batch in stream for u in batch]
 
-    for backend in ("coo", "ell"):
+    batch_us: dict[tuple[str, int], float] = {}
+    for backend in ("coo", "ell", "fused"):
         # per-update baseline (host path, one dispatch per update)
         eng = _engine(initial, v, backend, 1)
         t0 = time.perf_counter()
@@ -61,12 +66,25 @@ def main() -> None:
             eng.apply_updates_batched(rest, batch_size=b)
             t_bat = time.perf_counter() - t0
             assert (eng.answers() == base).all(), "batched != sequential answers"
+            us = t_bat * 1e6 / len(rest)
+            batch_us[(backend, b)] = us
             emit(
                 f"fig_batch/{backend}/batch{b}",
-                t_bat * 1e6 / len(rest),
+                us,
                 f"upd_per_s={len(rest) / t_bat:.1f};"
                 f"speedup_vs_per_update={(t_seq / len(log)) / (t_bat / len(rest)):.2f}",
             )
+
+    # stitched-vs-fused: same workload, same batch size, one compiled sweep
+    # each — the ratio isolates what fusing the iteration into a single
+    # pallas_call buys over the stitched ELL path
+    for b in (4, 16):
+        stitched, fused = batch_us[("ell", b)], batch_us[("fused", b)]
+        emit(
+            f"fig_batch/fused_vs_stitched/batch{b}",
+            fused,
+            f"stitched_us={stitched:.1f};speedup={stitched / fused:.2f}",
+        )
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """§Roofline: aggregate the dry-run reports into the per-cell roofline table.
 
-Reads ``reports/dryrun/*.json`` (produced by ``repro.launch.dryrun``) and
-prints, per (arch × shape × mesh): the three roofline terms in seconds, the
-dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline fraction.
+Reads ``reports/dryrun/*.json`` — produced by ``repro.launch.dryrun`` (LM
+cells) and ``repro.launch.sweep_dryrun`` (stitched vs fused maintenance
+sweep) — and prints, per (arch × shape × mesh): the three roofline terms in
+seconds, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS, and the roofline
+fraction.  Exits nonzero when no reports exist (run a producer first).
 
+    PYTHONPATH=src python -m repro.launch.sweep_dryrun
     PYTHONPATH=src python -m benchmarks.roofline [--markdown]
 """
 
@@ -13,6 +16,7 @@ import argparse
 import glob
 import json
 import os
+import sys
 
 REPORT_DIR = os.path.join(os.path.dirname(__file__), "..", "reports", "dryrun")
 
@@ -40,6 +44,15 @@ def main() -> None:
     args = ap.parse_args()
 
     recs = load()
+    if not recs:
+        print(
+            f"roofline: no dry-run reports in {os.path.abspath(REPORT_DIR)} — "
+            "produce them first, e.g.\n"
+            "  PYTHONPATH=src python -m repro.launch.sweep_dryrun\n"
+            "  PYTHONPATH=src python -m repro.launch.dryrun --all",
+            file=sys.stderr,
+        )
+        sys.exit(2)
     ok = [r for r in recs if r.get("status") == "ok"]
     bad = [r for r in recs if r.get("status") != "ok"]
 

@@ -18,12 +18,16 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jnp.ndarray
 
-_C1 = jnp.uint32(0x85EBCA6B)
-_C2 = jnp.uint32(0xC2B2AE35)
-_C3 = jnp.uint32(0x27D4EB2F)
+# numpy scalars, NOT jnp: committed jnp scalars surface as captured
+# constants inside the fused Pallas kernel body (pallas_call rejects them),
+# while np scalars inline as jaxpr literals.
+_C1 = np.uint32(0x85EBCA6B)
+_C2 = np.uint32(0xC2B2AE35)
+_C3 = np.uint32(0x27D4EB2F)
 
 
 def _mix(x: Array) -> Array:
@@ -47,7 +51,7 @@ def hash_key(v: Array, i: Array, salt: Array | int = 0) -> tuple[Array, Array]:
     i = jnp.asarray(i, jnp.uint32)
     s = jnp.asarray(salt, jnp.uint32)
     h1 = _mix(v * _C3 ^ _mix(i + s))
-    h2 = _mix(i * _C1 ^ _mix(v ^ (s * _C2))) | jnp.uint32(1)  # odd → full cycle
+    h2 = _mix(i * _C1 ^ _mix(v ^ (s * _C2))) | 1  # odd → full cycle
     return h1, h2
 
 
@@ -89,7 +93,7 @@ def make(shape: tuple[int, ...], num_bits: int, num_hashes: int = 4) -> BloomFil
 def _probes(flt: BloomFilter, v: Array, i: Array, salt: Array | int) -> Array:
     h1, h2 = hash_key(v, i, salt)
     j = jnp.arange(flt.num_hashes, dtype=jnp.uint32)
-    probes = (h1[..., None] + j * h2[..., None]) % jnp.uint32(flt.num_bits)
+    probes = (h1[..., None] + j * h2[..., None]) % flt.num_bits
     return probes.astype(jnp.int32)  # [..., k]
 
 

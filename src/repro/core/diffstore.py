@@ -32,7 +32,10 @@ import jax.numpy as jnp
 
 Array = jnp.ndarray
 
-IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
+# Plain Python int (weakly-typed in jnp ops, so int32 is preserved): a
+# traced jnp scalar here would become a captured constant inside the fused
+# Pallas kernel body, which pallas_call rejects.
+IMAX = int(jnp.iinfo(jnp.int32).max)
 
 
 class DiffStore(NamedTuple):

@@ -27,6 +27,7 @@ import dataclasses
 from typing import NamedTuple
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import bloom as bloom_lib
 from repro.core import diffstore as ds
@@ -221,10 +222,10 @@ def _uniform01(seed: Array | int, q: Array, v: Array, i: Array) -> Array:
     """
     h = bloom_lib._mix(
         jnp.asarray(v, jnp.uint32)
-        ^ bloom_lib._mix(jnp.asarray(i, jnp.uint32) * jnp.uint32(0x9E3779B9))
+        ^ bloom_lib._mix(jnp.asarray(i, jnp.uint32) * np.uint32(0x9E3779B9))
         ^ bloom_lib._mix(jnp.asarray(q, jnp.uint32) + jnp.asarray(seed, jnp.uint32))
     )
-    return h.astype(jnp.float32) / jnp.float32(2**32)
+    return h.astype(jnp.float32) / float(2**32)
 
 
 def select_to_drop(

@@ -67,6 +67,11 @@ from repro.core.graph import (
 from repro.core.semiring import Semiring, reduce_pair
 from repro.kernels.ell_spmv import ell_spmv
 
+# module (not name) import: kernels/fused_sweep.py imports repro.core for the
+# diff-store/dropping primitives it runs in-kernel, so importing the *name*
+# here would complete the cycle before the function exists
+from repro.kernels import fused_sweep as fused_sweep_lib
+
 Array = jnp.ndarray
 
 # Mesh axis the sweep shards over (vertex partition).  The ``model`` axis is
@@ -106,7 +111,7 @@ class GraphArrays(NamedTuple):
         cls, s: GraphSnapshot, *, backend: str = "coo", ell_min_width: int = 0
     ) -> "GraphArrays":
         nbr = ell_w = None
-        if backend == "ell":
+        if backend in ("ell", "fused"):
             nbr_np, w_np, _ = s.to_ell(min_width=ell_min_width)
             nbr, ell_w = jnp.asarray(nbr_np), jnp.asarray(w_np)
         return cls(
@@ -138,7 +143,11 @@ class EngineConfig:
     alpha: float = 0.85
     # Aggregator backend: "coo" = masked segment-reduce over the edge list;
     # "ell" = the Pallas bucketed-ELL SpMV kernel (JOD only — the kernel *is*
-    # the fused Join+Min; interpret-mode fallback runs it off-TPU).
+    # the fused Join+Min; interpret-mode fallback runs it off-TPU);
+    # "fused" = the maintenance megakernel (kernels/fused_sweep.py): ONE
+    # pallas_call per sweep iteration fuses expand + diff-store append +
+    # DroppedVT probe/update (JOD fully in-kernel; VDC keeps its J-store
+    # maintenance in XLA and fuses the per-vertex store phase).
     backend: str = "coo"
     ell_block_v: int = 128
     # None → interpret off-TPU, compiled Mosaic on TPU (kernels.ops default).
@@ -147,7 +156,7 @@ class EngineConfig:
     def __post_init__(self):
         if self.mode not in ("vdc", "jod"):
             raise ValueError(f"unknown mode {self.mode!r}")
-        if self.backend not in ("coo", "ell"):
+        if self.backend not in ("coo", "ell", "fused"):
             raise ValueError(f"unknown backend {self.backend!r}")
         if self.backend == "ell" and self.mode != "jod":
             raise ValueError("backend='ell' realizes JOD; VDC reads the J store")
@@ -288,7 +297,10 @@ def ife_step(
     ``carry``/``dst``/``num_segments`` restrict the output to the local
     vertex partition.
     """
-    if cfg.backend == "ell":
+    if cfg.backend in ("ell", "fused"):
+        # the fused backend carries the same blocked-ELL adjacency; the
+        # standalone expand (reassembly/repair paths) is bit-identical to
+        # the megakernel's in-kernel tile (shared ``expand_tile``)
         return ell_step(cfg, cur, g, carry=carry)
     return aggregate(
         cfg,
@@ -429,16 +441,6 @@ def _sweep_body(
     #    (the session's free pool) are scheduled for no work at all.
     sched = (c.frontier | dirty) & active[:, None]
 
-    # -- dropped change points at i must be recomputed to keep `cur` exact
-    #    (AccessDᵢᵛWithDrops, forward form).  Prob-Drop may false-positive
-    #    here → spurious but safe recompute.
-    dropped_here = (
-        dr.dropped_at(c.drop, i, num_local, v_offset=off)
-        if cfg.drop.enabled()
-        else jnp.zeros_like(sched)
-    )
-    repair = dropped_here & active[:, None] & ~sched
-
     # -- recompute D_i (dense; `sched|repair` is the algorithmic work mask).
     if cfg.mode == "vdc":
         # Maintain J at iteration i before reading it: an edge's message
@@ -468,66 +470,162 @@ def _sweep_body(
         jwritten = c.stats.jwritten + jwrite.sum(dtype=jnp.int32)
     else:
         jstore = c.jstore
-        new = ife_step(
-            cfg, cur_full, g, carry=c.cur, dst=dst, num_segments=num_local
-        )
         jwritten = c.stats.jwritten
-
-    # -- pre-update trajectory at i (for δ detection), from the frozen store.
-    old_has, old_val = ds.value_at(old_dstore, i)
-    old_i = jnp.where(old_has, old_val, c.cur_old)
-    # A dropped old change point leaves old_i stale until the next stored old
-    # point re-anchors it; stale scheduled vertices propagate conservatively.
-    stale = (c.stale_old | dropped_here) & ~old_has
-
-    changed = sched & ((new != old_i) | stale)
-
-    # -- new trajectory change point at i?  (vs exact D_{i-1} = cur)
-    want_point = sched & (new != c.cur)
-    has_cur, cur_stored_val = ds.value_at(c.dstore, i)
-
-    if cfg.drop.enabled():
-        to_drop = want_point & dr.select_to_drop(
-            c.drop.params, degree, q_ids, v_ids, i
-        )
-        to_store = want_point & ~to_drop
-    else:
-        to_drop = jnp.zeros_like(want_point)
-        to_store = want_point
-
-    dstore, evicted, evicted_iter = ds.upsert(c.dstore, i, to_store, new)
-    # one fused removal pass (each full remove_at rewrites the store):
-    #   · a dropped point at i that had a stored twin loses the twin
-    #   · a vanished change point (+/- pair cancelled) is deleted
-    vanish = sched & ~want_point & has_cur
-    dstore = ds.remove_at(dstore, i, (to_drop & has_cur) | vanish)
-
-    drop_state = c.drop
-    if cfg.drop.enabled():
-        drop_state = dr.register(drop_state, i, to_drop, v_offset=off)
-        drop_state = dr.register(drop_state, evicted_iter, evicted, v_offset=off)
-        # a dropped record is stale once the point is stored or vanished
-        drop_state = dr.unregister(drop_state, i, to_store | vanish)
-        if axis is not None:
-            # per-shard inserts merge back into the shared structures: OR the
-            # Bloom bits (psum of bools), pmax the horizon anchor, psum the
-            # overflow delta — all scalars/filters stay replicated.
-            if drop_state.flt is not None:
-                bits = jax.lax.psum(
-                    drop_state.flt.bits.astype(jnp.int32), axis
-                ) > 0
-                drop_state = drop_state._replace(flt=drop_state.flt._replace(bits))
-            drop_state = drop_state._replace(
-                det_overflow=c.drop.det_overflow
-                + jax.lax.psum(drop_state.det_overflow - c.drop.det_overflow, axis),
-                max_iter=jax.lax.pmax(drop_state.max_iter, axis),
+        # backend="fused" realizes JOD's expand *inside* the megakernel;
+        # VDC hands the aggregated `new` to the kernel (partial fusion).
+        new = (
+            None
+            if cfg.backend == "fused"
+            else ife_step(
+                cfg, cur_full, g, carry=c.cur, dst=dst, num_segments=num_local
             )
+        )
 
-    # -- advance exact/old trajectories, schedule next iteration.
-    recompute = sched | repair
-    cur_next = jnp.where(
-        recompute, new, jnp.where(has_cur, cur_stored_val, c.cur)
-    )
+    if cfg.backend == "fused":
+        # -- the maintenance megakernel: ONE pallas_call per iteration fuses
+        #    frontier expand (JOD), DroppedVT/Bloom probe + repair masking,
+        #    δ detection against the frozen old store, and the diff-store
+        #    append/remove — intermediate tiles never leave VMEM.  The body
+        #    calls the same library primitives as the stitched path below
+        #    (expand_tile, ds.*, dr.select_to_drop, bloom.query), so results
+        #    are bit-identical.
+        sr = cfg.semiring
+        kw: dict = {}
+        if new is None:
+            nq = cur_full.shape[0]
+            kw["states"] = jnp.concatenate(
+                [cur_full, jnp.full((nq, 1), sr.identity, cur_full.dtype)],
+                axis=1,
+            )
+            kw["nbr"] = g.nbr
+            kw["w"] = _ell_weights(cfg, g)
+            kw["kcarry"] = (
+                c.cur if sr.carry_prev else jnp.full_like(c.cur, sr.base)
+            )
+        else:
+            kw["new"] = new
+        if cfg.drop.enabled():
+            kw["degree"] = degree
+            kw["params"] = c.drop.params
+            if cfg.drop.mode == "det":
+                kw["det"] = c.drop.det
+            else:
+                kw["bloom_bits"] = c.drop.flt.bits
+                kw["bloom_hashes"] = c.drop.flt.num_hashes
+        out = fused_sweep_lib.fused_sweep(
+            i,
+            off,
+            sched,
+            active,
+            c.cur,
+            c.cur_old,
+            c.stale_old,
+            c.dstore,
+            old_dstore,
+            semiring=sr.kernel_name,
+            hop_cap=sr.hop_cap,
+            block_v=cfg.ell_block_v,
+            drop_mode=cfg.drop.mode if cfg.drop.enabled() else "none",
+            interpret=_interpret(cfg),
+            **kw,
+        )
+        dstore = ds.DiffStore(out.d_iters, out.d_vals, out.d_count)
+        cur_next = out.cur
+        old_i, stale = out.old, out.stale
+        changed, repair = out.changed, out.repair
+        to_store, to_drop, vanish = out.to_store, out.to_drop, out.vanish
+        drop_state = c.drop
+        if cfg.drop.enabled():
+            if cfg.drop.mode == "det":
+                # DroppedVT was maintained in VMEM; adopt the kernel's rows
+                # and fold the per-tile overflow/horizon partials back into
+                # the replicated scalars (sum/max are associative).
+                drop_state = drop_state._replace(
+                    det=ds.DiffStore(
+                        out.det_iters, c.drop.det.vals, out.det_count
+                    ),
+                    det_overflow=c.drop.det_overflow
+                    + out.det_overflow.sum(dtype=jnp.int32),
+                    max_iter=jnp.maximum(
+                        c.drop.max_iter, out.det_max_iter.max()
+                    ),
+                )
+            else:
+                # Bloom inserts stay outside the kernel (XLA scatter; the OR
+                # is idempotent so ordering is immaterial) — identical bits
+                # to the stitched register pair; unregister is a prob no-op.
+                drop_state = dr.register(drop_state, i, out.to_drop, v_offset=off)
+                drop_state = dr.register(
+                    drop_state, out.evicted_iter, out.evicted, v_offset=off
+                )
+    else:
+        # -- dropped change points at i must be recomputed to keep `cur`
+        #    exact (AccessDᵢᵛWithDrops, forward form).  Prob-Drop may
+        #    false-positive here → spurious but safe recompute.
+        dropped_here = (
+            dr.dropped_at(c.drop, i, num_local, v_offset=off)
+            if cfg.drop.enabled()
+            else jnp.zeros_like(sched)
+        )
+        repair = dropped_here & active[:, None] & ~sched
+
+        # -- pre-update trajectory at i (δ detection), from the frozen store.
+        old_has, old_val = ds.value_at(old_dstore, i)
+        old_i = jnp.where(old_has, old_val, c.cur_old)
+        # A dropped old change point leaves old_i stale until the next
+        # stored old point re-anchors it; stale scheduled vertices propagate
+        # conservatively.
+        stale = (c.stale_old | dropped_here) & ~old_has
+
+        changed = sched & ((new != old_i) | stale)
+
+        # -- new trajectory change point at i?  (vs exact D_{i-1} = cur)
+        want_point = sched & (new != c.cur)
+        has_cur, cur_stored_val = ds.value_at(c.dstore, i)
+
+        if cfg.drop.enabled():
+            to_drop = want_point & dr.select_to_drop(
+                c.drop.params, degree, q_ids, v_ids, i
+            )
+            to_store = want_point & ~to_drop
+        else:
+            to_drop = jnp.zeros_like(want_point)
+            to_store = want_point
+
+        dstore, evicted, evicted_iter = ds.upsert(c.dstore, i, to_store, new)
+        # one fused removal pass (each full remove_at rewrites the store):
+        #   · a dropped point at i that had a stored twin loses the twin
+        #   · a vanished change point (+/- pair cancelled) is deleted
+        vanish = sched & ~want_point & has_cur
+        dstore = ds.remove_at(dstore, i, (to_drop & has_cur) | vanish)
+
+        drop_state = c.drop
+        if cfg.drop.enabled():
+            drop_state = dr.register(drop_state, i, to_drop, v_offset=off)
+            drop_state = dr.register(
+                drop_state, evicted_iter, evicted, v_offset=off
+            )
+            # a dropped record is stale once the point is stored or vanished
+            drop_state = dr.unregister(drop_state, i, to_store | vanish)
+
+        # -- advance the exact trajectory.
+        recompute = sched | repair
+        cur_next = jnp.where(
+            recompute, new, jnp.where(has_cur, cur_stored_val, c.cur)
+        )
+
+    if cfg.drop.enabled() and axis is not None:
+        # per-shard inserts merge back into the shared structures: OR the
+        # Bloom bits (psum of bools), pmax the horizon anchor, psum the
+        # overflow delta — all scalars/filters stay replicated.
+        if drop_state.flt is not None:
+            bits = jax.lax.psum(drop_state.flt.bits.astype(jnp.int32), axis) > 0
+            drop_state = drop_state._replace(flt=drop_state.flt._replace(bits))
+        drop_state = drop_state._replace(
+            det_overflow=c.drop.det_overflow
+            + jax.lax.psum(drop_state.det_overflow - c.drop.det_overflow, axis),
+            max_iter=jax.lax.pmax(drop_state.max_iter, axis),
+        )
     changed_full = (
         changed
         if axis is None
@@ -828,7 +926,7 @@ def _batched_core_sharded(
     in_degree = jax.ops.segment_sum(live, dst_l, num_segments=num_local)
 
     nbr, ell_w = g.nbr, g.ell_w
-    if cfg.backend == "ell":
+    if cfg.backend in ("ell", "fused"):
         row = upd.ell_row - off
         row = jnp.where((row >= 0) & (row < num_local), row, num_local)
         nbr = nbr.at[row, upd.ell_col].set(upd.ell_nbr, mode="drop")
@@ -1049,7 +1147,7 @@ def batched_step(
     out_degree = jax.ops.segment_sum(live, src, num_segments=v)
     in_degree = jax.ops.segment_sum(live, dst, num_segments=v)
     nbr, ell_w = g.nbr, g.ell_w
-    if cfg.backend == "ell":
+    if cfg.backend in ("ell", "fused"):
         nbr = nbr.at[upd.ell_row, upd.ell_col].set(upd.ell_nbr, mode="drop")
         ell_w = ell_w.at[upd.ell_row, upd.ell_col].set(upd.ell_w, mode="drop")
     g2 = GraphArrays(src, dst, weight, valid, out_degree, in_degree, nbr, ell_w)
@@ -1197,9 +1295,9 @@ class DiffIFE:
     def _device_graph(self, snap: GraphSnapshot) -> GraphArrays:
         if self.num_shards > 1:
             return self._device_graph_sharded(snap)
-        if self.cfg.backend == "ell":
+        if self.cfg.backend in ("ell", "fused"):
             g = GraphArrays.from_snapshot(
-                snap, backend="ell", ell_min_width=self._ell_width
+                snap, backend=self.cfg.backend, ell_min_width=self._ell_width
             )
             self._ell_width = g.ell_width
             self._ell_index = EllIndex(snap, self._ell_width)
@@ -1211,7 +1309,7 @@ class DiffIFE:
             self._shard_index = ShardIndex(snap, self.num_shards)
         src, dst, w, valid = self._shard_index.edge_arrays(snap)
         nbr = ell_w = None
-        if self.cfg.backend == "ell":
+        if self.cfg.backend in ("ell", "fused"):
             # ELL rows are keyed by destination, so the [V, D] view shards
             # row-wise as-is; neighbour ids stay global (the kernel gathers
             # from the all-gathered state row).
@@ -1329,7 +1427,7 @@ class DiffIFE:
                     total = self._full_sweep_fallback(ops, total)
                     continue
             ell_writes: list = []
-            if self.cfg.backend == "ell":
+            if self.cfg.backend in ("ell", "fused"):
                 try:
                     ell_writes = self._ell_index.writes_for(ops)
                 except EllOverflow:
@@ -1907,7 +2005,7 @@ class DiffIFE:
         self.det_overflow_shed = int(meta["det_overflow_shed"])
         self._sched_total = int(meta["sched_total"])
         width = int(meta.get("ell_width", 0))
-        if self.cfg.backend == "ell" and width > self._ell_width:
+        if self.cfg.backend in ("ell", "fused") and width > self._ell_width:
             # the saved run had grown its bucketed-ELL width; match it so the
             # replayed suffix hits the same compiled shapes
             self._ell_width = width

@@ -55,23 +55,30 @@ class GraphSnapshot:
         return self.out_degree + self.in_degree
 
     def to_ell(
-        self, pad_to_multiple: int = 8, min_width: int = 0
+        self, pad_to_multiple: int = 8, min_width: int = 0, row_multiple: int = 1
     ) -> tuple[np.ndarray, np.ndarray, int]:
         """In-adjacency in ELL layout (for the Pallas kernel).
 
-        Returns ``(nbr, w)`` with shape ``[V, D]`` where ``D`` is the max
+        Returns ``(nbr, w)`` with shape ``[Vr, D]`` where ``D`` is the max
         in-degree rounded up; padded slots have ``nbr == V`` (a sentinel row;
         callers pad the state vector with the reduce identity at index V).
         ``min_width`` lets the continuous processor keep ``D`` fixed across
         update batches (a ``D`` change means a re-trace of the jitted sweep).
+
+        ``row_multiple`` pads the ROW count to a multiple (``Vr ≥ V``) with
+        all-sentinel rows, once, at build time — the kernels never pad or
+        copy operands per call (their blocked grid needs the row count to be
+        a block multiple; see ``ell_spmv``'s shape contract).  Padding rows
+        gather only the identity, and callers slice their outputs back to V.
         """
         v = self.num_vertices
         live = self.valid
         indeg = np.bincount(self.dst[live], minlength=v)
         d = max(int(indeg.max()) if v else 0, min_width)
         d = max(pad_to_multiple, ((d + pad_to_multiple - 1) // pad_to_multiple) * pad_to_multiple)
-        nbr = np.full((v, d), v, dtype=np.int32)
-        w = np.zeros((v, d), dtype=np.float32)
+        vr = ((v + row_multiple - 1) // row_multiple) * row_multiple
+        nbr = np.full((vr, d), v, dtype=np.int32)
+        w = np.zeros((vr, d), dtype=np.float32)
         fill = np.zeros(v, dtype=np.int64)
         for e in np.nonzero(live)[0]:
             u, t = int(self.src[e]), int(self.dst[e])

@@ -113,7 +113,12 @@ def engine_config_for(
 ) -> EngineConfig:
     """The one place a plan family becomes an :class:`EngineConfig` — shared
     by the dense adapter, the scratch engine, and the legacy fixed-batch
-    builder (`queries.engine_from_plans`)."""
+    builder (`queries.engine_from_plans`).
+
+    ``backend`` picks the sweep aggregator: ``"coo"`` (segment-reduce),
+    ``"ell"`` (Pallas bucketed-ELL SpMV, JOD only), or ``"fused"`` (the
+    maintenance megakernel — one ``pallas_call`` per sweep iteration,
+    bit-identical to the stitched paths)."""
     return EngineConfig(
         num_queries=num_queries,
         num_vertices=num_vertices,

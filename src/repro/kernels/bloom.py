@@ -17,6 +17,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import resolve_interpret
+
 # numpy scalars embed as literals in the kernel (device constants would be
 # rejected as captured consts by pallas_call)
 _C1 = np.uint32(0x85EBCA6B)
@@ -67,7 +69,7 @@ def bloom_query(
     *,
     num_hashes: int = 4,
     block_n: int = 512,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     q, mw = words.shape
     _, n = v.shape
@@ -89,7 +91,7 @@ def bloom_query(
         ],
         out_specs=pl.BlockSpec((1, bn), lambda iq, ib: (iq, ib)),
         out_shape=jax.ShapeDtypeStruct((q, n + npad), jnp.bool_),
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(words, v, i, salt)
     return out[:, :n]
 

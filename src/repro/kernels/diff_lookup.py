@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import resolve_interpret
+
 IMAX = jnp.int32(jnp.iinfo(jnp.int32).max)
 
 
@@ -42,7 +44,7 @@ def diff_lookup(
     qi: jnp.ndarray,  # int32 [N] query iteration per key
     *,
     block_n: int = 256,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     n, s = iters.shape
     bn = min(block_n, n)
@@ -70,6 +72,6 @@ def diff_lookup(
             jax.ShapeDtypeStruct((n + npad,), jnp.int32),
             jax.ShapeDtypeStruct((n + npad,), jnp.bool_),
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(iters, vals, qi)
     return val[:n], fit[:n], found[:n]

@@ -17,6 +17,14 @@ Grid: (Q, V/BV).  Per step the kernel holds one [1, Vp] state row and one
 (reduce) run on the VPU; D is padded to a lane multiple.  VMEM footprint is
 Vp·4 + 2·BV·D·4 + BV·4 bytes — BV is chosen so this fits ~16 MB.
 
+**Shape contract (no hidden copies).**  The kernel never pads or copies its
+operands inside the jitted call: the row count ``V`` must be a multiple of
+the effective block (``min(block_v, V)``), or the whole extent runs as one
+tile.  Callers that want the blocked grid for a non-aligned ``V`` pad ONCE
+at build time via ``GraphSnapshot.to_ell(row_multiple=block_v)`` — padding
+rows are sentinel rows (they gather the identity) and their outputs are
+sliced off by the caller.
+
 Semirings: min_plus (SPSP/SSSP), min_hop (K-hop/RPQ reachability),
 min_label (WCC), pr_sum (PageRank).
 """
@@ -29,38 +37,57 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interpret import resolve_interpret
+
 SEMIRINGS = ("min_plus", "min_hop", "min_label", "pr_sum")
+
+
+def expand_tile(semiring: str, hop_cap: float, row, nbr, w, carry):
+    """One blocked-ELL expand tile: gather + ⊗ (msg) + ⊕ (reduce) + carry.
+
+    ``row`` is the full [Vp] state row (identity at the sentinel index),
+    ``nbr``/``w`` a [BV, D] adjacency tile, ``carry`` the matching [BV]
+    carry slice (prev states for min-*, teleport base for pr_sum).  Shared
+    by :func:`ell_spmv` and the fused maintenance megakernel so both paths
+    produce bit-identical values.
+    """
+    s = row[nbr]  # VMEM gather → [BV, D]
+    if semiring == "min_plus":
+        msgs = s + w
+        red = jnp.min(msgs, axis=1)
+        return jnp.minimum(red, carry)
+    if semiring == "min_hop":
+        msgs = s + 1.0
+        if hop_cap != float("inf"):  # K-hop truncation, baked in at trace time
+            msgs = jnp.where(msgs > hop_cap, jnp.inf, msgs)
+        red = jnp.min(msgs, axis=1)
+        return jnp.minimum(red, carry)
+    if semiring == "min_label":
+        msgs = s  # propagate the label itself
+        red = jnp.min(msgs, axis=1)
+        return jnp.minimum(red, carry)
+    if semiring == "pr_sum":
+        msgs = s * w  # w = alpha / outdeg(src); identity slot holds state 0
+        red = jnp.sum(msgs, axis=1)
+        return red + carry  # carry block holds the teleport base
+    raise ValueError(semiring)
 
 
 def _kernel(
     states_ref, nbr_ref, w_ref, carry_ref, out_ref, *, semiring: str, hop_cap: float
 ):
-    nbr = nbr_ref[...]  # [BV, D] int32
-    w = w_ref[...]  # [BV, D] f32
-    row = states_ref[0, :]  # [Vp] f32 (VMEM-resident state row)
-    s = row[nbr]  # VMEM gather → [BV, D]
+    out_ref[0, :] = expand_tile(
+        semiring, hop_cap, states_ref[0, :], nbr_ref[...], w_ref[...], carry_ref[0, :]
+    )
 
-    if semiring == "min_plus":
-        msgs = s + w
-        red = jnp.min(msgs, axis=1)
-        out = jnp.minimum(red, carry_ref[0, :])
-    elif semiring == "min_hop":
-        msgs = s + 1.0
-        if hop_cap != float("inf"):  # K-hop truncation, baked in at trace time
-            msgs = jnp.where(msgs > hop_cap, jnp.inf, msgs)
-        red = jnp.min(msgs, axis=1)
-        out = jnp.minimum(red, carry_ref[0, :])
-    elif semiring == "min_label":
-        msgs = s  # propagate the label itself
-        red = jnp.min(msgs, axis=1)
-        out = jnp.minimum(red, carry_ref[0, :])
-    elif semiring == "pr_sum":
-        msgs = s * w  # w = alpha / outdeg(src); identity slot holds state 0
-        red = jnp.sum(msgs, axis=1)
-        out = red + carry_ref[0, :]  # carry block holds the teleport base
-    else:
-        raise ValueError(semiring)
-    out_ref[0, :] = out
+
+def block_rows(block_v: int, v: int) -> int:
+    """Effective row-block: ``min(block_v, v)``, falling back to a single
+    tile when ``v`` is not a multiple — the kernel NEVER pads operands."""
+    bv = min(block_v, v)
+    if v % bv:
+        bv = v
+    return bv
 
 
 @functools.partial(
@@ -74,28 +101,28 @@ def ell_spmv(
     *,
     semiring: str = "min_plus",
     block_v: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
     hop_cap: float = float("inf"),
 ) -> jnp.ndarray:
     """Unsharded: Vp = V + 1.  Under the vertex-sharded sweep each shard
     passes its LOCAL adjacency rows (V = V_global / n) against the full
     all-gathered state row (Vp = V_global + 1) — the gather indices stay
     global, so the kernel body is identical; only the output extent shrinks.
+
+    ``V`` here is the nbr/w row count, which may include build-time padding
+    rows (``to_ell(row_multiple=...)``); the caller slices those off.  The
+    operands are used as-is — already-padded inputs hit one compiled program
+    with zero per-call copies (see the module shape contract).
     """
     assert semiring in SEMIRINGS
     q, vp = states.shape
     v, d = nbr.shape
-    assert vp >= v + 1 and carry.shape == (q, v)
-    sentinel = vp - 1  # identity slot padded ELL cells gather from
-    bv = min(block_v, v)
-    # pad V to a BV multiple; padded rows gather from the identity slot
-    vpad = (bv - v % bv) % bv
-    if vpad:
-        nbr = jnp.concatenate([nbr, jnp.full((vpad, d), sentinel, nbr.dtype)], 0)
-        w = jnp.concatenate([w, jnp.zeros((vpad, d), w.dtype)], 0)
-        carry = jnp.concatenate([carry, jnp.zeros((q, vpad), carry.dtype)], 1)
-    grid = (q, (v + vpad) // bv)
-    out = pl.pallas_call(
+    # boundary shape contract: no implicit padding happens past this point
+    assert w.shape == (v, d), (w.shape, nbr.shape)
+    assert vp >= v + 1 and carry.shape == (q, v), (states.shape, carry.shape)
+    bv = block_rows(block_v, v)
+    grid = (q, v // bv)
+    return pl.pallas_call(
         functools.partial(_kernel, semiring=semiring, hop_cap=hop_cap),
         grid=grid,
         in_specs=[
@@ -105,7 +132,6 @@ def ell_spmv(
             pl.BlockSpec((1, bv), lambda iq, iv: (iq, iv)),
         ],
         out_specs=pl.BlockSpec((1, bv), lambda iq, iv: (iq, iv)),
-        out_shape=jax.ShapeDtypeStruct((q, v + vpad), states.dtype),
-        interpret=interpret,
+        out_shape=jax.ShapeDtypeStruct((q, v), states.dtype),
+        interpret=resolve_interpret(interpret),
     )(states, nbr, w, carry)
-    return out[:, :v]

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.interpret import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -71,7 +73,7 @@ def flash_attention(
     causal: bool = True,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: bool | None = None,
 ) -> jnp.ndarray:
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
@@ -99,5 +101,5 @@ def flash_attention(
             pltpu.VMEM((bq,), jnp.float32),  # running denom l
             pltpu.VMEM((bq, d), jnp.float32),  # running numerator acc
         ],
-        interpret=interpret,
+        interpret=resolve_interpret(interpret),
     )(q, k, v)

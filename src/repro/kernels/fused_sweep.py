@@ -1,0 +1,373 @@
+"""Fused per-iteration maintenance megakernel (DESIGN.md §13).
+
+One ``pl.pallas_call`` per sweep iteration runs the whole per-vertex inner
+loop of the paper's maintenance procedure as a single circuit:
+
+    frontier expand over blocked-ELL adjacency (Join + semiring ⊕, all four
+    semirings — shared tile with :mod:`repro.kernels.ell_spmv`)
+      → DroppedVT probe (Det store rows or Bloom bits, in VMEM)
+      → change-point detection vs the frozen pre-update trajectory
+      → per-query drop selection (the governor's ``DropParams`` rows)
+      → difference-store append / overwrite / eviction / removal
+      → Det-Drop register/unregister (det mode; fully in-kernel)
+      → exact-front advance (``cur``)
+
+The stitched path dispatches these as ≥3 separate device programs with HBM
+round trips between every stage; here the candidate-diff tile, the [BV, S]
+diff-store rows and the intermediate J messages live entirely in VMEM.
+
+**Bit-parity by construction**: the kernel body calls the *same* library
+functions the stitched sweep uses — :func:`repro.core.diffstore.upsert` /
+``value_at`` / ``remove_at`` / ``has_at``, :func:`repro.core.dropping.
+select_to_drop` and :func:`repro.core.bloom.query` — on VMEM-resident tiles,
+so every arithmetic op and reduction order is identical to the stitched path.
+
+Grid: ``(Q, V/BV)`` (adaptive single tile when V is not a BV multiple — the
+kernel never pads operands, same contract as ``ell_spmv``).  Per-tile VMEM:
+the [1, Vp] gathered state row, one [BV, D] adjacency tile, the [1, BV, S]
+diff-store rows (+ [1, BV, S_d] Det rows or the [1, M] Bloom row) and ~12
+[1, BV] mask/value tiles.
+
+Division of labour with the engine (what stays OUTSIDE the kernel):
+
+* ``sched`` (frontier ∪ dirty) and the next frontier push — schedule
+  bookkeeping over the COO edge list (segment ops), not per-vertex dataflow;
+* VDC's J-store maintenance + aggregate — edge-store dataflow ([Q, E] rows);
+  the fused path then takes the precomputed ``new`` (partial fusion);
+* Bloom *insert* (prob mode) — an XLA scatter; an in-VMEM insert would cost
+  O(BV·k·M) lane compares per tile.  The kernel emits the to-drop/evicted
+  masks and the engine folds them into the filter;
+* the sharded-drop collectives (psum/pmax) — cross-device by definition.
+
+None of those are ``pallas_call``s, so the fused sweep issues exactly ONE
+kernel dispatch per iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core import bloom as bloom_lib
+from repro.core import diffstore as ds
+from repro.core import dropping as dr
+from repro.kernels.ell_spmv import SEMIRINGS, block_rows, expand_tile
+from repro.kernels.interpret import resolve_interpret
+
+
+class FusedOut(NamedTuple):
+    """Per-vertex outputs of one fused sweep iteration (all [Q, V]-shaped,
+    stores [Q, V, S]); the engine derives stats sums and the next frontier
+    from the masks."""
+
+    d_iters: jnp.ndarray  # int32 [Q, V, S] — updated diff-store rows
+    d_vals: jnp.ndarray  # f32  [Q, V, S]
+    d_count: jnp.ndarray  # int32 [Q, V]
+    cur: jnp.ndarray  # f32 [Q, V] — exact D_i (the advanced front)
+    old: jnp.ndarray  # f32 [Q, V] — pre-update trajectory value at i
+    stale: jnp.ndarray  # bool — old trajectory obscured by a dropped diff
+    changed: jnp.ndarray  # bool — value differs from the old trajectory
+    repair: jnp.ndarray  # bool — dropped change point recomputed at i
+    to_store: jnp.ndarray  # bool — change point written at i
+    to_drop: jnp.ndarray  # bool — change point dropped at i
+    vanish: jnp.ndarray  # bool — stored change point cancelled at i
+    evicted: jnp.ndarray  # bool — row shed its oldest point on insert
+    evicted_iter: jnp.ndarray  # int32 — that point's iteration
+    det_iters: jnp.ndarray | None = None  # int32 [Q, V, S_d] (det mode)
+    det_count: jnp.ndarray | None = None  # int32 [Q, V]
+    det_overflow: jnp.ndarray | None = None  # int32 [Q, nv] per-tile partials
+    det_max_iter: jnp.ndarray | None = None  # int32 [Q, nv] per-tile partials
+
+
+def _kernel(
+    scal_ref,
+    *refs,
+    semiring: str,
+    hop_cap: float,
+    block_v: int,
+    drop_mode: str,
+    bloom_hashes: int,
+    compute_new: bool,
+    num_out: int,
+):
+    ins, outs = refs[: len(refs) - num_out], refs[len(refs) - num_out :]
+    ins = list(ins)
+    i = scal_ref[0, 0]
+    off = scal_ref[0, 1]
+    iq = pl.program_id(0)
+    iv = pl.program_id(1)
+
+    # ---- stage 1: expand (JOD: in-kernel ELL tile; VDC: precomputed new)
+    if compute_new:
+        states_ref, nbr_ref, w_ref, kcarry_ref = ins[:4]
+        del ins[:4]
+        new = expand_tile(
+            semiring,
+            hop_cap,
+            states_ref[0, :],
+            nbr_ref[...],
+            w_ref[...],
+            kcarry_ref[0, :],
+        )[None, :]
+    else:
+        new = ins.pop(0)[...]
+
+    sched = ins.pop(0)[...]  # [1, BV] bool
+    cur = ins.pop(0)[...]
+    cur_old = ins.pop(0)[...]
+    stale_old = ins.pop(0)[...]
+    act = ins.pop(0)[...]  # [1, 1] bool — this query row's active flag
+    dstore0 = ds.DiffStore(ins.pop(0)[...], ins.pop(0)[...], ins.pop(0)[...])
+    old_store = ds.DiffStore(ins.pop(0)[...], ins.pop(0)[...], None)
+
+    if drop_mode != "none":
+        degree = ins.pop(0)[...]  # [1, BV] f32
+        params = dr.DropParams(*(ins.pop(0)[...] for _ in dr.DropParams._fields))
+    if drop_mode == "det":
+        det_iters = ins.pop(0)[...]  # [1, BV, S_d]
+        det_count = ins.pop(0)[...]  # [1, BV]
+        det0 = ds.DiffStore(
+            det_iters, jnp.zeros(det_iters.shape, jnp.float32), det_count
+        )
+    if drop_mode == "prob":
+        flt = bloom_lib.BloomFilter(ins.pop(0)[...], num_hashes=bloom_hashes)
+
+    # global ids of this tile (the drop coin and Bloom keys hash global ids,
+    # so decisions are independent of sharding and tiling)
+    v_ids = off + iv * block_v + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_v), 1
+    )
+    q_ids = jnp.full((1, 1), iq, jnp.int32)
+
+    # ---- stage 2: DroppedVT probe → repair mask (AccessDᵢᵛWithDrops)
+    if drop_mode == "det":
+        dropped_here = ds.has_at(det0, i)
+    elif drop_mode == "prob":
+        it = jnp.broadcast_to(i, v_ids.shape)
+        dropped_here = bloom_lib.query(flt, v_ids, it, salt=q_ids)
+    else:
+        dropped_here = jnp.zeros_like(sched)
+    repair = dropped_here & act & ~sched
+
+    # ---- stage 3: change-point detection vs the frozen old trajectory
+    old_has, old_val = ds.value_at(old_store, i)
+    old_i = jnp.where(old_has, old_val, cur_old)
+    stale = (stale_old | dropped_here) & ~old_has
+    changed = sched & ((new != old_i) | stale)
+
+    # ---- stage 4: drop selection + diff-store append/remove (all in VMEM)
+    want_point = sched & (new != cur)
+    has_cur, cur_stored_val = ds.value_at(dstore0, i)
+    if drop_mode != "none":
+        to_drop = want_point & dr.select_to_drop(params, degree, q_ids, v_ids, i)
+        to_store = want_point & ~to_drop
+    else:
+        to_drop = jnp.zeros_like(want_point)
+        to_store = want_point
+    dstore, evicted, evicted_iter = ds.upsert(dstore0, i, to_store, new)
+    vanish = sched & ~want_point & has_cur
+    dstore = ds.remove_at(dstore, i, (to_drop & has_cur) | vanish)
+
+    # ---- stage 5: exact-front advance
+    recompute = sched | repair
+    cur_next = jnp.where(recompute, new, jnp.where(has_cur, cur_stored_val, cur))
+
+    outs = list(outs)
+    outs.pop(0)[...] = dstore.iters
+    outs.pop(0)[...] = dstore.vals
+    outs.pop(0)[...] = dstore.count
+    outs.pop(0)[...] = cur_next
+    outs.pop(0)[...] = old_i
+    outs.pop(0)[...] = stale
+    outs.pop(0)[...] = changed
+    outs.pop(0)[...] = repair
+    outs.pop(0)[...] = to_store
+    outs.pop(0)[...] = to_drop
+    outs.pop(0)[...] = vanish
+    outs.pop(0)[...] = evicted
+    outs.pop(0)[...] = evicted_iter
+
+    # ---- stage 6 (det mode): DroppedVT register/unregister, in-kernel.
+    #      Same call sequence as dr.register/dr.unregister on the stitched
+    #      path; overflow/max-iter are per-tile partials the engine reduces.
+    if drop_mode == "det":
+        zeros = jnp.zeros(to_drop.shape, jnp.float32)
+        det1, ev1, _ = ds.upsert(det0, i, to_drop, zeros)
+        hi1 = jnp.where(to_drop, i, -1).max()
+        det2, ev2, _ = ds.upsert(det1, evicted_iter, evicted, zeros)
+        hi2 = jnp.where(evicted, evicted_iter, -1).max()
+        det3 = ds.remove_at(det2, i, to_store | vanish)
+        outs.pop(0)[...] = det3.iters
+        outs.pop(0)[...] = det3.count
+        outs.pop(0)[0, 0] = (ev1.sum() + ev2.sum()).astype(jnp.int32)
+        outs.pop(0)[0, 0] = jnp.maximum(hi1, hi2)
+
+
+def fused_sweep(
+    i,  # int32 scalar — the sweep iteration
+    off,  # int32 scalar — global vertex offset of this partition
+    sched,  # bool [Q, V] — vertices whose aggregator reruns at i
+    active,  # bool [Q] — live query slots
+    cur,  # f32 [Q, V] — exact D_{i-1}
+    cur_old,  # f32 [Q, V] — pre-update trajectory at i-1
+    stale_old,  # bool [Q, V]
+    dstore: ds.DiffStore,  # [Q, V, S] — the Iterate difference store
+    old_dstore: ds.DiffStore,  # frozen pre-maintenance snapshot
+    *,
+    states=None,  # f32 [Q, Vp] gathered front + identity sentinel (JOD)
+    nbr=None,  # int32 [V, D] blocked-ELL in-adjacency (JOD)
+    w=None,  # f32 [V, D]
+    kcarry=None,  # f32 [Q, V] kernel carry (prev states / teleport base)
+    new=None,  # f32 [Q, V] precomputed D_i candidates (VDC partial fusion)
+    degree=None,  # f32 [1, V] total degree (drop selection)
+    params: dr.DropParams | None = None,  # [Q] selection rows
+    det: ds.DiffStore | None = None,  # [Q, V, S_d] Det-Drop store
+    bloom_bits=None,  # bool [Q, M] Bloom rows (probe only)
+    bloom_hashes: int = 4,
+    semiring: str = "min_plus",
+    hop_cap: float = float("inf"),
+    block_v: int = 128,
+    drop_mode: str = "none",
+    interpret: bool | None = None,
+) -> FusedOut:
+    """One fused maintenance iteration: a single ``pallas_call`` dispatch.
+
+    Exactly one of ``states``/``nbr``/``w``/``kcarry`` (JOD: expand runs
+    in-kernel) or ``new`` (VDC: the aggregate ran outside) must be given.
+    Shapes follow the engine's local partition — under ``shard_map`` every
+    [·, V] argument is the shard's slice and ``off`` its global offset.
+    """
+    assert semiring in SEMIRINGS
+    assert drop_mode in ("none", "det", "prob")
+    compute_new = new is None
+    if compute_new:
+        assert states is not None and nbr is not None and kcarry is not None
+    q, num_local = sched.shape
+    s_cap = dstore.capacity
+    s_old = old_dstore.capacity
+    bv = block_rows(block_v, num_local)
+    nv = num_local // bv
+    grid = (q, nv)
+
+    def tile2(ix=lambda iq, iv: (iq, iv)):
+        return pl.BlockSpec((1, bv), ix)
+
+    def tile3(s):
+        return pl.BlockSpec((1, bv, s), lambda iq, iv: (iq, iv, 0))
+
+    scal = jnp.stack(
+        [jnp.asarray(i, jnp.int32), jnp.asarray(off, jnp.int32)]
+    ).reshape(1, 2)
+    args = [scal]
+    in_specs = [pl.BlockSpec((1, 2), lambda iq, iv: (0, 0))]
+
+    if compute_new:
+        vp = states.shape[1]
+        d = nbr.shape[1]
+        assert nbr.shape == (num_local, d) and w.shape == (num_local, d)
+        assert kcarry.shape == (q, num_local) and vp >= num_local + 1
+        args += [states, nbr, w, kcarry]
+        in_specs += [
+            pl.BlockSpec((1, vp), lambda iq, iv: (iq, 0)),
+            pl.BlockSpec((bv, d), lambda iq, iv: (iv, 0)),
+            pl.BlockSpec((bv, d), lambda iq, iv: (iv, 0)),
+            tile2(),
+        ]
+    else:
+        args += [new]
+        in_specs += [tile2()]
+
+    args += [sched, cur, cur_old, stale_old, active[:, None]]
+    in_specs += [tile2()] * 4 + [pl.BlockSpec((1, 1), lambda iq, iv: (iq, 0))]
+    args += [dstore.iters, dstore.vals, dstore.count]
+    in_specs += [tile3(s_cap), tile3(s_cap), tile2()]
+    args += [old_dstore.iters, old_dstore.vals]
+    in_specs += [tile3(s_old), tile3(s_old)]
+
+    if drop_mode != "none":
+        assert degree is not None and params is not None
+        args += [degree]
+        in_specs += [tile2(lambda iq, iv: (0, iv))]
+        for f in dr.DropParams._fields:
+            args.append(getattr(params, f))
+            in_specs.append(pl.BlockSpec((1,), lambda iq, iv: (iq,)))
+    if drop_mode == "det":
+        assert det is not None
+        args += [det.iters, det.count]
+        in_specs += [tile3(det.capacity), tile2()]
+    if drop_mode == "prob":
+        assert bloom_bits is not None
+        m = bloom_bits.shape[-1]
+        args += [bloom_bits]
+        in_specs += [pl.BlockSpec((1, m), lambda iq, iv: (iq, 0))]
+
+    def o2(dtype):
+        return jax.ShapeDtypeStruct((q, num_local), dtype), tile2()
+
+    def o3(s, dtype=jnp.int32):
+        return jax.ShapeDtypeStruct((q, num_local, s), dtype), tile3(s)
+
+    out_shapes, out_specs = [], []
+    for shp, spec in [
+        o3(s_cap),
+        o3(s_cap, jnp.float32),
+        o2(jnp.int32),
+        o2(jnp.float32),  # cur
+        o2(jnp.float32),  # old
+        o2(jnp.bool_),  # stale
+        o2(jnp.bool_),  # changed
+        o2(jnp.bool_),  # repair
+        o2(jnp.bool_),  # to_store
+        o2(jnp.bool_),  # to_drop
+        o2(jnp.bool_),  # vanish
+        o2(jnp.bool_),  # evicted
+        o2(jnp.int32),  # evicted_iter
+    ]:
+        out_shapes.append(shp)
+        out_specs.append(spec)
+    if drop_mode == "det":
+        for shp, spec in [
+            o3(det.capacity),
+            o2(jnp.int32),
+            (
+                jax.ShapeDtypeStruct((q, nv), jnp.int32),
+                pl.BlockSpec((1, 1), lambda iq, iv: (iq, iv)),
+            ),
+            (
+                jax.ShapeDtypeStruct((q, nv), jnp.int32),
+                pl.BlockSpec((1, 1), lambda iq, iv: (iq, iv)),
+            ),
+        ]:
+            out_shapes.append(shp)
+            out_specs.append(spec)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            semiring=semiring,
+            hop_cap=hop_cap,
+            block_v=bv,
+            drop_mode=drop_mode,
+            bloom_hashes=int(bloom_hashes),
+            compute_new=compute_new,
+            num_out=len(out_shapes),
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shapes,
+        interpret=resolve_interpret(interpret),
+    )(*args)
+    base = FusedOut(*out[:13])
+    if drop_mode == "det":
+        base = base._replace(
+            det_iters=out[13],
+            det_count=out[14],
+            det_overflow=out[15],
+            det_max_iter=out[16],
+        )
+    return base

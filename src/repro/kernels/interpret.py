@@ -1,0 +1,48 @@
+"""Interpret-mode policy for the Pallas kernels.
+
+Every kernel signature defaults ``interpret=None``; :func:`resolve_interpret`
+maps ``None`` to the backend default — interpret off-TPU (the kernel body
+executes in Python for validation), compiled Mosaic on TPU.  A caller that
+*forces* interpret mode on a TPU backend is almost certainly measuring the
+Python emulation instead of the kernel, so the first such resolution logs a
+one-time warning.
+
+This module is a leaf (no intra-package imports) so the kernels can use it
+without creating an import cycle with :mod:`repro.kernels.ops`.
+"""
+
+from __future__ import annotations
+
+import logging
+
+import jax
+
+_log = logging.getLogger("repro.kernels")
+_warned_tpu_interpret = False
+
+
+def default_interpret() -> bool:
+    """True off-TPU (Python emulation), False on TPU (compiled Mosaic)."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """Resolve a kernel's ``interpret`` argument (``None`` → backend default).
+
+    Logs once when interpret mode ends up running on a TPU backend — the
+    emulated kernel is orders of magnitude slower than the Mosaic lowering
+    and silently hides the kernel's real cost.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    if interpret and jax.default_backend() == "tpu":
+        global _warned_tpu_interpret
+        if not _warned_tpu_interpret:
+            _warned_tpu_interpret = True
+            _log.warning(
+                "Pallas kernel running in interpret mode on a TPU backend: "
+                "this executes the kernel body in Python instead of the "
+                "compiled Mosaic kernel. Pass interpret=False (or leave it "
+                "None) to use the hardware path."
+            )
+    return bool(interpret)

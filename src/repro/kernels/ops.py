@@ -1,39 +1,40 @@
 """Public jit'd wrappers for the Pallas kernels.
 
-``interpret`` defaults to True off-TPU (the kernel body executes in Python
-on CPU for validation) and to False on TPU backends, where the compiled
-Mosaic kernel runs.  Callers can force either mode.
+Every kernel signature defaults ``interpret=None`` → :func:`default_interpret`
+(interpret off-TPU, compiled Mosaic on TPU; see ``kernels/interpret.py`` for
+the one-time warning when interpret mode is forced on a TPU backend).
+Callers can still force either mode explicitly.
 """
 
 from __future__ import annotations
-
-import jax
 
 from repro.kernels.bloom import bloom_query, pack_bits  # noqa: F401
 from repro.kernels.diff_lookup import diff_lookup  # noqa: F401
 from repro.kernels.ell_spmv import ell_spmv  # noqa: F401
 from repro.kernels.flash_attn import flash_attention  # noqa: F401
-
-
-def default_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+from repro.kernels.fused_sweep import FusedOut, fused_sweep  # noqa: F401
+from repro.kernels.interpret import (  # noqa: F401
+    default_interpret,
+    resolve_interpret,
+)
 
 
 def spmv(states, nbr, w, carry, *, semiring="min_plus", **kw):
-    kw.setdefault("interpret", default_interpret())
     return ell_spmv(states, nbr, w, carry, semiring=semiring, **kw)
 
 
 def lookup(iters, vals, qi, **kw):
-    kw.setdefault("interpret", default_interpret())
     return diff_lookup(iters, vals, qi, **kw)
 
 
 def bloom(words, v, i, salt, **kw):
-    kw.setdefault("interpret", default_interpret())
     return bloom_query(words, v, i, salt, **kw)
 
 
 def attention(q, k, v, *, causal=True, **kw):
-    kw.setdefault("interpret", default_interpret())
     return flash_attention(q, k, v, causal=causal, **kw)
+
+
+def sweep(*args, **kw):
+    """The fused maintenance megakernel (one dispatch per sweep iteration)."""
+    return fused_sweep(*args, **kw)

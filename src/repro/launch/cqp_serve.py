@@ -476,7 +476,13 @@ def main() -> None:
         default="dense",
         help="executor behind the session API (CQPSession)",
     )
-    ap.add_argument("--backend", choices=("coo", "ell"), default="ell")
+    ap.add_argument(
+        "--backend",
+        choices=("coo", "ell", "fused"),
+        default="ell",
+        help="sweep aggregator: coo=segment-reduce, ell=Pallas SpMV, "
+        "fused=maintenance megakernel (one pallas_call per iteration)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument(
         "--register-at",

@@ -1,0 +1,169 @@
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+"""Maintenance-sweep dry-run: lower + compile the stitched and fused sweep.
+
+The env line above MUST run before jax initializes (the emulated 8-device
+mesh backs the ``shards=8`` cells).  Produces ``reports/dryrun/*.json`` in
+the same schema as ``repro.launch.dryrun`` so ``benchmarks/roofline.py``
+aggregates both: per cell, the record carries lower/compile wall time,
+``compiled.memory_analysis()``, and the :mod:`repro.launch.hlo_analysis`
+roofline terms (compute vs memory vs collective seconds, bottleneck class,
+useful-FLOP ratio).
+
+Cells: ``backend ∈ {ell, fused} × shards ∈ {1, 8}`` over a synthetic
+uniform graph.  The model-FLOP baseline is the sweep's algorithmic work,
+``2·E·Q`` per iteration (one multiply-add per edge message per query) —
+everything else the stitched path does (diff-store rewrites, Bloom probes)
+is maintenance overhead the fused kernel folds into one pass, which is why
+the fused cell sits at the memory roof, not the compute roof.
+
+    PYTHONPATH=src python -m repro.launch.sweep_dryrun --v 512 --e 2048
+    PYTHONPATH=src python -m benchmarks.roofline --markdown
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import numpy as np
+
+from repro.launch import hlo_analysis
+
+REPORT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "..", "reports", "dryrun"
+)
+
+
+def _graph(v: int, e: int, seed: int = 0):
+    from repro.core.graph import DynamicGraph
+
+    rng = np.random.default_rng(seed)
+    seen = {}
+    while len(seen) < e:
+        u, w = int(rng.integers(0, v)), int(rng.integers(0, v))
+        if u != w:
+            seen[(u, w)] = (u, w, 0, float(rng.integers(1, 10)), +1)
+    return DynamicGraph(v, list(seen.values()), capacity=2 * e)
+
+
+def run_cell(
+    backend: str,
+    shards: int,
+    *,
+    v: int,
+    e: int,
+    num_queries: int,
+    max_iters: int,
+    verbose: bool = True,
+) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    import repro.core.queries as q
+    from repro.launch.mesh import make_data_mesh
+
+    mesh = make_data_mesh(shards) if shards > 1 else None
+    sources = [int(s) for s in np.linspace(0, v - 1, num_queries)]
+    t0 = time.time()
+    eng = q.sssp(
+        _graph(v, e),
+        sources,
+        max_iters=max_iters,
+        backend=backend,
+        mesh=mesh,
+    )
+    dirty = jnp.ones((v,), bool)
+    lowered = eng._maintain.lower(eng.state, eng.g, dirty)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    # algorithmic work per sweep iteration: one op per edge message per query
+    model_flops = 2.0 * e * num_queries
+    roof = hlo_analysis.analyse(
+        f"sweep-{backend}", lowered, compiled, shards, model_flops
+    )
+    rec = {
+        "arch": f"sweep-{backend}",
+        "shape": f"v{v}-e{e}-q{num_queries}",
+        "mesh": f"1x{shards}" if shards > 1 else "single",
+        "num_devices": shards,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory_analysis": str(mem),
+        "per_device_bytes": roof.per_device_hbm_bytes,
+        "roofline": roof.to_dict(),
+        "status": "ok",
+    }
+    if verbose:
+        print(
+            f"[sweep-dryrun] {rec['arch']} {rec['shape']} mesh={rec['mesh']} OK "
+            f"(lower {t_lower:.1f}s compile {t_compile:.1f}s "
+            f"bottleneck={roof.bottleneck})"
+        )
+    return rec
+
+
+def save(rec: dict) -> None:
+    os.makedirs(REPORT_DIR, exist_ok=True)
+    key = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}".replace("/", "_")
+    with open(os.path.join(REPORT_DIR, key + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--v", type=int, default=512)
+    ap.add_argument("--e", type=int, default=2048)
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--max-iters", type=int, default=32)
+    ap.add_argument(
+        "--backend",
+        default="both",
+        choices=["ell", "fused", "both"],
+        help="stitched (ell), fused megakernel, or both",
+    )
+    ap.add_argument("--shards", default="1,8")
+    ap.add_argument("--continue-on-error", action="store_true")
+    args = ap.parse_args()
+
+    backends = ["ell", "fused"] if args.backend == "both" else [args.backend]
+    shard_list = [int(s) for s in args.shards.split(",")]
+    import jax
+
+    for backend in backends:
+        for shards in shard_list:
+            if shards > jax.device_count():
+                print(
+                    f"[sweep-dryrun] skip shards={shards}: only "
+                    f"{jax.device_count()} devices visible"
+                )
+                continue
+            try:
+                rec = run_cell(
+                    backend,
+                    shards,
+                    v=args.v,
+                    e=args.e,
+                    num_queries=args.queries,
+                    max_iters=args.max_iters,
+                )
+            except Exception as exc:  # noqa: BLE001 — recorded per cell
+                if not args.continue_on_error:
+                    raise
+                traceback.print_exc()
+                rec = {
+                    "arch": f"sweep-{backend}",
+                    "shape": f"v{args.v}-e{args.e}-q{args.queries}",
+                    "mesh": f"1x{shards}" if shards > 1 else "single",
+                    "num_devices": shards,
+                    "status": f"error: {exc}",
+                }
+            save(rec)
+
+
+if __name__ == "__main__":
+    main()

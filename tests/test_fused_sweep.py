@@ -1,0 +1,310 @@
+"""Bit-parity matrix for the fused maintenance megakernel (backend="fused").
+
+The megakernel fuses one sweep iteration — frontier expand over the blocked
+ELL adjacency, semiring aggregate, diff-store append/remove, DroppedVT /
+Bloom probe+update — into a single ``pallas_call``.  The contract is *bit
+identity* with the stitched paths (backend="ell" for JOD, backend="coo" for
+VDC) across semirings, shard counts, drop modes and join_mat gating, and
+resumability through the PR 6 checkpoint/restore machinery.
+
+Two regression guards ride along:
+
+* ``ell_spmv`` must not retrace or pad when the caller hands it arrays the
+  ELL build already padded (jit cache probe + jaxpr scan for concatenate);
+* the fused path must issue exactly ONE pallas_call per sweep iteration.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dropping as dr
+from repro.core import engine as E
+from repro.core import plan as qplan
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.core.session import CQPSession
+from repro.kernels.ell_spmv import ell_spmv
+from repro.launch.mesh import make_data_mesh
+
+V = 24
+MAX_ITERS = 24
+NDEV = jax.device_count()
+
+needs8 = pytest.mark.skipif(
+    NDEV < 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+DROPS = {
+    "none": None,
+    "det": dr.DropConfig(mode="det", selection="random", p=0.4, seed=7),
+    "prob": dr.DropConfig(
+        mode="prob", selection="random", p=0.4, seed=7, bloom_bits=1 << 12
+    ),
+}
+
+
+def random_workload(seed: int, v: int = V, e: int = 96, num_batches: int = 4):
+    rng = np.random.default_rng(seed)
+    seen = {}
+    while len(seen) < e:
+        u, w = int(rng.integers(0, v)), int(rng.integers(0, v))
+        if u != w:
+            seen[(u, w)] = (u, w, float(rng.integers(1, 10)))
+    edges = list(seen.values())
+    initial, pool = edges[: e * 3 // 4], edges[e * 3 // 4 :]
+    present = {(u, w) for (u, w, _x) in initial}
+    batches = []
+    for _ in range(num_batches):
+        batch = []
+        for _ in range(int(rng.integers(2, 5))):
+            if present and rng.random() < 0.4:
+                u, w = sorted(present)[int(rng.integers(0, len(present)))]
+                batch.append((u, w, 0, 1.0, -1))
+                present.discard((u, w))
+            elif pool:
+                u, w, x = pool.pop()
+                batch.append((u, w, 0, x, +1))
+                present.add((u, w))
+        batches.append(batch)
+    return initial, batches
+
+
+def _engine(backend, mode, dropmode, shards, initial):
+    mesh = make_data_mesh(shards) if shards > 1 else None
+    kw = dict(mode=mode)
+    if DROPS[dropmode] is not None:
+        kw["drop"] = DROPS[dropmode]
+    return q.sssp(
+        DynamicGraph(V, initial, capacity=512),
+        [0, V // 2],
+        max_iters=MAX_ITERS,
+        backend=backend,
+        mesh=mesh,
+        **kw,
+    )
+
+
+def _assert_state_equal(a, b):
+    for la, lb in zip(
+        jax.tree_util.tree_leaves(a.state), jax.tree_util.tree_leaves(b.state)
+    ):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# fused realizes JOD in-kernel and composes with VDC (the J store stays in
+# XLA; the per-vertex store phase runs fused).  Reference backend: the
+# stitched path the cell previously took.
+MATRIX = [
+    ("jod", "none", "ell"),
+    ("jod", "det", "ell"),
+    ("jod", "prob", "ell"),
+    ("vdc", "none", "coo"),
+]
+
+
+@pytest.mark.parametrize("shards", [1, pytest.param(8, marks=needs8)])
+@pytest.mark.parametrize("mode,dropmode,ref_backend", MATRIX, ids=str)
+def test_fused_parity_matrix(mode, dropmode, ref_backend, shards):
+    """fused vs stitched: bit-identical answers AND engine state per batch."""
+    initial, batches = random_workload(seed=11)
+    ref = _engine(ref_backend, mode, dropmode, shards, initial)
+    fused = _engine("fused", mode, dropmode, shards, initial)
+    np.testing.assert_array_equal(ref.answers(), fused.answers())
+    for batch in batches:
+        ref.apply_updates(batch)
+        fused.apply_updates(batch)
+        np.testing.assert_array_equal(ref.answers(), fused.answers())
+    if shards == 1:
+        _assert_state_equal(ref, fused)
+
+
+@pytest.mark.parametrize(
+    "make",
+    [
+        pytest.param(
+            lambda be: q.khop(
+                DynamicGraph(V, _INIT, capacity=512), [0, 3], k=6, backend=be
+            ),
+            id="min_hop",
+        ),
+        pytest.param(
+            lambda be: q.wcc(
+                DynamicGraph(V, _INIT, capacity=512),
+                max_iters=MAX_ITERS,
+                backend=be,
+            ),
+            id="min_label",
+        ),
+        pytest.param(
+            lambda be: q.pagerank(
+                DynamicGraph(V, _INIT, capacity=512), iters=12, backend=be
+            ),
+            id="pr_sum",
+        ),
+    ],
+)
+def test_fused_semiring_parity(make):
+    _, batches = random_workload(seed=5)
+    ref, fused = make("ell"), make("fused")
+    np.testing.assert_array_equal(ref.answers(), fused.answers())
+    for batch in batches:
+        ref.apply_updates(batch)
+        fused.apply_updates(batch)
+        np.testing.assert_array_equal(ref.answers(), fused.answers())
+
+
+_INIT, _ = random_workload(seed=5)
+
+
+def test_fused_join_mat_gating_parity():
+    """Per-slot join_mat gating (RPQ materialize vs drop) through the fused
+    VDC store phase — answers must match the stitched coo engine."""
+    nfa = qplan.NFA.concat_star(1, 2)
+    initial = [(i, (i + 1) % V, 1.0, 1 + (i % 2)) for i in range(V)]
+    rng = np.random.default_rng(9)
+    log = []
+    for t in range(10):
+        u, w = int(rng.integers(0, V)), int(rng.integers(0, V))
+        if u != w:
+            log.append((u, w, 1 + (t % 2), 1.0, +1))
+    log.append((0, 1, 1, 1.0, -1))
+    plans = [
+        qplan.rpq(0, nfa, max_iters=MAX_ITERS, join_store="materialize"),
+        qplan.rpq(4, nfa, max_iters=MAX_ITERS, join_store="drop"),
+    ]
+
+    def _sess(backend):
+        return CQPSession(
+            DynamicGraph(V, initial, capacity=256),
+            engine="dense",
+            backend=backend,
+            mode="vdc",
+        )
+
+    ref, fused = _sess("coo"), _sess("fused")
+    rh, fh = ref.register_many(plans), fused.register_many(plans)
+    ref.apply_updates(log)
+    fused.apply_updates(log)
+    for a, b in zip(rh, fh):
+        np.testing.assert_array_equal(
+            np.asarray(ref.answers(a)), np.asarray(fused.answers(b))
+        )
+
+
+def test_fused_checkpoint_restore_replay(tmp_path):
+    """checkpoint → crash → restore → replay on backend="fused" matches an
+    uninterrupted fused run (PR 6 durability composes with the megakernel)."""
+    initial, batches = random_workload(seed=17, num_batches=4)
+    log = [op for b in batches for op in b]
+    cut = len(log) // 2
+    plans = [
+        qplan.sssp(0, max_iters=MAX_ITERS, drop=DROPS["prob"]),
+        qplan.sssp(7, max_iters=MAX_ITERS),
+    ]
+
+    def _sess():
+        return CQPSession(
+            DynamicGraph(V, initial, capacity=256),
+            engine="dense",
+            backend="fused",
+        )
+
+    ref = _sess()
+    rh = ref.register_many(plans)
+    ref.apply_updates(log)
+
+    s = _sess()
+    sh = s.register_many(plans)
+    s.apply_updates(log[:cut])
+    s.checkpoint(str(tmp_path))
+    s.apply_updates(log[cut:])  # post-checkpoint progress the crash destroys
+
+    r = CQPSession.restore(str(tmp_path))
+    r.apply_updates(log[cut:])
+    for a, b in zip(rh, sh):
+        np.testing.assert_array_equal(
+            np.asarray(ref.answers(a)), np.asarray(r.answers(b))
+        )
+
+
+# ---------------------------------------------------------------- regressions
+
+
+def _prims(jaxpr, acc):
+    for eqn in jaxpr.eqns:
+        acc.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for x in vs:
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None:
+                    _prims(inner if hasattr(inner, "eqns") else inner.jaxpr, acc)
+                elif hasattr(x, "eqns"):
+                    _prims(x, acc)
+    return acc
+
+
+def test_ell_spmv_no_retrace_no_copy_when_padded():
+    """Arrays padded once at ELL build time enter the kernel as-is: no in-jit
+    concatenate (the old per-call pad), and a second call with the same
+    shapes hits the jit cache (no retrace)."""
+    g = DynamicGraph(V, _INIT, capacity=512)
+    nbr_np, w_np, _ = g.snapshot().to_ell(row_multiple=8)
+    assert nbr_np.shape[0] % 8 == 0  # build-time row padding
+    nbr, w = jnp.asarray(nbr_np), jnp.asarray(w_np)
+    states = jnp.zeros((2, V + 1), jnp.float32)
+    carry = jnp.zeros((2, V), jnp.float32)
+
+    call = functools.partial(ell_spmv, semiring="min_plus", block_v=8)
+    before = ell_spmv._cache_size()
+    out = jax.block_until_ready(call(states, nbr, w, carry))
+    assert out.shape == (2, V)
+    after_first = ell_spmv._cache_size()
+    assert after_first == before + 1
+    jax.block_until_ready(call(states, nbr, w, carry))
+    assert ell_spmv._cache_size() == after_first  # cache hit — no retrace
+
+    prims = _prims(
+        jax.make_jaxpr(lambda s, n, ww, c: call(s, n, ww, c))(
+            states, nbr, w, carry
+        ).jaxpr,
+        set(),
+    )
+    assert "concatenate" not in prims, "ell_spmv pads inside jit again"
+    assert "pad" not in prims
+
+
+def _count_pallas(jaxpr):
+    n = 0
+    for eqn in jaxpr.eqns:
+        if "pallas" in eqn.primitive.name:
+            n += 1
+        for v in eqn.params.values():
+            vs = v if isinstance(v, (list, tuple)) else [v]
+            for x in vs:
+                inner = getattr(x, "jaxpr", None)
+                if inner is not None:
+                    n += _count_pallas(
+                        inner if hasattr(inner, "eqns") else inner.jaxpr
+                    )
+                elif hasattr(x, "eqns"):
+                    n += _count_pallas(x)
+    return n
+
+
+@pytest.mark.parametrize("dropmode", ["none", "det", "prob"])
+def test_fused_single_pallas_call_per_iteration(dropmode):
+    """The acceptance bar: the fused sweep body contains exactly one
+    pallas_call — expand, diff-store and drop maintenance are all inside."""
+    eng = _engine("fused", "jod", dropmode, 1, _INIT)
+    jx = jax.make_jaxpr(functools.partial(E.maintain, eng.cfg))(
+        eng.state, eng.g, jnp.ones((V,), bool)
+    )
+    assert _count_pallas(jx.jaxpr) == 1

@@ -1,0 +1,129 @@
+"""Mosaic lowering record-and-regress for every Pallas kernel.
+
+``jax.export.export(jit_fn, platforms=["tpu"])`` runs the real Mosaic
+lowering pipeline on a CPU host, so CI can catch kernel regressions without
+a TPU.  On this jax version Mosaic cannot lower most of the maintenance
+kernels (their [Q, V] tiles use (1, block_v) block shapes, and the bodies
+use gathers / integer reductions), so the contract is recorded per kernel:
+
+* ``flash_attn`` MUST lower (its (bq, d) blocks satisfy the tiling rules);
+* the others must either lower (a jax upgrade lifting a limitation is an
+  improvement, not a failure) or fail with a *known Mosaic limitation* —
+  anything else (TypeError, NameError, shape errors from our own code) is a
+  kernel regression and fails the test.
+
+The interpret-mode default (`kernels.ops.default_interpret`) keeps these
+kernels correct off-TPU; this file is the tripwire that tells us when the
+compiled path changes underneath them.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import export
+
+from repro.core import diffstore as ds
+from repro.kernels.bloom import bloom_query, pack_bits
+from repro.kernels.diff_lookup import diff_lookup
+from repro.kernels.ell_spmv import ell_spmv
+from repro.kernels.flash_attn import flash_attention
+from repro.kernels.fused_sweep import fused_sweep
+
+# Error-message fragments of known Mosaic lowering limitations.  A failure
+# matching none of these is OUR bug, not a backend gap.
+KNOWN_MOSAIC_LIMITS = (
+    "last two dimensions of your block shape are divisible",
+    "Reductions over integers not implemented",
+    "Unimplemented primitive in Pallas TPU lowering",
+    "Only 32-bit integer support",
+    "not implemented",
+)
+
+
+def _lower(fn, *args, **kw):
+    """(lowered_ok, error_message) for a TPU export on the CPU host."""
+    try:
+        export.export(jax.jit(functools.partial(fn, **kw)), platforms=["tpu"])(
+            *args
+        )
+        return True, ""
+    except Exception as e:  # noqa: BLE001 — classified below
+        return False, str(e)
+
+
+def _cases():
+    v, q, d, cap = 24, 2, 8, 4
+    states = jnp.zeros((q, v + 1), jnp.float32)
+    nbr = jnp.full((v, d), v, jnp.int32)
+    w = jnp.zeros((v, d), jnp.float32)
+    carry = jnp.zeros((q, v), jnp.float32)
+    sched = jnp.zeros((q, v), bool)
+    store = ds.make((q, v), cap)
+    words = jnp.asarray(pack_bits(np.zeros((q, 1024), bool)))
+    ids = jnp.zeros((q, v), jnp.int32)
+    att = jnp.zeros((1, 2, 128, 64), jnp.float32)
+    return {
+        "flash_attn": (flash_attention, (att, att, att), {"interpret": False}),
+        "ell_spmv": (
+            ell_spmv,
+            (states, nbr, w, carry),
+            {"semiring": "min_plus", "block_v": 8, "interpret": False},
+        ),
+        "diff_lookup": (
+            diff_lookup,
+            (
+                store.iters.reshape(q * v, cap),
+                store.vals.reshape(q * v, cap),
+                jnp.zeros((q * v,), jnp.int32),
+            ),
+            {"interpret": False},
+        ),
+        "bloom": (
+            bloom_query,
+            (words, ids, ids, jnp.zeros((q,), jnp.int32)),
+            {"interpret": False},
+        ),
+        "fused_sweep": (
+            fused_sweep,
+            (0, 0, sched, jnp.ones((q,), bool), carry, carry, sched, store, store),
+            {
+                "states": states,
+                "nbr": nbr,
+                "w": w,
+                "kcarry": carry,
+                "semiring": "min_plus",
+                "block_v": 8,
+                "interpret": False,
+            },
+        ),
+    }
+
+
+def test_flash_attn_must_lower_to_mosaic():
+    """The one kernel whose tiles satisfy Mosaic's rules must keep lowering
+    — this is the hard regression bar for the compiled TPU path."""
+    fn, args, kw = _cases()["flash_attn"]
+    ok, err = _lower(fn, *args, **kw)
+    assert ok, f"flash_attn stopped lowering to Mosaic: {err}"
+
+
+@pytest.mark.parametrize(
+    "name", ["ell_spmv", "diff_lookup", "bloom", "fused_sweep"]
+)
+def test_kernel_lowering_fails_only_on_known_mosaic_limits(name):
+    """Record-and-regress: each maintenance kernel either lowers (backend
+    improvement) or hits a *known* Mosaic limitation.  Any other error class
+    means the kernel itself regressed."""
+    fn, args, kw = _cases()[name]
+    ok, err = _lower(fn, *args, **kw)
+    if ok:
+        return  # a jax upgrade lifted the limitation — nothing to assert
+    assert any(frag in err for frag in KNOWN_MOSAIC_LIMITS), (
+        f"{name} failed Mosaic lowering with an unrecognized error "
+        f"(kernel regression?): {err.splitlines()[0] if err else err}"
+    )
