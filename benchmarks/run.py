@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.fig_operator_drop",
     "benchmarks.fig_shard_scaling",
     "benchmarks.fig_recovery",
+    "benchmarks.fig_serving_slo",
 ]
 
 

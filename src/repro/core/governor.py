@@ -415,6 +415,11 @@ class MemoryGovernor:
     def headroom(self, session) -> int:
         return self.budget_bytes - session.nbytes()
 
+    def headroom_fraction(self, session) -> float:
+        """Headroom as a fraction of the budget (≤ 0 when over budget) —
+        the admission controller's governor-pressure signal."""
+        return self.headroom(session) / self.budget_bytes
+
     def snapshot(self, session=None) -> dict:
         out = {
             "budget_bytes": self.budget_bytes,

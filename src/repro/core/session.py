@@ -610,6 +610,20 @@ class CQPSession:
     def handles(self) -> list[QueryHandle]:
         return [QueryHandle(qid=q, plan=self._plans[q]) for q in sorted(self._plans)]
 
+    def answers_snapshot(self) -> dict[int, np.ndarray]:
+        """qid → an owned copy of every registered query's answers.
+
+        The serving tier's epoch view: taken between chunk applies, the
+        copies stay immutable while the next chunk folds in on another
+        thread, so concurrent readers never observe a half-applied δE
+        chunk (DESIGN.md §14)."""
+        if self._impl is None:
+            return {}
+        return {
+            qid: np.array(self._impl.answers_row(slot), copy=True)
+            for qid, slot in self._handles.items()
+        }
+
     def nbytes(self) -> int:
         return 0 if self._impl is None else self._impl.nbytes()
 

@@ -300,9 +300,21 @@ class SparseDiffIFE:
                 continue
             horizon = self._horizon(q)
             frontier: set[int] = set()
+            # Retractions are not monotone: a vertex raised at iteration i
+            # may regain a lower value at a later iteration from an
+            # in-neighbour whose change point settles later.  Every vertex
+            # touched by this sweep therefore stays scheduled through the
+            # trace horizon — exactly the treatment the direct update heads
+            # (`dirty`) already get — instead of dropping out of the
+            # frontier at its first unchanged iteration.
+            touched: set[int] = set()
             i = 1
-            while i <= self.max_iters and (frontier or (dirty and i <= horizon + 1)):
-                sched = frontier | (dirty if i <= horizon + 1 else set())
+            while i <= self.max_iters and (
+                frontier or ((dirty or touched) and i <= horizon + 1)
+            ):
+                sched = frontier | (
+                    (dirty | touched) if i <= horizon + 1 else set()
+                )
                 nxt: set[int] = set()
                 for v in sorted(sched):
                     old = self._value_at(q, v, i)
@@ -310,6 +322,7 @@ class SparseDiffIFE:
                     if new != old:
                         nxt.add(v)
                         nxt.update(self.out_nbrs.get(v, ()))
+                        touched.add(v)
                     self._set_point(q, v, i, new)
                 horizon = max(horizon, self._horizon(q))
                 frontier = nxt

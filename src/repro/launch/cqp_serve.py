@@ -60,6 +60,8 @@ from collections import Counter
 
 import numpy as np
 
+from repro.serving.metrics import PhaseRecorder, summarize_latency_s
+
 
 def make_mesh(kind: str, shards: int | None):
     """Resolve --mesh into a jax Mesh (imports jax lazily: --emulate-devices
@@ -349,11 +351,18 @@ def serve(args) -> dict:
             "warning: update log fits one chunk — latencies include compile; "
             "raise --updates past --batch for steady-state numbers"
         )
-    lat = np.asarray(M["lat"] if steady else [M["t_compile"]])
+    lat_s = M["lat"] if steady else [M["t_compile"]]
+    latency = summarize_latency_s(lat_s)
     served = M["served"]
     reg_ms, dereg_ms = M["reg_ms"], M["dereg_ms"]
     bytes_freed = M["bytes_freed"]
     t_compile = M["t_compile"]
+    phases = PhaseRecorder()
+    phases.extend("maintain", lat_s)
+    phases.extend("register", [x / 1e3 for x in reg_ms])
+    phases.extend("deregister", [x / 1e3 for x in dereg_ms])
+    if sup is not None:
+        phases.extend("checkpoint", sup.checkpoint_s)
     out = {
         "engine": args.engine,
         "queries": args.queries,
@@ -366,8 +375,12 @@ def serve(args) -> dict:
             if steady
             else served / max(t_compile, 1e-9)
         ),
-        "p50_ms": float(np.percentile(lat, 50) * 1e3),
-        "p99_ms": float(np.percentile(lat, 99) * 1e3),
+        # flat p50/p99 keys kept for existing consumers; the full
+        # percentile set (incl. p999) is the shared `latency` block
+        "p50_ms": latency["p50_ms"],
+        "p99_ms": latency["p99_ms"],
+        "latency": latency,
+        "phases": phases.summary(),
         "steady_state": steady,
         "peak_diff_bytes": int(M["peak"]),
         "shards": session.num_shards,

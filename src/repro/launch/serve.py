@@ -1,80 +1,27 @@
-"""Serving driver: batched decode for LM archs / batched scoring for MIND.
+"""Deprecated shim — this module moved to :mod:`repro.launch.model_serve`.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
-        --batch 4 --prompt-len 16 --gen 8
+``launch/serve.py`` historically held the LM/MIND *model*-serving demo; the
+name now collides with the CQP serving tier, so the demo lives at
+``repro.launch.model_serve`` and this shim re-exports it with a
+``DeprecationWarning``.
+
+If you are looking for *continuous-query* serving — tenants, admission
+control, overload shedding over a :class:`~repro.core.session.CQPSession` —
+that is :mod:`repro.serving` (``python -m repro.serving.server``).
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import warnings
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.launch.model_serve import lm_serve, main, mind_serve  # noqa: F401
 
-from repro.configs import ARCH_NAMES, get_arch
-from repro.models import transformer as tf
-
-
-def lm_serve(arch, batch: int, prompt_len: int, gen: int) -> None:
-    cfg = arch.smoke()
-    params = tf.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)
-
-    decode = jax.jit(lambda p, c, t, pos: tf.decode_step(cfg, p, c, t, pos))
-    cache = tf.init_cache(cfg, batch, prompt_len + gen)
-
-    # prefill via decode loop (smoke scale); production uses prefill_32k cell
-    t0 = time.time()
-    tok = prompts[:, 0]
-    for t in range(prompt_len + gen - 1):
-        logits, cache = decode(params, cache, tok, jnp.full((batch,), t, jnp.int32))
-        if t + 1 < prompt_len:
-            tok = prompts[:, t + 1]
-        else:
-            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    jax.block_until_ready(logits)
-    dt = time.time() - t0
-    print(f"served {batch} seqs × {gen} new tokens in {dt:.2f}s "
-          f"({batch * gen / dt:.1f} tok/s, smoke config)")
-
-
-def mind_serve(arch, batch: int) -> None:
-    from repro.models.recsys import mind as m
-
-    cfg = arch.smoke()
-    params = m.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-    beh = jnp.asarray(rng.integers(0, cfg.num_items, (batch, cfg.seq_len)), jnp.int32)
-    valid = jnp.ones((batch, cfg.seq_len), bool)
-    cands = jnp.asarray(rng.integers(0, cfg.num_items, (batch, 64)), jnp.int32)
-    score = jax.jit(lambda p, b, v, c: m.serve_scores(cfg, p, b, v, c))
-    t0 = time.time()
-    s = score(params, beh, valid, cands)
-    jax.block_until_ready(s)
-    print(f"scored {batch}×64 candidates in {time.time() - t0:.3f}s; top: "
-          f"{np.asarray(jnp.argmax(s, -1))[:4]}")
-
-
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=ARCH_NAMES)
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=16)
-    ap.add_argument("--gen", type=int, default=8)
-    args = ap.parse_args()
-
-    arch = get_arch(args.arch)
-    if arch.family == "lm":
-        lm_serve(arch, args.batch, args.prompt_len, args.gen)
-    elif arch.family == "recsys":
-        mind_serve(arch, args.batch)
-    else:
-        raise SystemExit(f"{arch.name} has no serving path")
-
+warnings.warn(
+    "repro.launch.serve moved to repro.launch.model_serve (CQP query "
+    "serving lives in repro.serving)",
+    DeprecationWarning,
+    stacklevel=2,
+)
 
 if __name__ == "__main__":
     main()

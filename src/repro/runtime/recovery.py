@@ -61,10 +61,17 @@ class RecoverySupervisor:
         self.restores: list[dict] = []
 
     # ------------------------------------------------------------------ api
-    def checkpoint(self, session, next_chunk: int) -> None:
-        """Snapshot ``session`` with the log cursor ``next_chunk``."""
+    def checkpoint(
+        self, session, next_chunk: int, *, extra: dict | None = None
+    ) -> None:
+        """Snapshot ``session`` with the log cursor ``next_chunk``; ``extra``
+        entries ride along in the manifest meta (the serving tier stores its
+        tenant registry there)."""
         t0 = time.perf_counter()
-        arrays, meta = session.state_dict(extra={"next_chunk": int(next_chunk)})
+        user = {"next_chunk": int(next_chunk)}
+        if extra:
+            user.update(extra)
+        arrays, meta = session.state_dict(extra=user)
         self.checkpoint_bytes = sum(int(a.nbytes) for a in arrays.values())
         self.manager.save(next_chunk, arrays, meta=meta)
         self.checkpoint_s.append(time.perf_counter() - t0)
@@ -96,31 +103,43 @@ class RecoverySupervisor:
                 if every and k % every == 0:
                     self.checkpoint(session, k)
             except (InjectedFault, RuntimeError) as e:
-                self.restarts += 1
-                self.history.append(f"fault@{k}:{type(e).__name__}")
-                log.warning(
-                    "chunk %d failed (%s); restart %d", k, e, self.restarts
-                )
-                if self.restarts > self.policy.max_restarts:
-                    raise
-                if self.policy.backoff_s:
-                    time.sleep(self.policy.backoff_s)
-                self.manager.wait()  # never restore past an in-flight write
-                fault_chunk = k
-                t0 = time.perf_counter()
-                try:
-                    session, k = self.restore_fn(self.manager.directory)
-                except FileNotFoundError:
-                    # no checkpoint landed yet → rebuild from genesis
-                    session, k = self.restore_fn(None)
-                self.restores.append({
-                    "latency_s": time.perf_counter() - t0,
-                    "resumed_chunk": int(k),
-                    "replayed_chunks": int(fault_chunk - k),
-                })
-                self.history.append(f"resume@{k}")
+                self.record_fault(k, e)
+                session, k = self.restore_latest(fault_chunk=k)
         self.manager.wait()
         return session
+
+    def record_fault(self, chunk: int, exc: BaseException) -> None:
+        """Account one serving-loop fault; re-raises it once the restart
+        budget is spent, after sleeping the restart backoff otherwise."""
+        self.restarts += 1
+        self.history.append(f"fault@{chunk}:{type(exc).__name__}")
+        log.warning(
+            "chunk %d failed (%s); restart %d", chunk, exc, self.restarts
+        )
+        if self.restarts > self.policy.max_restarts:
+            raise exc
+        if self.policy.backoff_s:
+            time.sleep(self.policy.backoff_s)
+
+    def restore_latest(self, *, fault_chunk: int) -> tuple[object, int]:
+        """Rebuild via ``restore_fn`` from the latest on-disk checkpoint
+        (or genesis when none landed yet); returns (session, next_chunk).
+        The async serving tier calls this directly — its ingest loop is not
+        a static chunk list, so it cannot run under :meth:`run`."""
+        self.manager.wait()  # never restore past an in-flight write
+        t0 = time.perf_counter()
+        try:
+            session, k = self.restore_fn(self.manager.directory)
+        except FileNotFoundError:
+            # no checkpoint landed yet → rebuild from genesis
+            session, k = self.restore_fn(None)
+        self.restores.append({
+            "latency_s": time.perf_counter() - t0,
+            "resumed_chunk": int(k),
+            "replayed_chunks": int(fault_chunk - k),
+        })
+        self.history.append(f"resume@{k}")
+        return session, k
 
     def metrics(self) -> dict:
         """Recovery counters for ``session.stats()["runtime"]`` / reports."""

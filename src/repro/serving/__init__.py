@@ -1,0 +1,69 @@
+"""Async multi-tenant CQP serving tier (DESIGN.md §14).
+
+A long-running asyncio front end over :class:`repro.core.session.CQPSession`:
+
+* :mod:`repro.serving.server` — the ingest loop (batched δE folds through
+  ``apply_updates_batched``) with snapshot-consistent epoch reads, wired to
+  the recovery supervisor, straggler detector, and checkpoint/restore;
+* :mod:`repro.serving.tenants` — per-tenant registries: query tickets,
+  isolated governor byte budgets, and rate quotas;
+* :mod:`repro.serving.admission` — SLO-based admission control with a
+  graceful-degradation ladder (degrade low-priority tenants before
+  rejecting anyone);
+* :mod:`repro.serving.loadgen` — multi-tenant open-loop load generator;
+* :mod:`repro.serving.metrics` — shared latency/percentile reporting.
+"""
+
+# Lazy re-exports (PEP 562): importing `repro.serving.metrics` or
+# `.tenants` must NOT pull in `.server` (whose CQPSession import
+# initializes jax — launch drivers with --emulate-devices import the
+# light modules before the backend may exist).
+import importlib
+
+_EXPORTS = {
+    "AdmissionController": "admission",
+    "AdmissionRejected": "admission",
+    "Decision": "admission",
+    "SLOConfig": "admission",
+    "PhaseRecorder": "metrics",
+    "summarize_latency_s": "metrics",
+    "CQPServer": "server",
+    "ReadResult": "server",
+    "ServerConfig": "server",
+    "SubmitResult": "server",
+    "build_serving_session": "server",
+    "QueryTicket": "tenants",
+    "TenantRegistry": "tenants",
+    "TenantSpec": "tenants",
+}
+
+
+def __getattr__(name: str):
+    if name in _EXPORTS:
+        module = importlib.import_module(f"repro.serving.{_EXPORTS[name]}")
+        value = getattr(module, name)
+        globals()[name] = value
+        return value
+    raise AttributeError(f"module 'repro.serving' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))
+
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionRejected",
+    "CQPServer",
+    "Decision",
+    "PhaseRecorder",
+    "QueryTicket",
+    "ReadResult",
+    "SLOConfig",
+    "ServerConfig",
+    "SubmitResult",
+    "TenantRegistry",
+    "TenantSpec",
+    "build_serving_session",
+    "summarize_latency_s",
+]

@@ -1,0 +1,477 @@
+"""Async multi-tenant serving tier: epoch reads, tenancy, admission, SLOs.
+
+No pytest-asyncio in the image — every test drives its own loop through
+``asyncio.run``.  Host engine throughout (fast, jit-free); the dense-engine
+serving path is exercised by the CI serving smoke
+(``python -m repro.serving.server``).
+"""
+
+from __future__ import annotations
+
+import asyncio
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import plan as qp
+from repro.core.governor import GovernorConfig
+from repro.core.graph import DynamicGraph
+from repro.core.session import CQPSession
+from repro.data.graphgen import powerlaw_graph, split_90_10
+from repro.runtime.fault import InjectedFault
+from repro.serving.admission import AdmissionRejected, SLOConfig
+from repro.serving.loadgen import tenant_update_streams
+from repro.serving.server import CQPServer, ServerConfig, build_serving_session
+from repro.serving.tenants import TenantSpec
+
+V, E, BATCH, MAX_ITERS = 64, 256, 8, 16
+LADDER = GovernorConfig(representation="prob")
+
+
+def _workload(tenants: int = 2, num_batches: int = 6, seed: int = 0):
+    edges = powerlaw_graph(V, E, seed=seed)
+    initial, pool = split_90_10(edges, seed=seed)
+    streams = tenant_update_streams(
+        initial, V, tenants, num_batches=num_batches, batch_size=BATCH,
+        delete_fraction=0.1, insert_pool=pool, seed=seed + 1,
+    )
+    return initial, streams
+
+
+def _graph(initial) -> DynamicGraph:
+    return DynamicGraph(V, initial, capacity=len(initial) * 8 + 1024)
+
+
+def _server(initial, *, config=None, **kw) -> CQPServer:
+    session = build_serving_session(_graph(initial), ladder=LADDER, engine="host")
+    return CQPServer(
+        session,
+        config=config
+        or ServerConfig(chunk_updates=BATCH, drop_ladder=LADDER),
+        **kw,
+    )
+
+
+def _oracle_answers(initial, plans, applied):
+    oracle = CQPSession(_graph(initial), engine="scratch")
+    handles = [oracle.register(p) for p in plans]
+    if applied:
+        oracle.apply_updates_batched(applied)
+    return [np.asarray(oracle.answers(h)) for h in handles]
+
+
+# ------------------------------------------------------------------ reads
+def test_read_your_writes_and_epoch_snapshot_consistency():
+    """Every read is fresh (covers the tenant's admitted writes) and serves
+    values equal to a scratch replay of exactly its covered prefix — no
+    read ever observes a half-applied chunk."""
+    initial, streams = _workload()
+    plans = [qp.sssp(0, max_iters=MAX_ITERS), qp.sssp(7, max_iters=MAX_ITERS)]
+
+    async def run():
+        server = _server(initial)
+        reads = []
+        async with server:
+            tickets = {}
+            for i, tid in enumerate(sorted(streams)):
+                server.add_tenant(TenantSpec(tenant_id=tid, priority=i + 1))
+                tickets[tid] = await server.register_query(tid, plans[i])
+            for round_batches in zip(*(streams[t] for t in sorted(streams))):
+                for tid, batch in zip(sorted(streams), round_batches):
+                    res = server.submit(tid, batch)
+                    assert res.admitted
+                    r = await server.read(tickets[tid], timeout_s=30.0)
+                    assert r.fresh and r.covered >= res.watermark
+                    reads.append((tid, r))
+            await server.drain()
+            chunk_log = [list(c) for c in server._chunk_log]
+            ticket_index = {tid: i for i, tid in enumerate(sorted(streams))}
+        return reads, chunk_log, ticket_index
+
+    reads, chunk_log, ticket_index = asyncio.run(run())
+    assert reads
+    # replay the applied log from scratch; check each read at its prefix
+    prefixes = sorted({r.covered for _, r in reads})
+    at = {}
+    flat = []
+    covered = 0
+    for chunk in chunk_log:
+        flat.extend(chunk)
+        covered += len(chunk)
+        if covered in prefixes:
+            at[covered] = flat[:]
+    plans = [qp.sssp(0, max_iters=MAX_ITERS), qp.sssp(7, max_iters=MAX_ITERS)]
+    for tid, r in reads:
+        want = _oracle_answers(initial, plans, at[r.covered])[ticket_index[tid]]
+        np.testing.assert_array_equal(np.asarray(r.values), want)
+
+
+# ---------------------------------------------------------------- admission
+def test_rate_quota_rejects_and_recovers():
+    """A tenant's token bucket rejects beyond its quota; the co-tenant with
+    no quota is untouched; rejected submissions do not advance the
+    watermark."""
+    initial, streams = _workload()
+
+    async def run():
+        server = _server(initial)
+        async with server:
+            server.add_tenant(
+                TenantSpec(tenant_id="limited", rate_per_s=1.0, burst=BATCH)
+            )
+            server.add_tenant(TenantSpec(tenant_id="free"))
+            t_lim = await server.register_query(
+                "limited", qp.sssp(0, max_iters=MAX_ITERS)
+            )
+            await server.register_query("free", qp.sssp(1, max_iters=MAX_ITERS))
+            batches = streams["tenant0"]
+            first = server.submit("limited", batches[0])  # burst covers this
+            second = server.submit("limited", batches[1])  # bucket empty
+            free = server.submit("free", batches[2])
+            await server.drain()
+            r = await server.read(t_lim, timeout_s=30.0)
+            stats = server.stats()
+        assert first.admitted
+        assert not second.admitted and second.reason == "rate quota"
+        assert second.watermark == first.watermark  # rejected ≠ watermark
+        assert free.admitted
+        assert r.fresh
+        assert stats["tenants"]["limited"]["rejected_updates"] == len(batches[1])
+        assert stats["tenants"]["free"]["rejected_updates"] == 0
+
+    asyncio.run(run())
+
+
+def test_overload_degrades_every_rung_before_first_shed_rejection():
+    """The admission ladder: an overloaded tier degrades one rung per epoch
+    until every tenant sits at the top rung, and only then starts rejecting
+    submissions — the action log shows the full ladder before the first
+    'overload shed'."""
+    initial, streams = _workload()
+    # backlog_high_updates=0: any queued update marks the tier overloaded
+    cfg = ServerConfig(
+        chunk_updates=BATCH,
+        drop_ladder=LADDER,
+        slo=SLOConfig(backlog_high_updates=0, cooldown_epochs=10**6),
+    )
+
+    async def run():
+        server = _server(initial, config=cfg)
+        rungs_total = LADDER.top_level * 2  # 2 tenants
+        async with server:
+            for i, tid in enumerate(sorted(streams)):
+                server.add_tenant(TenantSpec(tenant_id=tid, priority=i + 1))
+                await server.register_query(
+                    tid, qp.sssp(i, max_iters=MAX_ITERS)
+                )
+            rejected = []
+            k = 0
+            all_batches = [b for t in sorted(streams) for b in streams[t]]
+            while len(rejected) == 0 and k < 500:
+                # several batches per round so the loop still sees a backlog
+                # when it observes the epoch (one chunk is popped first)
+                for _ in range(4):
+                    res = server.submit(
+                        "tenant0", all_batches[k % len(all_batches)]
+                    )
+                    if not res.admitted:
+                        rejected.append(res)
+                    k += 1
+                # yield so the ingest loop can fold chunks and run epochs
+                await asyncio.sleep(0.001)
+            await server.drain()
+            stats = server.stats()
+        assert rejected and rejected[0].reason == "overload shed"
+        # shedding only engages once next_degradable() is exhausted, so the
+        # action log must show the full ladder before the first rejection
+        # (cooldown is effectively infinite — no restores muddy the count)
+        degrades = [a for a in stats["actions"] if a["kind"] == "degrade"]
+        assert len(degrades) == rungs_total
+        assert not any(a["kind"] == "restore" for a in stats["actions"])
+        # low priority (tenant0) degraded strictly before the co-tenant
+        first_t1 = next(
+            i for i, a in enumerate(degrades) if a["tenant"] == "tenant1"
+        )
+        assert all(a["tenant"] == "tenant0" for a in degrades[:first_t1])
+
+    asyncio.run(run())
+
+
+def test_register_rejected_while_shedding_raises():
+    initial, _ = _workload()
+
+    async def run():
+        server = _server(initial)
+        async with server:
+            server.add_tenant(TenantSpec(tenant_id="t"))
+            server.admission.shedding = True
+            with pytest.raises(AdmissionRejected):
+                await server.register_query(
+                    "t", qp.sssp(0, max_iters=MAX_ITERS)
+                )
+            server.admission.shedding = False
+            ticket = await server.register_query(
+                "t", qp.sssp(0, max_iters=MAX_ITERS)
+            )
+            r = await server.read(ticket, timeout_s=30.0)
+            assert r.fresh
+
+    asyncio.run(run())
+
+
+# ------------------------------------------------------------------ budgets
+def test_tenant_budget_isolation():
+    """A tenant blowing its own byte budget degrades down the ladder; the
+    co-tenant with no budget stays at level 0 (isolation)."""
+    initial, streams = _workload(num_batches=8)
+    # neutralize the admission-overload path entirely: the only ladder
+    # actions left are per-tenant budget enforcement
+    cfg = ServerConfig(
+        chunk_updates=BATCH,
+        drop_ladder=LADDER,
+        slo=SLOConfig(backlog_high_updates=10**9, cooldown_epochs=10**9),
+    )
+
+    async def run():
+        server = _server(initial, config=cfg)
+        async with server:
+            server.add_tenant(TenantSpec(tenant_id="tenant0", budget_bytes=64))
+            server.add_tenant(TenantSpec(tenant_id="tenant1"))
+            for tid in sorted(streams):
+                await server.register_query(
+                    tid, qp.sssp(0 if tid == "tenant0" else 1,
+                                 max_iters=MAX_ITERS)
+                )
+            for t0_batch, t1_batch in zip(
+                streams["tenant0"], streams["tenant1"]
+            ):
+                server.submit("tenant0", t0_batch)
+                server.submit("tenant1", t1_batch)
+            await server.drain()
+            stats = server.stats()
+        assert stats["tenants"]["tenant0"]["level"] > 0
+        assert stats["tenants"]["tenant1"]["level"] == 0
+        budget_actions = [
+            a for a in stats["actions"] if a["reason"] == "tenant budget"
+        ]
+        assert budget_actions
+        assert all(a["tenant"] == "tenant0" for a in budget_actions)
+
+    asyncio.run(run())
+
+
+# -------------------------------------------------------------- overload SLO
+def test_overload_admission_keeps_reads_fresh_and_exact():
+    """The ISSUE acceptance shape, scaled down: under sustained 2× overload
+    the admitted run sheds work, keeps steady-state reads fresh, and serves
+    exact answers; the no-admission control run lets the backlog grow
+    without bound and its late reads blow the read-your-writes barrier."""
+    rounds = 40
+    initial, streams = _workload(tenants=3, num_batches=rounds)
+    pace_s = 0.01  # floor on chunk time → service ≤ BATCH/pace_s updates/s
+    round_gap_s = 0.015  # 3·BATCH updates per round → offered ≈ 2× service
+    read_timeout_s = 0.15
+
+    def make_cfg(admission: bool) -> ServerConfig:
+        return ServerConfig(
+            chunk_updates=BATCH,
+            admission=admission,
+            read_timeout_s=read_timeout_s,
+            drop_ladder=LADDER,
+            slo=SLOConfig(backlog_high_updates=BATCH, cooldown_epochs=10**6),
+        )
+
+    async def run(admission: bool):
+        server = _server(
+            initial,
+            config=make_cfg(admission),
+            delay_injector=lambda k: pace_s,
+        )
+        plans = {}
+        round_reads: list[dict] = []
+        async with server:
+            tickets = {}
+            for i, tid in enumerate(sorted(streams)):
+                server.add_tenant(TenantSpec(tenant_id=tid, priority=i + 1))
+                plans[tid] = qp.sssp(i * 11, max_iters=MAX_ITERS)
+                tickets[tid] = await server.register_query(tid, plans[tid])
+
+            async def read_back(rnd: int, tid: str) -> None:
+                r = await server.read(tickets[tid])
+                round_reads.append(
+                    {"round": rnd, "tenant": tid, "fresh": r.fresh}
+                )
+
+            # open-loop: reads run as concurrent tasks so they never gate
+            # the next round's submissions (the closed-loop trap)
+            tasks = []
+            for rnd, round_batches in enumerate(
+                zip(*(streams[t] for t in sorted(streams)))
+            ):
+                for tid, batch in zip(sorted(streams), round_batches):
+                    server.submit(tid, batch)
+                    tasks.append(
+                        asyncio.ensure_future(read_back(rnd, tid))
+                    )
+                await asyncio.sleep(round_gap_s)
+            await asyncio.gather(*tasks)
+            stats = server.stats()
+            await server.drain()
+            final = {
+                tid: await server.read(t, timeout_s=30.0)
+                for tid, t in tickets.items()
+            }
+            applied = server.applied_updates()
+        return round_reads, final, stats, applied, plans
+
+    round_reads, final, stats, applied, plans = asyncio.run(run(True))
+    # admission shed work and kept the steady-state backlog bounded: every
+    # read in the last quarter of the run is fresh
+    assert stats["admission"]["rejected_updates"] > 0
+    steady = [r for r in round_reads if r["round"] >= 3 * rounds // 4]
+    assert steady and all(r["fresh"] for r in steady)
+    # ...and every served answer is exact despite the degradation ladder
+    order = sorted(final)
+    oracle = _oracle_answers(initial, [plans[t] for t in order], applied)
+    for tid, want in zip(order, oracle):
+        assert final[tid].fresh
+        np.testing.assert_array_equal(np.asarray(final[tid].values), want)
+
+    control_reads, _, control_stats, _, _ = asyncio.run(run(False))
+    # the control run admits everything; its late reads go stale
+    assert control_stats["admission"]["rejected_updates"] == 0
+    control_steady = [
+        r for r in control_reads if r["round"] >= 3 * rounds // 4
+    ]
+    assert any(not r["fresh"] for r in control_steady)
+
+
+# ----------------------------------------------------------------- recovery
+def test_fault_recovery_preserves_tenants_genesis():
+    """A mid-stream engine fault with no checkpoint on disk rebuilds from
+    genesis, replays the applied log, and keeps every tenant's ticket live —
+    answers match an uninterrupted run exactly."""
+    initial, streams = _workload()
+    plans = {"tenant0": qp.sssp(0, max_iters=MAX_ITERS),
+             "tenant1": qp.sssp(3, max_iters=MAX_ITERS)}
+
+    def factory() -> CQPSession:
+        return build_serving_session(_graph(initial), ladder=LADDER, engine="host")
+
+    fired = {"done": False}
+
+    def injector(k: int) -> None:
+        if k == 2 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("scripted fault at chunk 2")
+
+    async def run(with_fault: bool):
+        server = CQPServer(
+            factory(),
+            config=ServerConfig(chunk_updates=BATCH, drop_ladder=LADDER),
+            session_factory=factory,
+            fault_injector=injector if with_fault else None,
+        )
+        async with server:
+            tickets = {}
+            for i, tid in enumerate(sorted(streams)):
+                server.add_tenant(TenantSpec(tenant_id=tid))
+                tickets[tid] = await server.register_query(tid, plans[tid])
+            for round_batches in zip(*(streams[t] for t in sorted(streams))):
+                for tid, batch in zip(sorted(streams), round_batches):
+                    server.submit(tid, batch)
+            await server.drain()
+            reads = {
+                tid: await server.read(t, timeout_s=30.0)
+                for tid, t in tickets.items()
+            }
+            stats = server.stats()
+        return reads, stats
+
+    fired["done"] = False
+    faulted, f_stats = asyncio.run(run(with_fault=True))
+    clean, c_stats = asyncio.run(run(with_fault=False))
+    assert f_stats["faults"] == 1 and c_stats["faults"] == 0
+    assert f_stats["covered_updates"] == c_stats["covered_updates"]
+    for tid in faulted:
+        assert faulted[tid].fresh
+        np.testing.assert_array_equal(
+            np.asarray(faulted[tid].values), np.asarray(clean[tid].values)
+        )
+
+
+def test_fault_recovery_restores_checkpoint(tmp_path):
+    """With a checkpoint on disk the recovery path restores it and replays
+    only the post-checkpoint suffix — tenants, tickets, and exactness all
+    survive."""
+    initial, streams = _workload()
+    plans = {"tenant0": qp.sssp(0, max_iters=MAX_ITERS),
+             "tenant1": qp.sssp(3, max_iters=MAX_ITERS)}
+
+    def factory() -> CQPSession:
+        return build_serving_session(_graph(initial), ladder=LADDER, engine="host")
+
+    fired = {"done": False}
+
+    def injector(k: int) -> None:
+        if k == 3 and not fired["done"]:
+            fired["done"] = True
+            raise InjectedFault("scripted fault at chunk 3")
+
+    async def run():
+        server = CQPServer(
+            factory(),
+            config=ServerConfig(
+                chunk_updates=BATCH, drop_ladder=LADDER,
+                checkpoint_every=2,
+            ),
+            session_factory=factory,
+            checkpoint_dir=str(tmp_path),
+            fault_injector=injector,
+        )
+        async with server:
+            tickets = {}
+            for i, tid in enumerate(sorted(streams)):
+                server.add_tenant(TenantSpec(tenant_id=tid))
+                tickets[tid] = await server.register_query(tid, plans[tid])
+            for round_batches in zip(*(streams[t] for t in sorted(streams))):
+                for tid, batch in zip(sorted(streams), round_batches):
+                    server.submit(tid, batch)
+            await server.drain()
+            reads = {
+                tid: await server.read(t, timeout_s=30.0)
+                for tid, t in tickets.items()
+            }
+            stats = server.stats()
+            applied = server.applied_updates()
+        return reads, stats, applied
+
+    reads, stats, applied = asyncio.run(run())
+    assert stats["faults"] == 1
+    assert len(stats["recovery"]["restores"]) == 1
+    order = sorted(reads)
+    oracle = _oracle_answers(initial, [plans[t] for t in order], applied)
+    for tid, want in zip(order, oracle):
+        assert reads[tid].fresh
+        np.testing.assert_array_equal(np.asarray(reads[tid].values), want)
+
+
+# ---------------------------------------------------------------------- CLI
+def test_cli_smoke_subprocess():
+    """``python -m repro.serving.server --smoke`` is the CI entry point —
+    it must exit 0 and report ok/exact on the host engine."""
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.serving.server", "--smoke",
+         "--tenants", "2", "--engine", "host", "--updates", "48"],
+        capture_output=True, text=True, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    line = next(
+        ln for ln in proc.stdout.splitlines()
+        if ln.startswith("serving smoke JSON:")
+    )
+    summary = json.loads(line.split("serving smoke JSON:", 1)[1])
+    assert summary["ok"] and summary["exact"]

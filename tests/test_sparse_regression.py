@@ -1,0 +1,27 @@
+"""Deterministic SparseDiffIFE regressions (no hypothesis dependency —
+``tests/test_sparse_and_access.py`` skips entirely when the property-test
+stack is absent, so pinned-workload regressions live here)."""
+
+from repro.core.graph import DynamicGraph
+from repro.core.sparse_engine import SparseDiffIFE
+
+
+def test_sparse_delete_reconverges_through_late_change_points():
+    """Regression: a deletion raises a vertex transitively, but an
+    alternative derivation through a neighbour whose change point settles at
+    a LATER iteration restores the lower value.  The sweep must keep every
+    touched vertex scheduled through the trace horizon (retractions are not
+    monotone) — dropping it at its first unchanged iteration leaves the
+    raised value behind."""
+    # d(9) = 9 two ways: the 2-hop 0→7→9 (settles at iteration 2) and the
+    # 7-hop chain 0→1→…→6→9 (settles at iteration 7); 0→8→9 is a 10 decoy.
+    edges = [
+        (0, 1, 3.0), (1, 2, 1.0), (2, 3, 1.0), (3, 4, 1.0), (4, 5, 1.0),
+        (5, 6, 1.0), (6, 9, 1.0),
+        (0, 7, 8.0), (7, 9, 1.0),
+        (0, 8, 9.0), (8, 9, 1.0),
+    ]
+    eng = SparseDiffIFE(DynamicGraph(10, edges, capacity=64), [0], max_iters=16)
+    assert eng.answers()[0][9] == 9.0
+    eng.apply_updates([(0, 7, 0, 8.0, -1)])  # kill the early 9-path
+    assert eng.answers()[0][9] == 9.0, eng.answers()[0]
