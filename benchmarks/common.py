@@ -71,6 +71,8 @@ def run_stream_stats(system, stream):
     tot = {}
     def acc(st):
         for k, v in st._asdict().items():
+            if getattr(v, "ndim", 0):  # per-iteration probe vectors
+                continue
             tot[k] = tot.get(k, 0) + int(v)
     if getattr(system, "last_stats", None) is not None:
         acc(system.last_stats)  # the initial computation sweep

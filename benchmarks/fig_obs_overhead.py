@@ -1,0 +1,111 @@
+"""Observability overhead: tracing-enabled vs tracing-off serving throughput.
+
+Not a paper figure — the acceptance gate for the unified observability layer
+(DESIGN.md §15).  The tracer's disabled path must be a no-op (a module-level
+null-span singleton, no allocation), and the *enabled* path must stay cheap
+enough to leave on in production: a bounded ring-buffer append per span, a
+few spans per streamed chunk.  This benchmark streams one fixed update log
+through the dense engine's batched step repeatedly, alternating the tracer
+off/on between passes, and compares best-of-N updates/sec per mode.
+
+The run FAILS (non-zero exit) if enabling tracing costs more than
+``MAX_OVERHEAD_FRAC`` (5%) of throughput — the bound the ISSUE/DESIGN
+overhead budget promises.  ``--smoke`` shrinks the workload for CI; the
+assertion still runs.  The closing line is a JSON summary::
+
+    fig_obs_overhead JSON: {"updates_per_sec_off": ..., "updates_per_sec_on":
+        ..., "overhead_frac": ..., "max_overhead_frac": 0.05, "ok": true, ...}
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+from benchmarks.common import emit, paper_workload
+from repro.core import queries as q
+from repro.core.graph import DynamicGraph
+from repro.obs import trace as obs_trace
+
+MAX_OVERHEAD_FRAC = 0.05
+
+
+def _timed_pass(eng, log, b: int) -> float:
+    """One pass of the log through the batched step; returns seconds."""
+    t0 = time.perf_counter()
+    eng.apply_updates_batched(log, batch_size=b)
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    smoke = "--smoke" in sys.argv[1:]
+    v = 64 if smoke else 256
+    e = 256 if smoke else 1024
+    b = 8 if smoke else 16
+    num_batches = 12 if smoke else 40
+    initial, stream = paper_workload(
+        v=v, e=e, num_batches=num_batches, batch_size=b,
+        delete_fraction=0.2, seed=11,
+    )
+    log = [u for batch in stream for u in batch]
+
+    eng = q.sssp(
+        DynamicGraph(v, initial, capacity=len(initial) * 4 + 64),
+        [0, 1, 2, 3],
+        max_iters=16 if smoke else 32,
+        backend="coo",  # machine-neutral: compiled on CPU and TPU alike
+        batch_capacity=b,
+    )
+    eng.apply_updates_batched(log[:b], batch_size=b)  # compile warmup
+    rest = log[b:]
+
+    # alternate modes symmetrically (off,on,on,off,off,on) so graph-state
+    # drift across passes hits both modes equally; best-of-N denoises
+    tracer = obs_trace.Tracer()  # bounded ring buffer, default capacity
+    prev = obs_trace.get_tracer()
+    obs_trace.set_tracer(None)  # make sure we start from the null path
+    times = {"off": [], "on": []}
+    try:
+        for mode in ("off", "on", "on", "off", "off", "on"):
+            obs_trace.set_tracer(tracer if mode == "on" else None)
+            times[mode].append(_timed_pass(eng, rest, b))
+    finally:
+        obs_trace.set_tracer(prev)
+
+    t_off, t_on = min(times["off"]), min(times["on"])
+    ups_off, ups_on = len(rest) / t_off, len(rest) / t_on
+    overhead = max(0.0, (ups_off - ups_on) / ups_off)
+    emit(
+        "fig_obs_overhead/tracing_off",
+        t_off * 1e6 / len(rest),
+        f"upd_per_s={ups_off:.1f}",
+    )
+    emit(
+        "fig_obs_overhead/tracing_on",
+        t_on * 1e6 / len(rest),
+        f"upd_per_s={ups_on:.1f};overhead_frac={overhead:.4f};"
+        f"events={tracer.emitted_events}",
+    )
+    summary = {
+        "smoke": smoke,
+        "updates": len(rest),
+        "passes_per_mode": len(times["off"]),
+        "updates_per_sec_off": round(ups_off, 1),
+        "updates_per_sec_on": round(ups_on, 1),
+        "overhead_frac": round(overhead, 4),
+        "max_overhead_frac": MAX_OVERHEAD_FRAC,
+        "trace_events": tracer.emitted_events,
+        "ok": overhead <= MAX_OVERHEAD_FRAC,
+    }
+    print("fig_obs_overhead JSON:", json.dumps(summary))
+    assert tracer.emitted_events > 0, "tracing-on passes emitted no spans"
+    assert summary["ok"], (
+        f"tracing overhead {overhead:.1%} exceeds the "
+        f"{MAX_OVERHEAD_FRAC:.0%} budget "
+        f"({ups_off:.1f} -> {ups_on:.1f} updates/sec)"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.fig_shard_scaling",
     "benchmarks.fig_recovery",
     "benchmarks.fig_serving_slo",
+    "benchmarks.fig_obs_overhead",
 ]
 
 

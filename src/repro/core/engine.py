@@ -66,6 +66,7 @@ from repro.core.graph import (
 )
 from repro.core.semiring import Semiring, reduce_pair
 from repro.kernels.ell_spmv import ell_spmv
+from repro.obs import trace as obs_trace
 
 # module (not name) import: kernels/fused_sweep.py imports repro.core for the
 # diff-store/dropping primitives it runs in-kernel, so importing the *name*
@@ -177,6 +178,12 @@ class EngineState(NamedTuple):
     # the engine carries a J store for its neighbours
 
 
+# Per-iteration probe depth: sweep iterations beyond this fold into the last
+# bin.  Bounded so the stats pytree keeps a fixed shape inside the while_loop
+# (one jit cache entry) and the host-side export stays O(1) per sweep.
+ITER_TRACE = 32
+
+
 class MaintainStats(NamedTuple):
     iters_run: Array  # int32
     scheduled: Array  # int32 — Σ|sched_i| (algorithmic work, vertex reruns)
@@ -189,11 +196,20 @@ class MaintainStats(NamedTuple):
     det_overflow: Array  # int32 — dropped VT records lost to Det-Drop store
     # evictions THIS sweep: each one is a (v, i) the engine can no longer
     # repair on access, so a nonzero value flags answers at risk of staleness
+    sched_sizes: Array  # int32 [ITER_TRACE] — |sched_i| per iteration
+    frontier_sizes: Array  # int32 [ITER_TRACE] — |frontier_{i+1}| per iteration
+
+    SCALAR_FIELDS = (
+        "iters_run", "scheduled", "changed", "repairs", "written",
+        "removed", "dropped", "jwritten", "det_overflow",
+    )
+    VECTOR_FIELDS = ("sched_sizes", "frontier_sizes")
 
 
 def zeros_stats() -> MaintainStats:
     z = jnp.zeros((), jnp.int32)
-    return MaintainStats(z, z, z, z, z, z, z, z, z)
+    t = jnp.zeros((ITER_TRACE,), jnp.int32)
+    return MaintainStats(z, z, z, z, z, z, z, z, z, t, t)
 
 
 # --------------------------------------------------------------------------- IFE primitives
@@ -635,6 +651,9 @@ def _sweep_body(
         push_frontier(changed_full, g, dst=dst, num_segments=num_local) | changed
     )  # | changed: carry a changed vertex's own next value
 
+    # per-iteration probe: iteration i lands in bin i-1 (clamped to the last
+    # bin) so short sweeps read directly as a size-per-iteration series
+    bin_i = jnp.minimum(i - 1, jnp.int32(ITER_TRACE - 1))
     stats = MaintainStats(
         iters_run=c.stats.iters_run + 1,
         scheduled=c.stats.scheduled + sched.sum(dtype=jnp.int32),
@@ -645,6 +664,12 @@ def _sweep_body(
         dropped=c.stats.dropped + to_drop.sum(dtype=jnp.int32),
         jwritten=jwritten,
         det_overflow=c.stats.det_overflow,  # folded in after the loop
+        sched_sizes=c.stats.sched_sizes.at[bin_i].add(
+            sched.sum(dtype=jnp.int32)
+        ),
+        frontier_sizes=c.stats.frontier_sizes.at[bin_i].add(
+            frontier_next.sum(dtype=jnp.int32)
+        ),
     )
     any_store = to_store.any()
     live_next = frontier_next.any() | dirty.any()
@@ -764,6 +789,8 @@ def _maintain_core(
             removed=jax.lax.psum(stats.removed, axis),
             dropped=jax.lax.psum(stats.dropped, axis),
             jwritten=jax.lax.psum(stats.jwritten, axis),
+            sched_sizes=jax.lax.psum(stats.sched_sizes, axis),
+            frontier_sizes=jax.lax.psum(stats.frontier_sizes, axis),
         )
     # Det-Drop record loss this sweep (replicated in sharded mode: the body
     # psums the per-shard eviction deltas into the carried counter).
@@ -1167,6 +1194,18 @@ def _sum_stats(a: MaintainStats, b: MaintainStats) -> MaintainStats:
     return MaintainStats(*(x + y for x, y in zip(a, b)))
 
 
+def _span_stats(stats: MaintainStats | None) -> dict:
+    """Sweep attribution for trace spans: scalar counters plus the
+    per-iteration size series trimmed to the iterations actually run."""
+    if stats is None:
+        return {}
+    out = {k: int(getattr(stats, k)) for k in MaintainStats.SCALAR_FIELDS}
+    n = min(max(out["iters_run"], 0), ITER_TRACE)
+    out["sched_sizes"] = [int(x) for x in stats.sched_sizes[:n]]
+    out["frontier_sizes"] = [int(x) for x in stats.frontier_sizes[:n]]
+    return out
+
+
 # --------------------------------------------------------------------------- host-facing wrapper
 class DiffIFE:
     """Continuous-query processor: owns the dynamic graph + engine state.
@@ -1383,22 +1422,29 @@ class DiffIFE:
     # ------------------------------------------------------------- ingestion
     def apply_updates(self, updates) -> MaintainStats:
         """Ingest one δE batch and maintain all registered queries."""
-        ops = self.graph.apply_batch_resolved(updates)
-        snap = self.graph.snapshot()
-        if self.num_shards > 1:
-            self._shard_sync(ops, snap)  # keep cell assignments stable (VDC)
-        self.g = self._device_graph(snap)
-        touched = [(u, v) for (_k, _s, u, v, _w) in ops]
-        self._run_counted(self._dirty_mask(touched, snap))
+        with obs_trace.span(
+            "sweep", "sweep", pid="engine:dense", shards=self.num_shards
+        ) as sp:
+            ops = self.graph.apply_batch_resolved(updates)
+            snap = self.graph.snapshot()
+            if self.num_shards > 1:
+                self._shard_sync(ops, snap)  # keep cells stable (VDC)
+            self.g = self._device_graph(snap)
+            touched = [(u, v) for (_k, _s, u, v, _w) in ops]
+            self._run_counted(self._dirty_mask(touched, snap))
+            sp.set(num_updates=len(ops), **_span_stats(self.last_stats))
         return self.last_stats
 
     def _full_sweep_fallback(self, ops, total: MaintainStats) -> MaintainStats:
         """Re-upload the full device graph and run one host-path sweep (the
         once-per-growth escape hatch of the batched stream)."""
-        snap = self.graph.snapshot()
-        self.g = self._device_graph(snap)
-        touched = [(u, v) for (_k, _s, u, v, _w) in ops]
-        self._run(self._dirty_mask(touched, snap))
+        with obs_trace.span(
+            "full_sweep_fallback", "sweep", pid="engine:dense", num_ops=len(ops)
+        ):
+            snap = self.graph.snapshot()
+            self.g = self._device_graph(snap)
+            touched = [(u, v) for (_k, _s, u, v, _w) in ops]
+            self._run(self._dirty_mask(touched, snap))
         return _sum_stats(total, self.last_stats)
 
     def apply_updates_batched(
@@ -1414,33 +1460,60 @@ class DiffIFE:
         b = int(batch_size if batch_size is not None else self.batch_capacity)
         updates = list(updates)
         total = zeros_stats()
-        for lo in range(0, len(updates), b):
-            ops = self.graph.apply_batch_resolved(updates[lo : lo + b])
-            if not ops:
-                continue
-            shard_writes = None
-            if self.num_shards > 1:
-                shard_writes = self._shard_sync(ops)
-                if shard_writes is None:
-                    # a shard's cells overflowed: layout regrown (jstore rows
-                    # permuted), one full-view sweep for this chunk
-                    total = self._full_sweep_fallback(ops, total)
+        with obs_trace.span(
+            "update_batch",
+            "update_batch",
+            pid="engine:dense",
+            num_updates=len(updates),
+            chunk_size=b,
+            shards=self.num_shards,
+        ) as outer:
+            for lo in range(0, len(updates), b):
+                ops = self.graph.apply_batch_resolved(updates[lo : lo + b])
+                if not ops:
                     continue
-            ell_writes: list = []
-            if self.cfg.backend in ("ell", "fused"):
-                try:
-                    ell_writes = self._ell_index.writes_for(ops)
-                except EllOverflow:
-                    # a vertex outran the fixed D: grow geometrically and fall
-                    # back to a full-view sweep for this chunk (one re-trace)
-                    self._ell_width = max(8, self._ell_width * 2)
-                    total = self._full_sweep_fallback(ops, total)
-                    continue
-            upd = self._encode_chunk(ops, ell_writes, b, shard_writes)
-            self.state, self.g, stats = self._step(self.state, self.g, upd)
-            # accumulate on device — one host sync per log, not per chunk
-            total = _sum_stats(total, stats)
-        self.last_stats = jax.tree.map(jax.device_get, total)
+                shard_writes = None
+                if self.num_shards > 1:
+                    shard_writes = self._shard_sync(ops)
+                    if shard_writes is None:
+                        # a shard's cells overflowed: layout regrown (jstore
+                        # rows permuted), one full-view sweep for this chunk
+                        total = self._full_sweep_fallback(ops, total)
+                        continue
+                ell_writes: list = []
+                if self.cfg.backend in ("ell", "fused"):
+                    try:
+                        ell_writes = self._ell_index.writes_for(ops)
+                    except EllOverflow:
+                        # a vertex outran the fixed D: grow geometrically and
+                        # fall back to a full-view sweep (one re-trace)
+                        self._ell_width = max(8, self._ell_width * 2)
+                        total = self._full_sweep_fallback(ops, total)
+                        continue
+                upd = self._encode_chunk(ops, ell_writes, b, shard_writes)
+                # the sweep span covers one chunk's maintenance sweep; the
+                # nested dispatch span is the jitted call itself.  Per-chunk
+                # stats stay on device (one host sync per log) — the outer
+                # update_batch span carries the cumulative counters.
+                with obs_trace.span(
+                    "sweep", "sweep", pid="engine:dense",
+                    chunk_lo=lo, num_ops=len(ops),
+                ):
+                    with obs_trace.span(
+                        "kernel_dispatch",
+                        "kernel_dispatch",
+                        pid="engine:dense",
+                        chunk_lo=lo,
+                        num_ops=len(ops),
+                        backend=self.cfg.backend,
+                    ):
+                        self.state, self.g, stats = self._step(
+                            self.state, self.g, upd
+                        )
+                    # accumulate on device — one host sync per log, not per chunk
+                    total = _sum_stats(total, stats)
+            self.last_stats = jax.tree.map(jax.device_get, total)
+            outer.set(**_span_stats(self.last_stats))
         self._sched_total += int(self.last_stats.scheduled)
         return self.last_stats
 

@@ -61,6 +61,7 @@ import dataclasses
 
 from repro.core import dropping as dr
 from repro.core.telemetry import RecomputeTelemetry
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -319,7 +320,19 @@ class MemoryGovernor:
             cfg_new = self.cfg.join_rung(new_lvl, base)
         else:
             cfg_new = self.cfg.rung_config(new_lvl, base)
-        freed = session._set_op_drop_policy_qid(qid, op, cfg_new)
+        with obs_trace.span(
+            "escalate" if direction > 0 else "deescalate",
+            "governor",
+            pid="governor",
+            tid=qid,
+            qid=qid,
+            op=op,
+            level_from=lvl,
+            level_to=new_lvl,
+            reason=reason,
+        ) as sp:
+            freed = session._set_op_drop_policy_qid(qid, op, cfg_new)
+            sp.set(bytes_freed=int(freed))
         if direction > 0:
             self._last_escalated = key
             self._reclaimed[key] = self._reclaimed.get(key, 0) + max(int(freed), 0)

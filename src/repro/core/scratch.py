@@ -21,20 +21,31 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import plan as qp
-from repro.core.engine import EngineConfig, GraphArrays, ife_step
+from repro.core.engine import (
+    ITER_TRACE,
+    EngineConfig,
+    GraphArrays,
+    MaintainStats,
+    ife_step,
+    zeros_stats,
+)
 from repro.core.graph import DynamicGraph
 
 Array = jnp.ndarray
 
 
-class ScratchStats(NamedTuple):
-    iters_run: Array
-    scheduled: Array  # V × iters (every vertex reruns every iteration)
-
-
 @partial(jax.jit, static_argnums=0)
-def scratch_run(cfg: EngineConfig, g: GraphArrays, init: Array) -> tuple[Array, ScratchStats]:
-    """Run IFE to fixpoint (or max_iters) from the initial states."""
+def scratch_run(
+    cfg: EngineConfig, g: GraphArrays, init: Array
+) -> tuple[Array, MaintainStats]:
+    """Run IFE to fixpoint (or max_iters) from the initial states.
+
+    Stats come back in the dense engine's :class:`MaintainStats` schema so
+    telemetry / governor / metrics observe one uniform shape across engines;
+    fields SCRATCH has no analog for (change points, drops, repairs) are
+    structurally zero.  ``scheduled`` is V × iters per query — every vertex
+    reruns every iteration, the baseline's defining cost.
+    """
 
     def body(carry):
         i, cur, _ = carry
@@ -51,7 +62,19 @@ def scratch_run(cfg: EngineConfig, g: GraphArrays, init: Array) -> tuple[Array, 
     )
     iters = i - 1
     q, v = init.shape
-    return final, ScratchStats(iters, iters * jnp.int32(q * v))
+    per_iter = jnp.int32(q * v)
+    # per-iteration schedule series: every iteration reruns the full matrix;
+    # iterations beyond the trace depth fold into the last bin (as dense)
+    bins = jnp.arange(ITER_TRACE, dtype=jnp.int32)
+    sched_sizes = jnp.where(bins < jnp.minimum(iters, ITER_TRACE), per_iter, 0)
+    overflow = jnp.maximum(iters - ITER_TRACE, 0) * per_iter
+    sched_sizes = sched_sizes.at[ITER_TRACE - 1].add(overflow)
+    stats = zeros_stats()._replace(
+        iters_run=iters,
+        scheduled=iters * per_iter,
+        sched_sizes=sched_sizes,
+    )
+    return final, stats
 
 
 class Scratch:
@@ -64,7 +87,7 @@ class Scratch:
         self.g = GraphArrays.from_snapshot(graph.snapshot(), backend=cfg.backend)
         self._answers, self.last_stats = scratch_run(cfg, self.g, self.init)
 
-    def apply_updates(self, updates) -> ScratchStats:
+    def apply_updates(self, updates) -> MaintainStats:
         self.graph.apply_batch(updates)
         self.g = GraphArrays.from_snapshot(self.graph.snapshot(), backend=self.cfg.backend)
         self._answers, self.last_stats = scratch_run(self.cfg, self.g, self.init)
@@ -100,7 +123,7 @@ class ScratchEngine:
         self._num_slots = 0
         self.g = GraphArrays.from_snapshot(graph.snapshot(), backend=cfg.backend)
         self._answers = np.zeros((0, cfg.num_vertices), np.float32)
-        self.last_stats: ScratchStats | None = None
+        self.last_stats: MaintainStats | None = None
 
     # ---------------------------------------------------------------- slots
     def register_plan(self, plan: qp.QueryPlan) -> int:
@@ -238,6 +261,7 @@ class ScratchEngine:
         if meta["last_iters"] is not None:
             # the pre-crash run's counters, not the import rerun's, so the
             # governor's recompute signal continues where it left off
-            self.last_stats = ScratchStats(
-                jnp.int32(meta["last_iters"]), jnp.int32(meta["last_scheduled"])
+            self.last_stats = zeros_stats()._replace(
+                iters_run=jnp.int32(meta["last_iters"]),
+                scheduled=jnp.int32(meta["last_scheduled"]),
             )

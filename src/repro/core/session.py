@@ -49,6 +49,8 @@ from repro.core.governor import GovernorConfig, MemoryGovernor
 from repro.core.graph import DynamicGraph, product_graph
 from repro.core.scratch import ScratchEngine
 from repro.core.sparse_engine import SparseDiffIFE
+from repro.obs import trace as obs_trace
+from repro.obs.probes import maintain_stats_dict, publish_session_metrics
 
 ENGINES = ("dense", "host", "scratch")
 
@@ -242,6 +244,10 @@ class DenseEngine:
     @property
     def det_overflow_shed(self) -> int:
         return self.impl.det_overflow_shed
+
+    @property
+    def last_stats(self):
+        return self.impl.last_stats
 
     def active_slots(self) -> list[int]:
         return self.impl.active_slots()
@@ -526,14 +532,22 @@ class CQPSession:
             # base graph, which any later engine build snapshots
             self.graph.apply_batch(updates)
             return None
-        if self._nfa is not None:
-            self.graph.apply_batch(updates)
-            updates = self._translate(updates)
-            if not updates:
-                self._govern()
-                return self.last_stats
-        out = engine_call(updates)
-        self._govern()
+        with obs_trace.span(
+            "update_batch",
+            "update_batch",
+            pid="session",
+            engine=self.engine_kind,
+            num_updates=len(updates),
+            queries=self.num_queries,
+        ):
+            if self._nfa is not None:
+                self.graph.apply_batch(updates)
+                updates = self._translate(updates)
+                if not updates:
+                    self._govern()
+                    return self.last_stats
+            out = engine_call(updates)
+            self._govern()
         return out
 
     def apply_updates(self, updates):
@@ -750,6 +764,12 @@ class CQPSession:
     def last_stats(self):
         return getattr(self._impl, "last_stats", None)
 
+    def publish_metrics(self, registry=None):
+        """Scrape this session into the (default) obs metrics registry —
+        gauges overwrite, counters advance; see ``repro.obs.probes``.
+        Returns the registry (for ``snapshot()`` / ``prometheus_text()``)."""
+        return publish_session_metrics(self, registry)
+
     def stats(self) -> dict:
         """Session/engine counters for serving telemetry."""
         out = {
@@ -772,9 +792,7 @@ class CQPSession:
             out["shards"] = self._impl.impl.num_shards
         ls = self.last_stats
         if isinstance(ls, MaintainStats):
-            out["last_maintain"] = {
-                k: int(v) for k, v in zip(ls._fields, ls)
-            }
+            out["last_maintain"] = maintain_stats_dict(ls)
         if self._runtime:
             rt: dict = {}
             det = self._runtime.get("straggler")

@@ -34,7 +34,9 @@ import numpy as np
 
 from repro.core import dropping as dr
 from repro.core import plan as qp
+from repro.core.engine import ITER_TRACE, MaintainStats
 from repro.core.graph import DynamicGraph
+from repro.obs import trace as obs_trace
 
 INF = float("inf")
 
@@ -75,6 +77,7 @@ class SparseDiffIFE:
         # governor scratch fallback: slots whose difference index was dropped
         # entirely — answers re-executed from scratch per batch (slot → row)
         self._scratch_rows: dict[int, np.ndarray] = {}
+        self.last_stats: MaintainStats | None = None  # last sweep, dense schema
         # recorded policies, keyed slot (iterate) or (slot, op_id)
         self._drop_cfg: dict = {}
         self.sources = [] if sources is None else [int(s) for s in sources]
@@ -185,7 +188,16 @@ class SparseDiffIFE:
         return 0
 
     def _scratch_eval(self, q: int) -> np.ndarray:
-        """Static IFE run to fixpoint — value rows only, no change points."""
+        """Static IFE run to fixpoint — value rows only, no change points.
+
+        This is the host engine's repair-on-access path: the slot's trace
+        was dropped entirely, so answers are recomputed from the live
+        adjacency (traced under the ``repair`` category).
+        """
+        with obs_trace.span("scratch_eval", "repair", pid="engine:host", tid=q):
+            return self._scratch_eval_inner(q)
+
+    def _scratch_eval_inner(self, q: int) -> np.ndarray:
         vals = np.asarray(self._init_rows[q], np.float32).copy()
         for _ in range(self.max_iters):
             nxt = vals.copy()
@@ -238,16 +250,22 @@ class SparseDiffIFE:
                 best = cand
         return best
 
-    def _set_point(self, q: int, v: int, i: int, val: float) -> None:
+    def _set_point(self, q: int, v: int, i: int, val: float) -> tuple[int, int]:
+        """Upsert/cancel the change point at iteration ``i``; returns
+        (written, removed) — 1/0 flags for the sweep's stat counters."""
         pts = self.diffs[q][v]
         prev = self._value_at(q, v, i - 1)
         # drop/replace any existing point at i, then insert if a true change
+        n0 = len(pts)
         pts[:] = [(it, x) for (it, x) in pts if it != i]
-        if val != prev:
+        had = len(pts) < n0
+        wrote = val != prev
+        if wrote:
             pts.append((i, val))
             pts.sort()
         if not pts:
             del self.diffs[q][v]
+        return int(wrote), int(had and not wrote)
 
     # ------------------------------------------------------------ procedures
     def _initial(self, q: int) -> None:
@@ -280,8 +298,16 @@ class SparseDiffIFE:
                 h = max(h, pts[-1][0])
         return h
 
-    def apply_updates(self, updates) -> None:
-        """One δE batch: update adjacency, then per-query sparse sweep."""
+    def apply_updates(self, updates) -> MaintainStats:
+        """One δE batch: update adjacency, then per-query sparse sweep.
+
+        Returns (and keeps in ``last_stats``) the dense engine's
+        :class:`MaintainStats` schema so telemetry / governor / metrics see
+        one uniform shape across engines.  The pointer machine has no
+        DroppedVT path, so ``dropped`` / ``jwritten`` / ``det_overflow``
+        are structurally zero; scratch-fallback re-executions (the host's
+        repair-on-access analog) land in ``repairs``.
+        """
         dirty: set[int] = set()
         for (u, v, _lbl, w, sign) in updates:
             u, v = int(u), int(v)
@@ -294,39 +320,78 @@ class SparseDiffIFE:
             dirty.add(v)
         self.graph.apply_batch(updates)
 
-        for q in sorted(self.plans):
-            if q in self._scratch_rows:  # drop-all: re-execute, no diffs
-                self._scratch_rows[q] = self._scratch_eval(q)
-                continue
-            horizon = self._horizon(q)
-            frontier: set[int] = set()
-            # Retractions are not monotone: a vertex raised at iteration i
-            # may regain a lower value at a later iteration from an
-            # in-neighbour whose change point settles later.  Every vertex
-            # touched by this sweep therefore stays scheduled through the
-            # trace horizon — exactly the treatment the direct update heads
-            # (`dirty`) already get — instead of dropping out of the
-            # frontier at its first unchanged iteration.
-            touched: set[int] = set()
-            i = 1
-            while i <= self.max_iters and (
-                frontier or ((dirty or touched) and i <= horizon + 1)
-            ):
-                sched = frontier | (
-                    (dirty | touched) if i <= horizon + 1 else set()
-                )
-                nxt: set[int] = set()
-                for v in sorted(sched):
-                    old = self._value_at(q, v, i)
-                    new = self._recompute(q, v, i)
-                    if new != old:
-                        nxt.add(v)
-                        nxt.update(self.out_nbrs.get(v, ()))
-                        touched.add(v)
-                    self._set_point(q, v, i, new)
-                horizon = max(horizon, self._horizon(q))
-                frontier = nxt
-                i += 1
+        iters_max = 0
+        scheduled = changed = repairs = written = removed = 0
+        sched_sizes = np.zeros(ITER_TRACE, np.int64)
+        frontier_sizes = np.zeros(ITER_TRACE, np.int64)
+        sweep = obs_trace.span(
+            "sweep", "sweep", pid="engine:host", num_updates=len(updates)
+        )
+        with sweep:
+            for q in sorted(self.plans):
+                if q in self._scratch_rows:  # drop-all: re-execute, no diffs
+                    w0 = self.work
+                    self._scratch_rows[q] = self._scratch_eval(q)
+                    repairs += self.work - w0
+                    continue
+                horizon = self._horizon(q)
+                frontier: set[int] = set()
+                # Retractions are not monotone: a vertex raised at iteration
+                # i may regain a lower value at a later iteration from an
+                # in-neighbour whose change point settles later.  Every
+                # vertex touched by this sweep therefore stays scheduled
+                # through the trace horizon — exactly the treatment the
+                # direct update heads (`dirty`) already get — instead of
+                # dropping out of the frontier at its first unchanged
+                # iteration.
+                touched: set[int] = set()
+                i = 1
+                while i <= self.max_iters and (
+                    frontier or ((dirty or touched) and i <= horizon + 1)
+                ):
+                    sched = frontier | (
+                        (dirty | touched) if i <= horizon + 1 else set()
+                    )
+                    nxt: set[int] = set()
+                    for v in sorted(sched):
+                        old = self._value_at(q, v, i)
+                        new = self._recompute(q, v, i)
+                        if new != old:
+                            nxt.add(v)
+                            nxt.update(self.out_nbrs.get(v, ()))
+                            touched.add(v)
+                        w_, r_ = self._set_point(q, v, i, new)
+                        written += w_
+                        removed += r_
+                    bin_i = min(i - 1, ITER_TRACE - 1)
+                    scheduled += len(sched)
+                    changed += len(nxt)
+                    sched_sizes[bin_i] += len(sched)
+                    frontier_sizes[bin_i] += len(nxt)
+                    horizon = max(horizon, self._horizon(q))
+                    frontier = nxt
+                    i += 1
+                iters_max = max(iters_max, i - 1)
+
+            z = np.int32
+            self.last_stats = MaintainStats(
+                iters_run=z(iters_max),
+                scheduled=z(scheduled),
+                changed=z(changed),
+                repairs=z(repairs),
+                written=z(written),
+                removed=z(removed),
+                dropped=z(0),
+                jwritten=z(0),
+                det_overflow=z(0),
+                sched_sizes=sched_sizes.astype(np.int32),
+                frontier_sizes=frontier_sizes.astype(np.int32),
+            )
+            sweep.set(
+                iters_run=iters_max, scheduled=scheduled, changed=changed,
+                repairs=repairs, written=written, removed=removed,
+            )
+        return self.last_stats
 
     def apply_updates_batched(self, updates, batch_size: int | None = None):
         """Protocol twin of the dense engine's chunked path: the host sweep

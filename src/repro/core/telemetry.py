@@ -25,6 +25,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.obs import metrics as obs_metrics
+
 
 def _ewma(old: float | None, new: float, alpha: float) -> float:
     return new if old is None else (1.0 - alpha) * old + alpha * new
@@ -109,6 +111,32 @@ class RecomputeTelemetry:
             if ovf is not None:
                 self.det_overflow_total += int(ovf)
         self.observations += 1
+        self._publish()
+
+    def _publish(self) -> None:
+        """Mirror the EWMAs into the obs metrics registry — telemetry is a
+        *consumer* of the unified registry, not a parallel surface."""
+        reg = obs_metrics.get_registry()
+        g = reg.gauge(
+            "cqp_telemetry_ewma", "recompute-telemetry EWMAs, by signal"
+        )
+        for field, val in self._global.items():
+            g.set(val, signal=field)
+        rate = reg.gauge(
+            "cqp_recompute_cost_rate",
+            "EWMA recompute work per ingested update, per (query, operator)",
+        )
+        for key, sig in self._per_query.items():
+            if sig.cost_rate is None:
+                continue
+            if isinstance(key, tuple):
+                rate.set(sig.cost_rate, qid=key[0], op=key[1])
+            else:
+                rate.set(sig.cost_rate, qid=key)
+        reg.gauge(
+            "cqp_det_overflow_total",
+            "DroppedVT records lost to Det-Drop evictions (unrepairable)",
+        ).set(self.det_overflow_total)
 
     # ----------------------------------------------------------------- api
     def cost_rate(self, qid: int) -> float:

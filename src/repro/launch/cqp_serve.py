@@ -60,6 +60,8 @@ from collections import Counter
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serving.metrics import PhaseRecorder, summarize_latency_s
 
 
@@ -189,6 +191,10 @@ def build_session(args):
 
 
 def serve(args) -> dict:
+    if getattr(args, "trace_out", None):
+        # install a live tracer before any engine work so session/engine/
+        # governor/recovery spans land in the exported Chrome trace
+        obs_trace.set_tracer(obs_trace.Tracer())
     t0 = time.perf_counter()
     restore_latency = None
     start_chunk = 0
@@ -459,6 +465,17 @@ def serve(args) -> dict:
             f"{r['replayed_chunks']} chunk(s) replayed, "
             f"{r['straggler_events']} straggler event(s)"
         )
+    if getattr(args, "metrics_out", None) or getattr(args, "trace_out", None):
+        session.publish_metrics()  # final scrape of the DC probes
+    if getattr(args, "metrics_out", None):
+        with open(args.metrics_out, "w") as fh:
+            json.dump(obs_metrics.get_registry().snapshot(), fh, indent=1)
+        print(f"  metrics snapshot -> {args.metrics_out}")
+    if getattr(args, "trace_out", None):
+        n = obs_trace.get_tracer().export(args.trace_out)
+        out["trace_events"] = n
+        print(f"  trace: {n} event(s) -> {args.trace_out} "
+              "(load in ui.perfetto.dev)")
     if args.json:
         print(json.dumps(out))
     return out
@@ -598,6 +615,22 @@ def main() -> None:
     ap.add_argument(
         "--backoff-s", type=float, default=0.0,
         help="delay before each restart",
+    )
+    ap.add_argument(
+        "--trace-out",
+        default=None,
+        metavar="TRACE_JSON",
+        help="enable the structured tracer and export a Chrome-trace JSON "
+        "(loadable in ui.perfetto.dev / chrome://tracing) with spans for "
+        "update batches, sweep iterations, kernel dispatches, repairs, "
+        "governor actions, and checkpoints (DESIGN.md §15)",
+    )
+    ap.add_argument(
+        "--metrics-out",
+        default=None,
+        metavar="METRICS_JSON",
+        help="write a JSON snapshot of the obs metrics registry (counters / "
+        "gauges / histograms incl. the DC probes) at end of run",
     )
     ap.add_argument("--json", action="store_true", help="emit a JSON result line")
     args = ap.parse_args()

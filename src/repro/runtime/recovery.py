@@ -28,6 +28,8 @@ import time
 from typing import Callable
 
 from repro.checkpoint import CheckpointManager
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.fault import FaultPolicy, InjectedFault
 from repro.runtime.straggler import StragglerDetector
 
@@ -68,15 +70,31 @@ class RecoverySupervisor:
         entries ride along in the manifest meta (the serving tier stores its
         tenant registry there)."""
         t0 = time.perf_counter()
-        user = {"next_chunk": int(next_chunk)}
-        if extra:
-            user.update(extra)
-        arrays, meta = session.state_dict(extra=user)
-        self.checkpoint_bytes = sum(int(a.nbytes) for a in arrays.values())
-        self.manager.save(next_chunk, arrays, meta=meta)
-        self.checkpoint_s.append(time.perf_counter() - t0)
+        with obs_trace.span(
+            "checkpoint", "checkpoint", pid="recovery", next_chunk=int(next_chunk)
+        ) as sp:
+            user = {"next_chunk": int(next_chunk)}
+            if extra:
+                user.update(extra)
+            arrays, meta = session.state_dict(extra=user)
+            self.checkpoint_bytes = sum(int(a.nbytes) for a in arrays.values())
+            self.manager.save(next_chunk, arrays, meta=meta)
+            sp.set(nbytes=self.checkpoint_bytes)
+        dt = time.perf_counter() - t0
+        self.checkpoint_s.append(dt)
         self.checkpoints += 1
         self.history.append(f"ckpt@{next_chunk}")
+        reg = obs_metrics.get_registry()
+        reg.counter("cqp_checkpoints_total", "checkpoints written").inc()
+        reg.counter(
+            "cqp_checkpoint_bytes_total", "host bytes snapshotted"
+        ).inc(self.checkpoint_bytes)
+        reg.histogram(
+            "cqp_checkpoint_seconds", "checkpoint write latency"
+        ).observe(dt)
+        reg.gauge(
+            "cqp_checkpoint_last_bytes", "host bytes of the last snapshot"
+        ).set(self.checkpoint_bytes)
 
     def run(
         self,
@@ -128,17 +146,30 @@ class RecoverySupervisor:
         a static chunk list, so it cannot run under :meth:`run`."""
         self.manager.wait()  # never restore past an in-flight write
         t0 = time.perf_counter()
-        try:
-            session, k = self.restore_fn(self.manager.directory)
-        except FileNotFoundError:
-            # no checkpoint landed yet → rebuild from genesis
-            session, k = self.restore_fn(None)
+        with obs_trace.span(
+            "restore", "checkpoint", pid="recovery", fault_chunk=int(fault_chunk)
+        ) as sp:
+            try:
+                session, k = self.restore_fn(self.manager.directory)
+            except FileNotFoundError:
+                # no checkpoint landed yet → rebuild from genesis
+                session, k = self.restore_fn(None)
+            sp.set(resumed_chunk=int(k), replayed_chunks=int(fault_chunk - k))
+        dt = time.perf_counter() - t0
         self.restores.append({
-            "latency_s": time.perf_counter() - t0,
+            "latency_s": dt,
             "resumed_chunk": int(k),
             "replayed_chunks": int(fault_chunk - k),
         })
         self.history.append(f"resume@{k}")
+        reg = obs_metrics.get_registry()
+        reg.counter("cqp_restores_total", "checkpoint restores").inc()
+        reg.histogram(
+            "cqp_restore_seconds", "restore latency (rebuild + replay cursor)"
+        ).observe(dt)
+        reg.counter(
+            "cqp_replayed_chunks_total", "log chunks replayed after restores"
+        ).inc(max(int(fault_chunk - k), 0))
         return session, k
 
     def metrics(self) -> dict:

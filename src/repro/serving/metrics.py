@@ -13,6 +13,8 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+
 # the serving tier's canonical percentile set
 PERCENTILES: tuple[float, ...] = (50.0, 99.0, 99.9)
 
@@ -62,14 +64,23 @@ class PhaseRecorder:
 
     def __init__(self) -> None:
         self._samples: dict[str, list[float]] = {}
+        # the recorder is an obs-registry consumer: every sample also lands
+        # in one shared histogram (labelled by phase), so the Prometheus /
+        # JSON-snapshot surfaces see the same distribution this summary
+        # renders as percentiles
+        self._hist = obs_metrics.get_registry().histogram(
+            "serving_phase_seconds", "serving-loop phase wall time"
+        )
 
     def record(self, phase: str, seconds: float) -> None:
         self._samples.setdefault(phase, []).append(float(seconds))
+        self._hist.observe(float(seconds), phase=phase)
 
     def extend(self, phase: str, seconds_list) -> None:
-        self._samples.setdefault(phase, []).extend(
-            float(s) for s in seconds_list
-        )
+        seconds_list = [float(s) for s in seconds_list]
+        self._samples.setdefault(phase, []).extend(seconds_list)
+        for s in seconds_list:
+            self._hist.observe(s, phase=phase)
 
     def samples(self, phase: str) -> list[float]:
         return list(self._samples.get(phase, ()))

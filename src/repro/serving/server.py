@@ -52,6 +52,8 @@ from repro.core import plan as qp
 from repro.core.graph import DynamicGraph
 from repro.core.governor import GovernorConfig
 from repro.core.session import CQPSession
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.runtime.fault import FaultPolicy, InjectedFault
 from repro.runtime.recovery import RecoverySupervisor
 from repro.runtime.straggler import StragglerDetector
@@ -83,12 +85,22 @@ class ServerConfig:
     backoff_s: float = 0.0
     straggler_threshold: float = 4.0
     straggler_warmup: int = 3
+    # observability: periodic scrape of the session into the obs metrics
+    # registry every `obs_every` epochs, with optional file sinks — the
+    # trace flush rewrites `trace_out` (Chrome-trace JSON) and the metrics
+    # scrape rewrites `metrics_out` (registry JSON snapshot) in place, so
+    # the files are valid mid-run and final on stop()
+    obs_every: int = 8
+    trace_out: str | None = None
+    metrics_out: str | None = None
 
     def __post_init__(self):
         if self.chunk_updates < 1:
             raise ValueError("chunk_updates must be >= 1")
         if self.read_timeout_s <= 0:
             raise ValueError("read_timeout_s must be positive")
+        if self.obs_every < 1:
+            raise ValueError("obs_every must be >= 1")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -255,6 +267,7 @@ class CQPServer:
             self._task = None
         if self.supervisor is not None:
             self.supervisor.manager.wait()
+        self._obs_scrape()  # final flush: sinks reflect the drained state
         if self._failure is not None:
             raise self._failure
 
@@ -341,6 +354,15 @@ class CQPServer:
             if self.config.admission
             else ADMIT
         )
+        obs_trace.instant(
+            "register_query",
+            "admission",
+            pid="serving",
+            tid=tenant_id,
+            tenant=tenant_id,
+            action=decision.action,
+            reason=decision.reason,
+        )
         if decision.action == "reject":
             raise AdmissionRejected(decision)
         fut = asyncio.get_running_loop().create_future()
@@ -379,6 +401,16 @@ class CQPServer:
             st.submitted_updates += len(updates)
             st.admitted_updates += len(updates)
             decision = ADMIT
+        obs_trace.instant(
+            "submit",
+            "admission",
+            pid="serving",
+            tid=tenant_id,
+            tenant=tenant_id,
+            num_updates=len(updates),
+            admitted=decision.admitted,
+            reason=decision.reason,
+        )
         if not decision.admitted:
             return SubmitResult(False, decision.reason, st.watermark)
         self._admitted_total += len(updates)
@@ -563,6 +595,30 @@ class CQPServer:
         self.registry.enforce_budgets(self.session)
         self._notify_waiters()
         await self._maybe_checkpoint()
+        if self._epoch % max(int(self.config.obs_every), 1) == 0:
+            self._obs_scrape()
+
+    def _obs_scrape(self) -> None:
+        """Periodic observability tick: publish the session into the obs
+        registry, then rewrite the configured file sinks (per-epoch trace
+        flush + metrics snapshot).  Sink errors never take down serving."""
+        try:
+            self.session.publish_metrics()
+            reg = obs_metrics.get_registry()
+            reg.gauge("serving_epoch", "applied epoch counter").set(self._epoch)
+            reg.gauge("serving_queue_depth", "admitted updates not yet applied").set(
+                len(self._queue)
+            )
+            reg.gauge(
+                "serving_covered_updates", "applied prefix of the admitted stream"
+            ).set(self._covered)
+            if self.config.metrics_out:
+                with open(self.config.metrics_out, "w") as f:
+                    json.dump(reg.snapshot(), f, indent=1)
+            if self.config.trace_out:
+                obs_trace.get_tracer().export(self.config.trace_out)
+        except Exception:  # pragma: no cover - diagnostics must not kill serving
+            pass
 
     def _headroom_frac(self) -> float | None:
         governor = getattr(self.session, "_governor", None)
@@ -828,6 +884,8 @@ def _scripted_scenario(args: argparse.Namespace) -> dict:
             min_slots=args.tenants,
         )
 
+    if args.trace_out:
+        obs_trace.set_tracer(obs_trace.Tracer())
     cfg = ServerConfig(
         chunk_updates=args.batch,
         admission=not args.no_admission,
@@ -835,6 +893,8 @@ def _scripted_scenario(args: argparse.Namespace) -> dict:
         drop_ladder=ladder,
         checkpoint_every=args.checkpoint_every,
         max_restarts=3,
+        trace_out=args.trace_out,
+        metrics_out=args.metrics_out,
     )
     fault_at = args.inject_fault_at
     fired = {"done": False}
@@ -923,6 +983,11 @@ def main(argv=None) -> int:
     ap.add_argument("--inject-fault-at", type=int, default=None)
     ap.add_argument("--no-admission", action="store_true",
                     help="control run: no admission/shedding")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE_JSON",
+                    help="enable the tracer; flush a Chrome-trace JSON "
+                    "per obs scrape (DESIGN.md §15)")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS_JSON",
+                    help="write obs registry snapshots per scrape")
     ap.add_argument("--json", action="store_true", help="print the full stats")
     args = ap.parse_args(argv)
     if args.smoke:
