@@ -261,8 +261,10 @@ class Iterate:
 class Aggregate:
     """Stateless post-processing of the fixed point's answers.
 
-    ``agg``: ``"topk"`` (k best finite values + their vertices) or
-    ``"histogram"`` (finite-value counts in ``bins`` equal-width bins).
+    ``agg``: ``"topk"`` (k best finite values + their vertices),
+    ``"histogram"`` (finite-value counts in ``bins`` equal-width bins) or
+    ``"target"`` (the answer field read at one ``vertex`` — SPSP reads an
+    SSSP field at t; the planner's landmark pass pattern-matches on it).
     A per-query output-shaping knob: excluded from the family key.
     """
 
@@ -272,6 +274,7 @@ class Aggregate:
     agg: str = "topk"
     k: int = 8
     bins: int = 8
+    vertex: int | None = None  # target vertex for agg="target"
 
     def family_key(self) -> tuple | None:
         return None  # free knob — never constrains session compatibility
@@ -376,6 +379,8 @@ def validate(ops: Sequence[OpNode]) -> dict[str, OpNode]:
                 f"aggregate {agg.op_id!r} must consume the iterate node "
                 f"{it.op_id!r}"
             )
+        if agg.agg == "target" and agg.vertex is None:
+            raise ValueError("aggregate agg='target' needs a target vertex")
     for join in by_kind.get("join", []):
         if join.nfa is None:
             raise ValueError(f"join {join.op_id!r} needs an NFA")
@@ -486,6 +491,7 @@ def node_to_dict(node: OpNode) -> dict:
         out["agg"] = node.agg
         out["k"] = node.k
         out["bins"] = node.bins
+        out["vertex"] = node.vertex
     return out
 
 
@@ -518,10 +524,12 @@ def node_from_dict(obj: dict) -> OpNode:
             drop=drop if drop is not None else dr.DropConfig(),
         )
     if kind == "aggregate":
+        vertex = obj.get("vertex")
         return Aggregate(
             **common,
             agg=obj.get("agg", "topk"),
             k=int(obj.get("k", 8)),
             bins=int(obj.get("bins", 8)),
+            vertex=None if vertex is None else int(vertex),
         )
     raise ValueError(f"unknown operator kind {kind!r}")

@@ -33,6 +33,14 @@ along per-operator ladders:
   Iterate's" — and needs no DroppedVT bookkeeping, because complete
   dropping repairs deterministically.
 
+* ``landmark`` — the plan optimizer's shared-index pseudo-operator (keyed
+  ``(PLANNER_QID, "landmark")`` by `repro.planner`), another single rung:
+  rung 1 sheds the landmark index (its 2·L maintained SSSP rows deregister
+  and the rewritten queries degrade to un-pruned scratch — answers stay
+  exact, latency rises), rung 0 re-materializes it.  "Landmark-ize /
+  de-landmark-ize" is thereby an online memory↔latency knob alongside
+  dropping (DESIGN.md §16).
+
 Escalation rewrites the operator's policy in place — traced ``[Q]`` rows,
 no engine recompile — and sheds already-stored diffs under the new policy
 (``engine.shed_slot`` / ``engine.set_join_store``), so memory falls
@@ -140,7 +148,9 @@ class GovernorConfig:
         return dr.DropConfig(mode=self.representation, selection="random", p=1.0)
 
     def top_level_for(self, op: str) -> int:
-        return 1 if op == "join" else self.top_level
+        # single-rung operators: the join trace (complete dropping, §4) and
+        # the planner's shared landmark index (shed / re-materialize)
+        return 1 if op in ("join", "landmark") else self.top_level
 
 
 @dataclasses.dataclass
@@ -253,8 +263,8 @@ class MemoryGovernor:
                 and key not in self._overflow_blocked
                 # an empty store has nothing to reclaim — escalating it only
                 # burns a rung (the iterate rung still thins future writes,
-                # but a join flip would be a pure no-op)
-                and not (key[1] == "join" and per_op[key] == 0)
+                # but a join flip or an index shed would be a pure no-op)
+                and not (key[1] in ("join", "landmark") and per_op[key] == 0)
             ]
             if not cands:
                 break
@@ -316,7 +326,9 @@ class MemoryGovernor:
         lvl = self._levels.get(key, 0)
         new_lvl = max(lvl + direction, 0)
         base = self._base.get(key, dr.DropConfig() if op != "join" else None)
-        if op == "join":
+        if op in ("join", "landmark"):
+            # both are single-rung complete-drop ladders: rung 1 sheds the
+            # store (join trace / shared landmark index), rung 0 restores it
             cfg_new = self.cfg.join_rung(new_lvl, base)
         else:
             cfg_new = self.cfg.rung_config(new_lvl, base)

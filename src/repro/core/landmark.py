@@ -16,6 +16,13 @@ From these, triangle bounds prune the Bellman-Ford search of SCRATCH:
 During the SPSP scratch run from s to t, a vertex v with
 ``dist(v) + lb(v, t) > ub`` cannot lie on a shortest s→t path, so it never
 propagates — the paper's SCRATCH-LANDMARK.
+
+This module is self-contained math + a legacy direct-engine wrapper
+(:class:`LandmarkIndex`).  The *production* form is the plan-optimizer
+rewrite (`repro.planner.landmark_rewrite`): there the 2·L SSSP fields are
+registered as operator-addressed queries of a :class:`CQPSession`, so byte
+accounting, drop policies and the memory governor apply to the index like
+any other operator.
 """
 
 from __future__ import annotations
@@ -27,20 +34,118 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import dropping as dr
 from repro.core import semiring as sr
 from repro.core.engine import DiffIFE, EngineConfig, GraphArrays, edge_messages
 from repro.core.graph import DynamicGraph
-from repro.core.queries import _engine_cfg, _source_init
 
 Array = jnp.ndarray
+INF = np.float32(np.inf)
 
 
-def _transpose_updates(updates):
+# ----------------------------------------------------------------- helpers
+def source_init(
+    sources: Sequence[int], num_vertices: int, value: float = 0.0
+) -> np.ndarray:
+    """Stacked source-init rows [Q, V] (the plan-IR form is
+    ``InitSpec(kind="source")``; this is the raw-engine equivalent)."""
+    init = np.full((len(sources), num_vertices), INF, dtype=np.float32)
+    for q, s in enumerate(sources):
+        init[q, int(s)] = value
+    return init
+
+
+def engine_cfg(
+    num_queries: int,
+    num_vertices: int,
+    semiring,
+    *,
+    max_iters: int,
+    mode: str = "jod",
+    drop: dr.DropConfig | None = None,
+    weight_from_degree: bool = False,
+    **kw,
+) -> EngineConfig:
+    """Raw :class:`EngineConfig` builder for the direct-engine wrappers and
+    the planner's pruned-scratch runs (plan families go through
+    ``session.engine_config_for`` instead)."""
+    return EngineConfig(
+        num_queries=num_queries,
+        num_vertices=num_vertices,
+        max_iters=max_iters,
+        semiring=semiring,
+        mode=mode,
+        drop=drop or dr.DropConfig(),
+        weight_from_degree=weight_from_degree,
+        **kw,
+    )
+
+
+def transpose_updates(updates) -> list[tuple[int, int, int, float, int]]:
+    """δE on G → δE on Gᵀ (swap endpoints, keep label/weight/sign)."""
     return [(v, u, lbl, w, sign) for (u, v, lbl, w, sign) in updates]
 
 
+def transpose_graph(graph: DynamicGraph) -> DynamicGraph:
+    """Gᵀ as a fresh :class:`DynamicGraph` (same capacity and vertex space).
+
+    Vectorized: the live-edge arrays are gathered and written through fancy
+    indexing — no Python loop over edge slots.  Live edges compact to the
+    low slots, so the twin's free list is the plain tail range.
+    """
+    v, cap = graph.num_vertices, graph.capacity
+    out = DynamicGraph(v, [], capacity=cap, weighted=graph.weighted)
+    live = np.nonzero(graph.valid)[0]
+    n = int(live.size)
+    src = graph.dst[live].astype(np.int32)  # transposed endpoints
+    dst = graph.src[live].astype(np.int32)
+    out.src[:n] = src
+    out.dst[:n] = dst
+    out.weight[:n] = graph.weight[live]
+    out.label[:n] = graph.label[live]
+    out.valid[:n] = True
+    out.out_degree[:] = np.bincount(src, minlength=v)
+    out.in_degree[:] = np.bincount(dst, minlength=v)
+    out._slot = {
+        (int(u), int(w), int(lbl)): i
+        for i, (u, w, lbl) in enumerate(zip(src, dst, out.label[:n]))
+    }
+    out._free = list(range(cap - 1, n - 1, -1))
+    return out
+
+
+def select_landmarks(graph: DynamicGraph, num_landmarks: int) -> list[int]:
+    """The ``num_landmarks`` highest-total-degree vertices (§6.6)."""
+    deg = graph.degrees_total()
+    return [int(l) for l in np.argsort(-deg, kind="stable")[: int(num_landmarks)]]
+
+
+def triangle_bounds(
+    fwd: np.ndarray,  # [L, V] d(l → v)
+    rev: np.ndarray,  # [L, V] d(v → l)
+    sources: Sequence[int],
+    targets: Sequence[int],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Per-query pruning bounds: ``(lb [Q, V], ub [Q])``.
+
+    inf − inf → nan: no information → 0.  A +inf lower bound is *valid*
+    (l reaches v but not t ⇒ v cannot reach t) and prunes v outright.
+    """
+    s = np.asarray(sources, dtype=np.int64)
+    t = np.asarray(targets, dtype=np.int64)
+    with np.errstate(invalid="ignore"):  # inf − inf → nan, mapped to 0 below
+        ub = np.min(rev[:, s] + fwd[:, t], axis=0)  # [Q]
+        lb = np.maximum(
+            fwd[:, t][:, :, None] - fwd[:, None, :],  # [L, Q, V]
+            rev[:, None, :] - rev[:, t][:, :, None],
+        )
+    lb = np.where(np.isnan(lb), 0.0, lb)
+    return np.maximum(lb, 0.0).max(axis=0), ub  # [Q, V], [Q]
+
+
+# -------------------------------------------------------------- legacy index
 class LandmarkIndex:
-    """Differentially-maintained landmark distance index."""
+    """Differentially-maintained landmark distance index (direct engines)."""
 
     def __init__(
         self,
@@ -55,21 +160,17 @@ class LandmarkIndex:
         self.graph = graph
         # forward engine shares the caller's graph object; the reverse engine
         # owns a transposed twin fed with transposed update batches.
-        rev_edges = [
-            (int(graph.dst[e]), int(graph.src[e]), float(graph.weight[e]))
-            for e in np.nonzero(graph.valid)[0]
-        ]
-        self.rgraph = DynamicGraph(v, rev_edges, capacity=graph.capacity)
-        cfg = _engine_cfg(
+        self.rgraph = transpose_graph(graph)
+        cfg = engine_cfg(
             len(self.landmarks), v, sr.min_plus(), max_iters=max_iters, **kw
         )
-        init = _source_init(self.landmarks, v)
+        init = source_init(self.landmarks, v)
         self.fwd_engine = DiffIFE(cfg, graph, init)
         self.rev_engine = DiffIFE(cfg, self.rgraph, init)
 
     def apply_updates(self, updates) -> None:
         self.fwd_engine.apply_updates(updates)
-        self.rev_engine.apply_updates(_transpose_updates(updates))
+        self.rev_engine.apply_updates(transpose_updates(updates))
 
     @property
     def fwd(self) -> np.ndarray:  # [L, V] d(l → v)
@@ -90,11 +191,17 @@ def _pruned_bf(
     init: Array,  # [Q, V]
     lb: Array,  # [Q, V]  lower bound d(v → t)
     ub: Array,  # [Q]     upper bound d(s → t)
-) -> tuple[Array, Array]:
-    """Bellman-Ford with landmark pruning: pruned vertices never propagate."""
+) -> tuple[Array, Array, Array]:
+    """Bellman-Ford with landmark pruning: pruned vertices never propagate.
+
+    Returns ``(final [Q, V], iters, work)`` where ``work`` counts the live
+    (propagating) vertex slots summed over iterations — the deterministic
+    scratch-work meter Fig. 9 reports alongside wall time (the un-pruned
+    baseline's analog is ``iters · Q · V``).
+    """
 
     def body(carry):
-        i, cur, _ = carry
+        i, cur, _, work = carry
         live = (cur + lb) <= ub[:, None]  # can still be on a shortest path
         masked = jnp.where(live, cur, jnp.inf)
         new = jnp.minimum(
@@ -103,14 +210,48 @@ def _pruned_bf(
                 lambda m: jax.ops.segment_min(m, g.dst, num_segments=cur.shape[1])
             )(edge_messages(cfg, masked, g)),
         )
-        return (i + 1, new, (new != cur).any())
+        return (i + 1, new, (new != cur).any(), work + live.sum(dtype=jnp.int32))
 
     def cond(carry):
-        i, _, changed = carry
+        i, _, changed, _ = carry
         return (i <= jnp.int32(cfg.max_iters)) & changed
 
-    i, final, _ = jax.lax.while_loop(cond, body, (jnp.int32(1), init, jnp.bool_(True)))
-    return final, i - 1
+    i, final, _, work = jax.lax.while_loop(
+        cond, body, (jnp.int32(1), init, jnp.bool_(True), jnp.int32(0))
+    )
+    return final, i - 1, work
+
+
+def pruned_scratch_run(
+    cfg: EngineConfig,
+    graph: DynamicGraph,
+    sources: Sequence[int],
+    targets: Sequence[int],
+    fwd: np.ndarray | None,
+    rev: np.ndarray | None,
+) -> tuple[np.ndarray, int, int]:
+    """One SCRATCH-LANDMARK evaluation: ``(dists [Q, V], iters, work)``.
+
+    ``fwd``/``rev`` are the index fields ([L, V]); pass ``None`` for both to
+    run with trivial bounds (lb = 0, ub = ∞ — plain scratch, used while the
+    governor holds the index shed).  Distances are exact at each query's
+    target; pruned vertices elsewhere may read +inf.
+    """
+    v = graph.num_vertices
+    if fwd is None or rev is None:
+        lb = np.zeros((len(sources), v), np.float32)
+        ub = np.full(len(sources), np.inf, np.float32)
+    else:
+        lb, ub = triangle_bounds(fwd, rev, sources, targets)
+    g = GraphArrays.from_snapshot(graph.snapshot())
+    final, iters, work = _pruned_bf(
+        cfg,
+        g,
+        jnp.asarray(source_init(sources, v)),
+        jnp.asarray(lb, jnp.float32),
+        jnp.asarray(ub, jnp.float32),
+    )
+    return np.asarray(final), int(iters), int(work)
 
 
 class ScratchLandmark:
@@ -118,6 +259,8 @@ class ScratchLandmark:
 
     Updates first maintain the landmark index differentially, then each
     registered (s, t) query re-runs pruned Bellman-Ford from scratch.
+    Legacy direct-engine wrapper — the session form is
+    ``CQPSession.register(plan.spsp(s, t), optimize="always")``.
     """
 
     def __init__(
@@ -131,41 +274,22 @@ class ScratchLandmark:
     ) -> None:
         self.graph = graph
         self.queries = [(int(s), int(t)) for s, t in queries]
-        deg = graph.degrees_total()
-        landmarks = np.argsort(-deg)[:num_landmarks]
+        landmarks = select_landmarks(graph, num_landmarks)
         self.index = LandmarkIndex(graph, landmarks, max_iters=max_iters, **kw)
-        self.cfg = _engine_cfg(
+        self.cfg = engine_cfg(
             len(queries), graph.num_vertices, sr.min_plus(), max_iters=max_iters
         )
         self._recompute()
 
-    def _bounds(self) -> tuple[np.ndarray, np.ndarray]:
-        fwd, rev = self.index.fwd, self.index.rev  # [L, V]
-        s = np.asarray([q[0] for q in self.queries])
-        t = np.asarray([q[1] for q in self.queries])
-        ub = np.min(rev[:, s] + fwd[:, t], axis=0)  # [Q]
-        lb = np.maximum(
-            fwd[:, t][:, :, None] - fwd[:, None, :],  # [L, Q, V]
-            rev[:, None, :] - rev[:, t][:, :, None],
-        )
-        # inf − inf → nan: no information → 0.  A +inf bound is *valid*
-        # (l reaches v but not t ⇒ v cannot reach t) and prunes v outright.
-        lb = np.where(np.isnan(lb), 0.0, lb)
-        return np.maximum(lb, 0.0).max(axis=0), ub  # [Q, V], [Q]
-
     def _recompute(self) -> None:
-        g = GraphArrays.from_snapshot(self.graph.snapshot())
-        lb, ub = self._bounds()
-        init = _source_init([q[0] for q in self.queries], self.graph.num_vertices)
-        final, iters = _pruned_bf(
+        self._dists, self.last_iters, self.last_work = pruned_scratch_run(
             self.cfg,
-            g,
-            jnp.asarray(init),
-            jnp.asarray(lb, jnp.float32),
-            jnp.asarray(ub, jnp.float32),
+            self.graph,
+            [q[0] for q in self.queries],
+            [q[1] for q in self.queries],
+            self.index.fwd,
+            self.index.rev,
         )
-        self._dists = np.asarray(final)
-        self.last_iters = int(iters)
 
     def apply_updates(self, updates) -> None:
         self.index.apply_updates(updates)  # graph mutated here (fwd engine)

@@ -59,6 +59,42 @@ def _semiring_eq(a: sr.Semiring, b: sr.Semiring) -> bool:
     )
 
 
+# --------------------------------------------------------------------- provenance
+@dataclasses.dataclass(frozen=True)
+class Provenance:
+    """One rewrite applied to a plan by the optimizer (`repro.planner`).
+
+    Rewritten answers stay attributable: the plan records which rule fired,
+    what the pre-rewrite kind was, and the rule's parameters as a sorted
+    ``(name, value)`` tuple (values are JSON scalars).  Excluded from the
+    family key — a rewrite is an execution strategy, not a new sweep shape.
+    """
+
+    rule: str
+    original_kind: str = ""
+    params: tuple[tuple[str, object], ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "params", tuple(sorted((str(k), v) for k, v in self.params))
+        )
+
+    def to_dict(self) -> dict:
+        return {
+            "rule": self.rule,
+            "original_kind": self.original_kind,
+            "params": [[k, v] for k, v in self.params],
+        }
+
+    @staticmethod
+    def from_dict(obj: dict) -> "Provenance":
+        return Provenance(
+            rule=str(obj["rule"]),
+            original_kind=str(obj.get("original_kind", "")),
+            params=tuple((str(k), v) for k, v in obj.get("params", [])),
+        )
+
+
 # --------------------------------------------------------------------------- plan
 @dataclasses.dataclass(frozen=True)
 class QueryPlan:
@@ -83,8 +119,11 @@ class QueryPlan:
     weight_from_degree: bool = False
     alpha: float = 0.85
     ops: tuple[df.OpNode, ...] | None = None
+    # optimizer rewrite trail (oldest first); free knob like aggregates
+    provenance: tuple[Provenance, ...] = ()
 
     def __post_init__(self):
+        object.__setattr__(self, "provenance", tuple(self.provenance))
         if self.ops is None:
             if self.semiring is None or self.init is None or self.max_iters is None:
                 raise ValueError(
@@ -144,9 +183,9 @@ class QueryPlan:
 
     # ----------------------------------------------------------- constructors
     @staticmethod
-    def from_graph(kind: str, ops) -> "QueryPlan":
+    def from_graph(kind: str, ops, *, provenance=()) -> "QueryPlan":
         """Build a plan from an explicit (validated) operator-node tuple."""
-        return QueryPlan(kind=kind, ops=tuple(ops))
+        return QueryPlan(kind=kind, ops=tuple(ops), provenance=tuple(provenance))
 
     # ------------------------------------------------------------- graph api
     def node(self, op_id: str) -> df.OpNode:
@@ -201,16 +240,33 @@ class QueryPlan:
             dataclasses.replace(n, drop=cfg) if n.op_id == op_id else n
             for n in self.ops
         )
-        return QueryPlan(kind=self.kind, ops=new_ops)
+        return QueryPlan(kind=self.kind, ops=new_ops, provenance=self.provenance)
 
     def with_aggregate(
-        self, agg: str = "topk", *, k: int = 8, bins: int = 8
+        self,
+        agg: str = "topk",
+        *,
+        k: int = 8,
+        bins: int = 8,
+        vertex: int | None = None,
     ) -> "QueryPlan":
         """A copy with an Aggregate node appended (or replaced)."""
         it = self.op_of_kind("iterate")
-        node = Aggregate(inputs=(it.op_id,), agg=agg, k=int(k), bins=int(bins))
+        node = Aggregate(
+            inputs=(it.op_id,),
+            agg=agg,
+            k=int(k),
+            bins=int(bins),
+            vertex=None if vertex is None else int(vertex),
+        )
         new_ops = tuple(n for n in self.ops if n.kind != "aggregate") + (node,)
-        return QueryPlan(kind=self.kind, ops=new_ops)
+        return QueryPlan(kind=self.kind, ops=new_ops, provenance=self.provenance)
+
+    def with_provenance(self, prov: Provenance) -> "QueryPlan":
+        """A copy with one more rewrite recorded on the trail."""
+        return QueryPlan(
+            kind=self.kind, ops=self.ops, provenance=self.provenance + (prov,)
+        )
 
     # ---------------------------------------------------------------- family
     def family_key(self) -> tuple:
@@ -237,10 +293,13 @@ class QueryPlan:
     # ------------------------------------------------------------------ JSON
     def to_json(self) -> dict:
         """JSON-able plan graph (``from_json`` round-trips it)."""
-        return {
+        out: dict = {
             "kind": self.kind,
             "nodes": [df.node_to_dict(n) for n in self.ops],
         }
+        if self.provenance:
+            out["provenance"] = [p.to_dict() for p in self.provenance]
+        return out
 
     @staticmethod
     def from_json(obj: dict | str) -> "QueryPlan":
@@ -249,6 +308,9 @@ class QueryPlan:
         return QueryPlan.from_graph(
             obj.get("kind", "custom"),
             tuple(df.node_from_dict(n) for n in obj["nodes"]),
+            provenance=tuple(
+                Provenance.from_dict(p) for p in obj.get("provenance", [])
+            ),
         )
 
 
@@ -267,6 +329,29 @@ def sssp(
             init=InitSpec(kind="source", source=int(source)),
             max_iters=int(max_iters),
             drop=drop,
+        ),
+    )
+
+
+def spsp(
+    source: int,
+    target: int,
+    *,
+    max_iters: int = 64,
+    drop: dr.DropConfig | None = None,
+) -> QueryPlan:
+    """Single-pair shortest path: an SSSP field read at one target vertex
+    (``Aggregate(agg="target")``).  Family-compatible with :func:`sssp`
+    plans of the same ``max_iters`` — the aggregate is a free knob — and the
+    match pattern of the planner's landmark rewrite (§6.6)."""
+    return QueryPlan.from_graph(
+        "spsp",
+        df.canonical(
+            semiring=sr.min_plus(),
+            init=InitSpec(kind="source", source=int(source)),
+            max_iters=int(max_iters),
+            drop=drop,
+            aggregate=Aggregate(agg="target", vertex=int(target)),
         ),
     )
 

@@ -18,47 +18,10 @@ import numpy as np
 
 from repro.core import dropping as dr
 from repro.core import plan as qplan
-from repro.core.engine import DiffIFE, EngineConfig
+from repro.core.engine import DiffIFE
 from repro.core.graph import DynamicGraph
 from repro.core.plan import NFA  # noqa: F401  (legacy re-export)
 from repro.core.session import CQPSession, engine_config_for
-
-INF = np.float32(np.inf)
-
-
-def _source_init(
-    sources: Sequence[int], num_vertices: int, value: float = 0.0
-) -> np.ndarray:
-    """Legacy helper (used by :mod:`repro.core.landmark`): stacked source
-    init rows — the plan-IR form is ``InitSpec(kind="source")``."""
-    init = np.full((len(sources), num_vertices), INF, dtype=np.float32)
-    for q, s in enumerate(sources):
-        init[q, int(s)] = value
-    return init
-
-
-def _engine_cfg(
-    num_queries: int,
-    num_vertices: int,
-    semiring,
-    *,
-    max_iters: int,
-    mode: str = "jod",
-    drop: dr.DropConfig | None = None,
-    weight_from_degree: bool = False,
-    **kw,
-) -> EngineConfig:
-    """Legacy helper (used by :mod:`repro.core.landmark`)."""
-    return EngineConfig(
-        num_queries=num_queries,
-        num_vertices=num_vertices,
-        max_iters=max_iters,
-        semiring=semiring,
-        mode=mode,
-        drop=drop or dr.DropConfig(),
-        weight_from_degree=weight_from_degree,
-        **kw,
-    )
 
 
 def engine_from_plans(

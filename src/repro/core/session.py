@@ -289,9 +289,14 @@ class CQPSession:
         product_capacity: int | None = None,
         budget_bytes: int | None = None,
         governor: GovernorConfig | None = None,
+        optimize: str = "none",
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r}; choose from {ENGINES}")
+        if optimize not in ("none", "auto", "always"):
+            raise ValueError(
+                f"unknown optimize mode {optimize!r}; choose none | auto | always"
+            )
         if mesh is not None and engine != "dense":
             raise ValueError("mesh sharding is a dense-engine feature")
         if governor is not None and budget_bytes is None:
@@ -341,6 +346,16 @@ class CQPSession:
         self._next_qid = 0
         self._runtime: dict = {}  # serving-runtime observers (stats()["runtime"])
         self.restore_info: dict | None = None  # set by CQPSession.restore
+        # plan optimizer (repro.planner): rewrites matching plans at
+        # registration; qids it owns answer through rule-owned runtimes, and
+        # qids it registers for shared subplans are *internal* — excluded
+        # from every public per-query view but governor-addressable
+        self._optimize = optimize
+        self._planner = None
+        self._internal: set[int] = set()
+        self._governing = False  # re-entrancy guard (remat registers inside enforce)
+        if optimize != "none":
+            self._ensure_planner()
         # lifetime counters (stats())
         self.registered_total = 0
         self.deregistered_total = 0
@@ -349,22 +364,91 @@ class CQPSession:
         self.bytes_shed_total = 0  # reclaimed by drop-policy rewrites
 
     # ------------------------------------------------------------ lifecycle
-    def register(self, plan: qp.QueryPlan) -> QueryHandle:
+    def register(
+        self, plan: qp.QueryPlan, *, optimize: str | None = None
+    ) -> QueryHandle:
         """Register one query; its trace is computed in-engine (mid-stream
-        registration converges to the same answers as from-start)."""
-        return self.register_many([plan])[0]
+        registration converges to the same answers as from-start).
 
-    def register_many(self, plans: list[qp.QueryPlan]) -> list[QueryHandle]:
+        ``optimize`` overrides the session's optimizer mode for this call
+        (``"none"`` | ``"auto"`` | ``"always"`` — see `repro.planner`)."""
+        return self.register_many([plan], optimize=optimize)[0]
+
+    def _ensure_planner(self):
+        if self._planner is None:
+            from repro.planner.rules import Planner
+
+            self._planner = Planner(
+                self, self._optimize if self._optimize != "none" else "auto"
+            )
+        return self._planner
+
+    def register_many(
+        self, plans: list[qp.QueryPlan], *, optimize: str | None = None
+    ) -> list[QueryHandle]:
         """Register a batch of queries — the dense engine initializes all of
         their traces in ONE maintenance sweep.
 
         Atomic: a rejected batch (family mismatch, drop-mode conflict, an
         engine that cannot run the family) leaves the session exactly as it
         was — including across the deferred first engine build.
+
+        With the plan optimizer active (session ``optimize=`` or the
+        per-call override), each plan first runs through the rewrite rules:
+        matches that pay are admitted to the owning rule's shared runtime
+        instead of an engine slot, and their returned handles carry the
+        rewritten (provenance-stamped) plan.
         """
         if not plans:
             return []
+        plans = list(plans)
+        mode = self._optimize if optimize is None else optimize
+        if mode not in ("none", "auto", "always"):
+            raise ValueError(
+                f"unknown optimize mode {mode!r}; choose none | auto | always"
+            )
         # validate the WHOLE batch before committing any session state
+        base = self._family if self._family is not None else plans[0].family_key()
+        spec = self._drop_spec
+        if spec is None and self._impl is None:
+            spec = next((p.drop for p in plans if p.drop.enabled()), None)
+        for plan in plans:
+            self._check_family(plan, base)
+            if plan.drop.enabled() and spec is not None and plan.drop.mode != spec.mode:
+                raise ValueError(
+                    f"plan drop mode {plan.drop.mode!r} does not match the "
+                    f"session's DroppedVT representation {spec.mode!r}"
+                )
+        rules: dict[int, object] = {}
+        if mode != "none":
+            planner = self._ensure_planner()
+            for i, plan in enumerate(plans):
+                rule = planner.consider(plan, mode)
+                if rule is not None:
+                    rules[i] = rule
+        handles: list[QueryHandle | None] = [None] * len(plans)
+        engine_idx = [i for i in range(len(plans)) if i not in rules]
+        if engine_idx:
+            qids = self._register_engine_plans([plans[i] for i in engine_idx])
+            for i, qid in zip(engine_idx, qids):
+                handles[i] = QueryHandle(qid=qid, plan=self._plans[qid])
+        for i in sorted(rules):
+            qid = self._next_qid
+            self._next_qid += 1
+            new_plan = self._planner.admit(qid, plans[i], rules[i])
+            self._plans[qid] = new_plan
+            self.registered_total += 1
+            handles[i] = QueryHandle(qid=qid, plan=new_plan)
+        self._govern()
+        return handles
+
+    def _register_engine_plans(
+        self, plans: list[qp.QueryPlan], *, internal: bool = False
+    ) -> list[int]:
+        """The engine-slot registration path (family commit, deferred first
+        build, atomic unwind).  ``internal=True`` registers planner-owned
+        subplan rows: full engine/governor citizens, excluded from the
+        public per-query views and the ``registered_total`` counter."""
         base = self._family if self._family is not None else plans[0].family_key()
         spec = self._drop_spec
         if spec is None and self._impl is None:
@@ -404,22 +488,54 @@ class CQPSession:
                 self._impl = None
                 self._family, self._nfa, self._drop_spec, self._egraph = saved
             raise
-        handles = []
+        qids: list[int] = []
         for plan, slot in zip(plans, slots):
             qid = self._next_qid
             self._next_qid += 1
             self._handles[qid] = slot
             self._plans[qid] = plan
-            self.registered_total += 1
+            if internal:
+                self._internal.add(qid)
+            else:
+                self.registered_total += 1
             if self._governor is not None:
                 self._governor.on_register(qid, plan)
-            handles.append(QueryHandle(qid=qid, plan=plan))
-        self._govern()
-        return handles
+            qids.append(qid)
+        return qids
+
+    def _register_internal(self, plans: list[qp.QueryPlan]) -> list[int]:
+        """Planner hook: register shared-subplan rows (e.g. the landmark
+        index's SSSP fields) as internal engine queries."""
+        return self._register_engine_plans(plans, internal=True)
+
+    def _deregister_internal(self, qids) -> int:
+        """Planner hook: retire internal subplan rows; returns bytes freed."""
+        freed = 0
+        for qid in list(qids):
+            slot = self._handles.pop(qid)
+            freed += self._impl.deregister_plan(slot)
+            del self._plans[qid]
+            self._internal.discard(qid)
+            if self._governor is not None:
+                self._governor.on_deregister(qid)
+        return freed
 
     def deregister(self, handle: QueryHandle) -> int:
         """Retire a query: its difference rows are zeroed and the accounted
-        bytes released are returned; the slot returns to the free pool."""
+        bytes released are returned; the slot returns to the free pool.
+        A planner-owned query releases through its rule (the shared index
+        tears down with its last sharer)."""
+        if handle.qid in self._internal:
+            raise ValueError(
+                "internal planner subqueries retire with their shared state"
+            )
+        if self._planner is not None and self._planner.owns(handle.qid):
+            freed = self._planner.release(handle.qid)
+            del self._plans[handle.qid]
+            self.deregistered_total += 1
+            self.bytes_freed_total += freed
+            self._govern()
+            return freed
         slot = self._slot(handle)
         freed = self._impl.deregister_plan(slot)
         del self._handles[handle.qid], self._plans[handle.qid]
@@ -526,11 +642,14 @@ class CQPSession:
         base graph, translate through the NFA when the family has one, then
         hand the batch to ``engine_call``."""
         updates = list(updates)
+        base_updates = updates  # pre-NFA δE, for the planner's twin feeds
         self.updates_applied += len(updates)
         if self._impl is None:
             # no engine yet → no product graph either: updates land on the
             # base graph, which any later engine build snapshots
             self.graph.apply_batch(updates)
+            if self._planner is not None:
+                self._planner.on_updates(base_updates)
             return None
         with obs_trace.span(
             "update_batch",
@@ -547,6 +666,10 @@ class CQPSession:
                     self._govern()
                     return self.last_stats
             out = engine_call(updates)
+            if self._planner is not None:
+                # engine maintenance (incl. the internal index rows) ran —
+                # rules now refresh their rewritten queries' runtimes
+                self._planner.on_updates(base_updates)
             self._govern()
         return out
 
@@ -568,7 +691,11 @@ class CQPSession:
     # ------------------------------------------------------------------ api
     def answers(self, handle: QueryHandle) -> np.ndarray:
         """The query's final vertex states. [V] ([V·|S|] for RPQ plans —
-        see :meth:`reachable`)."""
+        see :meth:`reachable`).  Planner-rewritten queries answer through
+        their owning rule's runtime (e.g. the landmark pruned-scratch
+        subquery — exact at the plan's target vertex)."""
+        if self._planner is not None and self._planner.owns(handle.qid):
+            return self._planner.answers(handle.qid)
         return self._impl.answers_row(self._slot(handle))
 
     def reachable(self, handle: QueryHandle) -> np.ndarray:
@@ -604,6 +731,10 @@ class CQPSession:
             )[:, list(plan.nfa.accept)].min(axis=1)
         finite = np.isfinite(vals)
         out = {"op": node.op_id, "agg": node.agg}
+        if node.agg == "target":
+            out["vertex"] = int(node.vertex)
+            out["value"] = float(vals[int(node.vertex)])
+            return out
         if node.agg == "topk":
             idx = np.nonzero(finite)[0]
             order = idx[np.argsort(vals[idx], kind="stable")][: node.k]
@@ -621,8 +752,15 @@ class CQPSession:
             return out
         raise ValueError(f"unknown aggregate {node.agg!r}")
 
+    def _public_qids(self) -> list[int]:
+        """Ascending qids of client-registered queries (planner-internal
+        subplan rows excluded)."""
+        return [q for q in sorted(self._plans) if q not in self._internal]
+
     def handles(self) -> list[QueryHandle]:
-        return [QueryHandle(qid=q, plan=self._plans[q]) for q in sorted(self._plans)]
+        return [
+            QueryHandle(qid=q, plan=self._plans[q]) for q in self._public_qids()
+        ]
 
     def answers_snapshot(self) -> dict[int, np.ndarray]:
         """qid → an owned copy of every registered query's answers.
@@ -631,22 +769,31 @@ class CQPSession:
         copies stay immutable while the next chunk folds in on another
         thread, so concurrent readers never observe a half-applied δE
         chunk (DESIGN.md §14)."""
-        if self._impl is None:
-            return {}
-        return {
-            qid: np.array(self._impl.answers_row(slot), copy=True)
-            for qid, slot in self._handles.items()
-        }
+        out: dict[int, np.ndarray] = {}
+        if self._impl is not None:
+            out = {
+                qid: np.array(self._impl.answers_row(slot), copy=True)
+                for qid, slot in self._handles.items()
+                if qid not in self._internal
+            }
+        if self._planner is not None:
+            out.update(self._planner.answers_snapshot())
+        return out
 
     def nbytes(self) -> int:
-        return 0 if self._impl is None else self._impl.nbytes()
+        total = 0 if self._impl is None else self._impl.nbytes()
+        if self._planner is not None:
+            total += self._planner.extra_nbytes()
+        return total
 
     def nbytes_per_query(self) -> list[int]:
         """Accounted bytes per registered query, aligned with
         :meth:`handles` (ascending qid) — the ``[Q]`` breakdown the memory
-        governor meters."""
+        governor meters.  Planner-rewritten queries read 0 here: their
+        shared state is accounted under the internal index rows and the
+        ``(PLANNER_QID, op)`` pseudo-operator."""
         per = self._nbytes_per_query_map()
-        return [per[qid] for qid in sorted(self._plans)]
+        return [per[qid] for qid in self._public_qids()]
 
     def nbytes_per_operator(self) -> list[dict[str, int]]:
         """Per-query bytes refined to the operators owning difference
@@ -656,7 +803,7 @@ class CQPSession:
         the operator bytes sum to :meth:`nbytes_per_query`'s entry."""
         per = self._nbytes_per_op_map()
         out = []
-        for qid in sorted(self._plans):
+        for qid in self._public_qids():
             ops = {
                 op: bytes_ for (q, op), bytes_ in per.items() if q == qid
             }
@@ -664,23 +811,32 @@ class CQPSession:
         return out
 
     def _nbytes_per_query_map(self) -> dict[int, int]:
-        if self._impl is None:
-            return {}
-        by_slot = self._impl.nbytes_per_query()
-        return {qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()}
+        out: dict[int, int] = {}
+        if self._impl is not None:
+            by_slot = self._impl.nbytes_per_query()
+            out = {
+                qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()
+            }
+        if self._planner is not None:
+            for qid in self._planner.owned:
+                out[qid] = 0
+        return out
 
     def _nbytes_per_op_map(self) -> dict[tuple[int, str], int]:
-        """(qid, op_id) → accounted bytes — the governor's victim table."""
-        if self._impl is None:
-            return {}
-        by_slot = self._impl.nbytes_per_operator()
+        """(qid, op_id) → accounted bytes — the governor's victim table.
+        Internal subplan rows appear under their own qids; rule-owned
+        shared state adds ``(PLANNER_QID, op)`` pseudo-rows."""
         out: dict[tuple[int, str], int] = {}
-        for qid, slot in self._handles.items():
-            ops = dict(by_slot.get(slot, {"iterate": 0}))
-            for op in self._plans[qid].droppable_ops():
-                ops.setdefault(op, 0)  # e.g. a JOD engine's (empty) join op
-            for op, bytes_ in ops.items():
-                out[(qid, op)] = int(bytes_)
+        if self._impl is not None:
+            by_slot = self._impl.nbytes_per_operator()
+            for qid, slot in self._handles.items():
+                ops = dict(by_slot.get(slot, {"iterate": 0}))
+                for op in self._plans[qid].droppable_ops():
+                    ops.setdefault(op, 0)  # e.g. a JOD engine's (empty) join op
+                for op, bytes_ in ops.items():
+                    out[(qid, op)] = int(bytes_)
+        if self._planner is not None:
+            out.update(self._planner.pseudo_ops())
         return out
 
     def _recompute_cost_map(self) -> dict[int, int]:
@@ -690,16 +846,17 @@ class CQPSession:
         return {qid: by_slot.get(slot, 0) for qid, slot in self._handles.items()}
 
     def _recompute_cost_op_map(self) -> dict[tuple[int, str], int]:
-        if self._impl is None:
-            return {}
-        by_slot = self._impl.recompute_cost_per_operator()
         out: dict[tuple[int, str], int] = {}
-        for qid, slot in self._handles.items():
-            ops = dict(by_slot.get(slot, {"iterate": 0}))
-            for op in self._plans[qid].droppable_ops():
-                ops.setdefault(op, 0)
-            for op, cost in ops.items():
-                out[(qid, op)] = int(cost)
+        if self._impl is not None:
+            by_slot = self._impl.recompute_cost_per_operator()
+            for qid, slot in self._handles.items():
+                ops = dict(by_slot.get(slot, {"iterate": 0}))
+                for op in self._plans[qid].droppable_ops():
+                    ops.setdefault(op, 0)
+                for op, cost in ops.items():
+                    out[(qid, op)] = int(cost)
+        if self._planner is not None:
+            out.update(self._planner.pseudo_costs())
         return out
 
     # --------------------------------------------------------- drop policy
@@ -716,9 +873,11 @@ class CQPSession:
         return self._set_op_drop_policy_qid(self._require_qid(handle), op, cfg)
 
     def _require_qid(self, handle: QueryHandle) -> int:
-        if handle.qid not in self._handles:
-            raise ValueError(f"handle {handle.qid} is not registered")
-        return handle.qid
+        if handle.qid in self._handles:
+            return handle.qid
+        if self._planner is not None and self._planner.owns(handle.qid):
+            return handle.qid
+        raise ValueError(f"handle {handle.qid} is not registered")
 
     def _set_drop_policy_qid(self, qid: int, cfg: dr.DropConfig) -> int:
         return self._set_op_drop_policy_qid(qid, "iterate", cfg)
@@ -726,6 +885,19 @@ class CQPSession:
     def _set_op_drop_policy_qid(
         self, qid: int, op: str, cfg: dr.DropConfig
     ) -> int:
+        if qid < 0:
+            # governor rung for planner-owned shared state: an enabled
+            # config sheds it (landmark de-materialization), a disabled one
+            # re-materializes — routed to the rule owning the pseudo-op
+            freed = self._ensure_planner().set_pseudo_policy(op, cfg)
+            self.bytes_shed_total += max(int(freed), 0)
+            return int(freed)
+        if qid not in self._handles:
+            raise ValueError(
+                f"query {qid} answers through a planner rewrite and owns no "
+                "engine difference store; its shared state is governed as a "
+                "(PLANNER_QID, op) pseudo-operator"
+            )
         freed = self._impl.set_drop_params(self._handles[qid], cfg, op_id=op)
         plan = self._plans[qid]
         if any(n.op_id == op for n in plan.ops):
@@ -752,13 +924,24 @@ class CQPSession:
         return None if self._governor is None else self._governor.budget_bytes
 
     def _govern(self) -> None:
-        if self._governor is None or self._impl is None or not self._handles:
+        if self._governor is None or self._impl is None or self._governing:
             return
-        self._governor.enforce(self)
+        if not self._handles and (
+            self._planner is None or not self._planner.owned
+        ):
+            return
+        # the guard makes enforcement non-reentrant: a de-escalation that
+        # re-materializes a planner index registers internal plans, and
+        # that path must not recurse into enforce()
+        self._governing = True
+        try:
+            self._governor.enforce(self)
+        finally:
+            self._governing = False
 
     @property
     def num_queries(self) -> int:
-        return len(self._handles)
+        return len(self._plans) - len(self._internal)
 
     @property
     def last_stats(self):
@@ -783,10 +966,12 @@ class CQPSession:
             "nbytes": self.nbytes(),
             "nbytes_per_query": self.nbytes_per_query(),
             "nbytes_per_operator": self.nbytes_per_operator(),
-            "query_qids": sorted(self._plans),
+            "query_qids": self._public_qids(),
         }
         if self._governor is not None:
             out["governor"] = self._governor.snapshot(self)
+        if self._planner is not None:
+            out["planner"] = self._planner.snapshot()
         if isinstance(self._impl, DenseEngine):
             out["slot_capacity"] = self._impl.impl.slot_capacity
             out["shards"] = self._impl.impl.num_shards
@@ -868,8 +1053,15 @@ class CQPSession:
             "engine_state": self._impl is not None,
             "engine_meta": None,
             "governor": None,
+            "optimize": self._optimize,
+            "internal": sorted(self._internal),
+            "planner": None,
             "user": extra,
         }
+        if self._planner is not None:
+            p_arrays, p_meta = self._planner.state_dict()
+            arrays.update(p_arrays)
+            meta["planner"] = p_meta
         if self._impl is not None:
             meta["family_plan"] = self._family_plan.to_json()
             if self._nfa is not None:
@@ -923,6 +1115,16 @@ class CQPSession:
                 f"checkpoint in {directory} carries no session meta — was it "
                 "written by CQPSession.checkpoint / the recovery supervisor?"
             )
+        sess = cls._from_state(arrays, meta, mesh=mesh)
+        sess.restore_info = {"step": step, "extra": meta.get("user")}
+        return sess
+
+    @classmethod
+    def _from_state(cls, arrays: dict, meta: dict, *, mesh=None) -> "CQPSession":
+        """Rebuild a session from ``state_dict`` output (the body of
+        :meth:`restore`, reusable for nested sessions — a planner's
+        reverse-graph twin restores through this without a checkpoint
+        directory)."""
         if int(meta.get("format", 0)) != CHECKPOINT_FORMAT:
             raise ValueError(
                 f"unsupported session checkpoint format {meta.get('format')!r}"
@@ -955,6 +1157,7 @@ class CQPSession:
             product_capacity=meta["product_capacity"],
             budget_bytes=None if gov is None else int(gov["budget_bytes"]),
             governor=gcfg,
+            optimize=meta.get("optimize", "none"),
             **meta["kw"],
         )
         sess._plans = {
@@ -1014,11 +1217,14 @@ class CQPSession:
                 imp = ScratchEngine(cfg, sess._egraph)
                 imp.import_state(en_arrays, em)
                 sess._impl = imp
-        elif sess._plans:
-            # a session checkpointed before its first engine build: plans
-            # exist only if an engine did, so this indicates a corrupt meta
+        elif sess._handles:
+            # a session checkpointed before its first engine build: engine
+            # handles exist only if an engine did — corrupt meta
             raise ValueError("checkpoint has live plans but no engine state")
         if gov is not None:
             sess._governor.load_state(gov)
-        sess.restore_info = {"step": step, "extra": meta.get("user")}
+        sess._internal = {int(q) for q in meta.get("internal", [])}
+        pm = meta.get("planner")
+        if pm is not None:
+            sess._ensure_planner().load_state(pm, arrays)
         return sess

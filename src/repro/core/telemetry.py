@@ -143,6 +143,11 @@ class RecomputeTelemetry:
         sig = self._per_query.get(qid)
         return 0.0 if sig is None or sig.cost_rate is None else sig.cost_rate
 
+    def global_ewma(self, field: str, default: float = 0.0) -> float:
+        """Sweep-shape EWMA (``GLOBAL_FIELDS``) — the planner's cost model
+        reads ``iters_run``/``scheduled`` to price recompute strategies."""
+        return float(self._global.get(field, default))
+
     def bytes_held(self, qid: int) -> int:
         sig = self._per_query.get(qid)
         return 0 if sig is None else sig.nbytes

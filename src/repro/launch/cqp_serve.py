@@ -115,6 +115,13 @@ def initial_plans(args):
         return [
             plan.sssp(s, max_iters=args.max_iters) for s in range(args.queries)
         ]
+    if args.query == "spsp":
+        # source/target pairs half the vertex space apart — the planner's
+        # landmark pass (--optimize) rewrites these onto a shared index
+        return [
+            plan.spsp(s, (s + args.v // 2) % args.v, max_iters=args.max_iters)
+            for s in range(args.queries)
+        ]
     if args.query == "khop":
         return [
             plan.khop(s, k=min(6, args.max_iters)) for s in range(args.queries)
@@ -132,6 +139,10 @@ def churn_plan(args, seq: int):
     source = (args.queries + seq) % args.v
     if args.query == "sssp":
         return plan.sssp(source, max_iters=args.max_iters)
+    if args.query == "spsp":
+        return plan.spsp(
+            source, (source + args.v // 2) % args.v, max_iters=args.max_iters
+        )
     if args.query == "khop":
         return plan.khop(source, k=min(6, args.max_iters))
     return plan.pagerank(iters=min(10, args.max_iters))
@@ -184,6 +195,7 @@ def build_session(args):
         backend=args.backend,
         batch_capacity=args.batch,
         min_slots=len(plans),
+        optimize=args.optimize,
         **gov_kw,
     )
     handles = session.register_many(plans)
@@ -423,6 +435,9 @@ def serve(args) -> dict:
             "settled_peak_bytes": int(M["settled_peak"]),
             "budget_respected": bool(M["settled_peak"] <= gov.budget_bytes),
         }
+    planner_stats = session.stats().get("planner")
+    if planner_stats is not None:
+        out["planner"] = planner_stats
     print(
         f"cqp_serve[{args.query}/{args.engine}/{args.backend}] "
         f"Q={args.queries}→{out['final_queries']} B={b}: "
@@ -454,6 +469,16 @@ def serve(args) -> dict:
             f"({'respected' if g['budget_respected'] else 'VIOLATED'}; "
             f"{g['escalations']} escalation(s), "
             f"{g['deescalations']} de-escalation(s))"
+        )
+    if "planner" in out:
+        p = out["planner"]
+        lmk = p.get("landmark", {})
+        print(
+            f"  planner[{p['mode']}]: {p['rewrites_total']} rewrite(s), "
+            f"landmark index live={lmk.get('live')} "
+            f"bytes={lmk.get('index_nbytes', 0)} "
+            f"(sheds={lmk.get('sheds_total', 0)}, "
+            f"remats={lmk.get('remats_total', 0)})"
         )
     if "recovery" in out:
         r = out["recovery"]
@@ -490,7 +515,20 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=32)
     ap.add_argument("--max-iters", type=int, default=48)
     ap.add_argument("--delete-fraction", type=float, default=0.2)
-    ap.add_argument("--query", choices=("sssp", "khop", "pagerank"), default="sssp")
+    ap.add_argument(
+        "--query",
+        choices=("sssp", "spsp", "khop", "pagerank"),
+        default="sssp",
+    )
+    ap.add_argument(
+        "--optimize",
+        choices=("none", "auto", "always"),
+        default="none",
+        help="plan optimizer mode (repro.planner): auto rewrites matching "
+        "plans when the cost model says the rewrite pays (e.g. --query spsp "
+        "onto the shared landmark index, DESIGN.md §16); always bypasses "
+        "the cost gate",
+    )
     ap.add_argument(
         "--plan-file",
         default=None,

@@ -204,6 +204,47 @@ def publish_session_metrics(
             gf.set(b["fill_fraction"], qid=qid)
             gp.set(b["fp_rate"], qid=qid)
 
+    # ----- plan optimizer (repro.planner): rewrites + shared-index health
+    planner = getattr(session, "_planner", None)
+    if planner is not None:
+        snap = planner.snapshot()
+        _counter_to(
+            reg.counter("cqp_planner_rewrites_total", "plans rewritten"),
+            snap["rewrites_total"],
+        )
+        reg.gauge(
+            "cqp_planner_managed_queries", "queries answering through rewrites"
+        ).set(len(snap["managed_queries"]))
+        lmk = snap.get("landmark")
+        if lmk:
+            reg.gauge(
+                "cqp_landmark_index_nbytes",
+                "landmark index bytes held outside engine qids (Gᵀ twin)",
+            ).set(lmk["index_nbytes"])
+            reg.gauge(
+                "cqp_landmark_index_live",
+                "1 while the shared landmark index is materialized",
+            ).set(1 if lmk["live"] else 0)
+            _counter_to(
+                reg.counter(
+                    "cqp_landmark_sheds_total", "governor index sheds"
+                ),
+                lmk["sheds_total"],
+            )
+            _counter_to(
+                reg.counter(
+                    "cqp_landmark_remats_total", "index re-materializations"
+                ),
+                lmk["remats_total"],
+            )
+            _counter_to(
+                reg.counter(
+                    "cqp_landmark_pruned_work_total",
+                    "cumulative live-vertex slots swept by pruned scratch",
+                ),
+                lmk["pruned_work_total"],
+            )
+
     # ----- governor ladder timeline
     gov = getattr(session, "governor", None)
     if gov is not None:

@@ -1,0 +1,424 @@
+"""Plan-optimizer subsystem tests (DESIGN.md §16).
+
+Covers: rewrite parity across engines/shards/drop modes, mid-stream
+admit/release refcounting of the shared landmark index, governor
+shed/re-materialize round trips, checkpoint→restore→replay parity, and
+provenance round-tripping through the JSON plan schema.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import dropping as dr
+from repro.core import plan as qp
+from repro.core.graph import DynamicGraph
+from repro.core.landmark import transpose_graph, transpose_updates
+from repro.core.session import CQPSession
+from repro.planner import INDEX_OP, PLANNER_QID, CostModel, LandmarkRule, Planner
+
+NDEV = jax.device_count()
+needs8 = pytest.mark.skipif(
+    NDEV != 8,
+    reason="needs 8 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8)",
+)
+
+V = 48
+E = 240
+SEED = 11
+
+
+def workload(seed=SEED, n_updates=24):
+    """Weighted edges + a non-colliding insert stream (duplicate-edge
+    re-insertion semantics differ across engines and is out of scope)."""
+    rng = np.random.default_rng(seed)
+    seen, edges, ups = set(), [], []
+    while len(edges) < E:
+        u, w = int(rng.integers(V)), int(rng.integers(V))
+        if (u, w) not in seen:
+            seen.add((u, w))
+            edges.append((u, w, float(rng.integers(1, 9))))
+    while len(ups) < n_updates:
+        u, w = int(rng.integers(V)), int(rng.integers(V))
+        if (u, w) not in seen:
+            seen.add((u, w))
+            ups.append((u, w, 0, float(rng.integers(1, 9)), 1))
+    return edges, ups
+
+
+def fresh_graph(edges):
+    return DynamicGraph(V, edges, capacity=1024, weighted=True)
+
+
+QUERIES = [(0, 17), (5, 40), (7, 3), (23, 30)]
+
+
+def spsp_plans(drop=None):
+    return [qp.spsp(s, t, drop=drop) for s, t in QUERIES]
+
+
+def reference_targets(edges, ups):
+    """Exact target distances via un-rewritten scratch SSSP."""
+    ref = CQPSession(fresh_graph(edges), engine="scratch")
+    handles = ref.register_many([qp.sssp(s) for s, _ in QUERIES])
+    ref.apply_updates(list(ups))
+    return np.array(
+        [ref.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)], np.float32
+    )
+
+
+# ------------------------------------------------------------------ builders
+def test_spsp_builder_shares_sssp_family():
+    assert qp.spsp(0, 17).family_key() == qp.sssp(0).family_key()
+
+
+def test_spsp_aggregate_validates_target():
+    p = qp.spsp(3, 9)
+    assert p.aggregate.agg == "target" and p.aggregate.vertex == 9
+    from repro.core import dataflow as df
+
+    with pytest.raises(ValueError, match="target vertex"):
+        df.validate(
+            df.canonical(
+                semiring=p.semiring,
+                init=p.init,
+                max_iters=p.max_iters,
+                aggregate=df.Aggregate(agg="target"),
+            )
+        )
+
+
+def test_transpose_graph_reverses_edges():
+    edges, ups = workload()
+    g = fresh_graph(edges)
+    gt = transpose_graph(g)
+    fwd = {(int(u), int(v)): float(w) for u, v, w in zip(
+        g.src[g.valid], g.dst[g.valid], g.weight[g.valid])}
+    rev = {(int(u), int(v)): float(w) for u, v, w in zip(
+        gt.src[gt.valid], gt.dst[gt.valid], gt.weight[gt.valid])}
+    assert rev == {(v, u): w for (u, v), w in fwd.items()}
+    gt.apply_batch(transpose_updates(ups[:4]))
+    for (u, v, _l, w, _s) in ups[:4]:
+        assert rev.get((v, u)) is None
+        assert (v, u) in {
+            (int(a), int(b)) for a, b in zip(gt.src[gt.valid], gt.dst[gt.valid])
+        }
+
+
+# ------------------------------------------------------------------- parity
+@pytest.mark.parametrize("engine", ["dense", "host", "scratch"])
+@pytest.mark.parametrize("drop_mode", ["none", "prob"])
+def test_rewrite_parity_engines_and_drop(engine, drop_mode):
+    drop = (
+        None
+        if drop_mode == "none"
+        else dr.DropConfig(mode="prob", p=0.25, seed=3, bloom_bits=1 << 10)
+    )
+    edges, ups = workload()
+    sess = CQPSession(fresh_graph(edges), engine=engine, optimize="always")
+    handles = sess.register_many(spsp_plans(drop))
+    sess.apply_updates(ups[:12])
+    sess.apply_updates(ups[12:])
+    expect = reference_targets(edges, ups)
+    got = np.array(
+        [sess.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)], np.float32
+    )
+    # landmark answers are exact at the target even under dropping: the
+    # pruned subquery re-runs from scratch, gated only by triangle bounds
+    assert np.array_equal(got, expect), (got, expect)
+    for h, (_, t) in zip(handles, QUERIES):
+        agg = sess.aggregate(h)
+        assert agg["agg"] == "target" and agg["vertex"] == t
+    lmk = sess.stats()["planner"]["landmark"]
+    assert lmk["queries"] == len(QUERIES) and lmk["live"]
+
+
+@needs8
+def test_rewrite_parity_sharded_dense():
+    from jax.sharding import Mesh
+
+    mesh = Mesh(np.array(jax.devices()).reshape(8, 1), ("data", "model"))
+    edges, ups = workload()
+    sess = CQPSession(
+        fresh_graph(edges), engine="dense", mesh=mesh, optimize="always"
+    )
+    handles = sess.register_many(spsp_plans())
+    sess.apply_updates(ups)
+    expect = reference_targets(edges, ups)
+    got = np.array(
+        [sess.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)], np.float32
+    )
+    assert np.array_equal(got, expect)
+
+
+def test_optimize_none_is_identity():
+    edges, ups = workload()
+    sess = CQPSession(fresh_graph(edges), engine="host")
+    handles = sess.register_many(spsp_plans())
+    assert all(h.plan.provenance == () for h in handles)
+    assert sess._planner is None and sess._internal == set()
+
+
+def test_per_call_override_beats_session_mode():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="host", optimize="always")
+    h_plain = sess.register(qp.sssp(1))  # no aggregate → no match
+    h_off = sess.register(qp.spsp(2, 9), optimize="none")
+    h_on = sess.register(qp.spsp(3, 11))
+    assert h_plain.plan.provenance == () and h_off.plan.provenance == ()
+    assert h_on.plan.provenance[0].rule == "landmark"
+    assert sess._planner.owns(h_on.qid) and not sess._planner.owns(h_off.qid)
+
+
+# ---------------------------------------------------------------- cost model
+def test_cost_gate_auto_dense_single_query_declines():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense", optimize="auto")
+    h = sess.register(qp.spsp(0, 17))
+    # 1 sharer < 2L break-even on a diff-maintaining engine → untouched
+    assert h.plan.provenance == ()
+    assert not sess._planner.owns(h.qid)
+    assert sess._planner.decisions and not sess._planner.decisions[-1]["applied"]
+
+
+def test_cost_gate_auto_scratch_always_pays():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="scratch", optimize="auto")
+    h = sess.register(qp.spsp(0, 17))
+    assert h.plan.provenance and h.plan.provenance[0].rule == "landmark"
+
+
+def test_cost_estimate_break_even_math():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense")
+    model = CostModel()
+    est_lo = model.landmark(qp.spsp(0, 1), sess, num_landmarks=4, sharers=3)
+    est_hi = model.landmark(qp.spsp(0, 1), sess, num_landmarks=4, sharers=8)
+    assert not est_lo.pays and est_hi.pays
+    assert est_lo.to_dict()["index_rows"] == 8
+
+
+# ------------------------------------------------------------- refcounting
+def test_midstream_register_deregister_refcounts_index():
+    edges, ups = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense", optimize="always")
+    h0 = sess.register(qp.spsp(0, 17))
+    rule = sess._planner.rules[0]
+    assert rule._live and len(sess._internal) == rule.num_landmarks
+    sess.apply_updates(ups[:8])
+    h1 = sess.register(qp.spsp(5, 40))  # mid-stream admit shares the index
+    assert len(sess._internal) == rule.num_landmarks  # not rebuilt
+    sess.apply_updates(ups[8:16])
+    assert sess.deregister(h0) == 0  # index survives: one sharer left
+    assert rule._live and rule.queries == {h1.qid: (5, 40)}
+    sess.apply_updates(ups[16:])
+    expect = reference_targets(edges, ups)
+    assert sess.answers(h1)[40] == expect[1]
+    freed = sess.deregister(h1)  # last sharer → teardown
+    assert freed > 0 and not rule._live
+    assert sess._internal == set() and sess._plans == {}
+    assert rule.rev_session is None
+
+
+def test_internal_qids_hidden_from_public_views():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense", optimize="always")
+    h = sess.register(qp.spsp(0, 17))
+    rule = sess._planner.rules[0]
+    assert sess.num_queries == 1
+    assert [x.qid for x in sess.handles()] == [h.qid]
+    assert set(sess.answers_snapshot()) == {h.qid}
+    assert len(sess.nbytes_per_query()) == 1
+    assert sess.stats()["query_qids"] == [h.qid]
+    # internal rows are real engine citizens: bytes live under their qids
+    per_op = sess._nbytes_per_op_map()
+    internal_bytes = sum(
+        b for (q, op), b in per_op.items() if q in sess._internal
+    )
+    assert internal_bytes > 0
+    assert (PLANNER_QID, INDEX_OP) in per_op
+    with pytest.raises(ValueError, match="internal"):
+        sess.deregister(
+            type(h)(qid=next(iter(sess._internal)), plan=h.plan)
+        )
+
+
+def test_rewritten_query_rejects_engine_drop_policy():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense", optimize="always")
+    h = sess.register(qp.spsp(0, 17))
+    with pytest.raises(ValueError, match="planner rewrite"):
+        sess.set_drop_policy(h, dr.DropConfig(mode="prob", p=0.5))
+
+
+# ---------------------------------------------------------------- governor
+def test_governor_sheds_and_rematerializes_index():
+    edges, ups = workload()
+    sess = CQPSession(
+        fresh_graph(edges), engine="dense", optimize="always", budget_bytes=1
+    )
+    handles = sess.register_many(spsp_plans())
+    rule = sess._planner.rules[0]
+    sess.apply_updates(ups[:12])
+    lmk = sess.stats()["planner"]["landmark"]
+    assert lmk["shed"] and lmk["sheds_total"] >= 1
+    assert not rule._live and sess._internal == set()
+    assert sess.stats()["bytes_shed_total"] > 0
+    # shed answers stay exact (pruned scratch degrades to plain BF)
+    mid = reference_targets(edges, ups[:12])
+    got = np.array(
+        [sess.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)], np.float32
+    )
+    assert np.array_equal(got, mid)
+    # relief: calm passes under the raised budget re-materialize the index
+    sess.governor.budget_bytes = 1 << 24
+    sess.apply_updates(ups[12:])
+    for _ in range(8):
+        if sess.stats()["planner"]["landmark"]["remats_total"]:
+            break
+        sess.apply_updates([])
+    lmk = sess.stats()["planner"]["landmark"]
+    assert lmk["remats_total"] >= 1 and lmk["live"]
+    expect = reference_targets(edges, ups)
+    got = np.array(
+        [sess.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)], np.float32
+    )
+    assert np.array_equal(got, expect)
+
+
+def test_scratch_session_index_never_governed():
+    edges, ups = workload()
+    sess = CQPSession(
+        fresh_graph(edges), engine="scratch", optimize="always", budget_bytes=1
+    )
+    sess.register_many(spsp_plans())
+    sess.apply_updates(ups[:8])
+    # scratch rows account 0 bytes → the zero-byte filter never picks the
+    # landmark pseudo-op (an index shed would reclaim nothing)
+    lmk = sess.stats()["planner"]["landmark"]
+    assert lmk["sheds_total"] == 0 and lmk["live"]
+
+
+# --------------------------------------------------------------- durability
+def test_checkpoint_restore_replay_parity(tmp_path):
+    edges, ups = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense", optimize="always")
+    handles = sess.register_many(spsp_plans())
+    sess.apply_updates(ups[:12])
+    sess.checkpoint(str(tmp_path))
+    restored = CQPSession.restore(str(tmp_path))
+    r_lmk = restored.stats()["planner"]["landmark"]
+    s_lmk = sess.stats()["planner"]["landmark"]
+    assert r_lmk["landmarks"] == s_lmk["landmarks"]
+    assert r_lmk["queries"] == s_lmk["queries"]
+    sess.apply_updates(ups[12:])
+    restored.apply_updates(ups[12:])
+    expect = reference_targets(edges, ups)
+    for sess_i in (sess, restored):
+        got = np.array(
+            [sess_i.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)],
+            np.float32,
+        )
+        assert np.array_equal(got, expect)
+    # full pruned fields match bit-for-bit, not just the targets
+    for h in handles:
+        assert np.array_equal(sess.answers(h), restored.answers(h))
+
+
+def test_restore_while_shed_then_rematerialize(tmp_path):
+    edges, ups = workload()
+    sess = CQPSession(
+        fresh_graph(edges), engine="dense", optimize="always", budget_bytes=1
+    )
+    handles = sess.register_many(spsp_plans())
+    sess.apply_updates(ups[:8])
+    assert sess.stats()["planner"]["landmark"]["shed"]
+    sess.checkpoint(str(tmp_path))
+    restored = CQPSession.restore(str(tmp_path))
+    lmk = restored.stats()["planner"]["landmark"]
+    assert lmk["shed"] and not lmk["live"]
+    restored.governor.budget_bytes = 1 << 24
+    restored.apply_updates(ups[8:])
+    for _ in range(8):
+        if restored.stats()["planner"]["landmark"]["remats_total"]:
+            break
+        restored.apply_updates([])
+    assert restored.stats()["planner"]["landmark"]["live"]
+    expect = reference_targets(edges, ups)
+    got = np.array(
+        [restored.answers(h)[t] for h, (_, t) in zip(handles, QUERIES)],
+        np.float32,
+    )
+    assert np.array_equal(got, expect)
+
+
+def test_planner_metrics_published():
+    from repro.obs.metrics import MetricsRegistry
+
+    edges, ups = workload()
+    sess = CQPSession(fresh_graph(edges), engine="dense", optimize="always")
+    sess.register_many(spsp_plans())
+    sess.apply_updates(ups[:8])
+    reg = sess.publish_metrics(MetricsRegistry())
+    snap = reg.snapshot()
+    assert {"cqp_planner_rewrites_total", "cqp_landmark_index_nbytes"} <= set(
+        snap
+    )
+
+
+# --------------------------------------------------------------- provenance
+def test_provenance_roundtrip_json():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    keys = st.text(
+        alphabet="abcdefghijklmnopqrstuvwxyz_", min_size=1, max_size=8
+    )
+    vals = st.one_of(
+        st.integers(-(2**31), 2**31), st.text(max_size=12), st.booleans()
+    )
+
+    @settings(max_examples=40)
+    @given(
+        rule=keys,
+        kind=st.sampled_from(["spsp", "sssp", "khop"]),
+        params=st.dictionaries(keys, vals, max_size=4),
+    )
+    def check(rule, kind, params):
+        prov = qp.Provenance(
+            rule=rule, original_kind=kind, params=tuple(params.items())
+        )
+        plan = qp.spsp(1, 2).with_provenance(prov)
+        back = qp.QueryPlan.from_json(plan.to_json())
+        assert back.provenance == plan.provenance
+        assert back.provenance[-1].params == tuple(sorted(params.items()))
+        assert qp.Provenance.from_dict(prov.to_dict()) == prov
+
+    check()
+
+
+def test_rewrite_stamps_provenance():
+    edges, _ = workload()
+    sess = CQPSession(fresh_graph(edges), engine="scratch", optimize="always")
+    h = sess.register(qp.spsp(4, 31))
+    (prov,) = h.plan.provenance
+    assert prov.rule == "landmark" and prov.original_kind == "spsp"
+    assert dict(prov.params)["source"] == 4
+    assert dict(prov.params)["target"] == 31
+    # the session's stored plan is the rewritten one (checkpoint carries it)
+    assert sess._plans[h.qid].provenance == h.plan.provenance
+
+
+def test_planner_rejects_unknown_mode():
+    edges, _ = workload()
+    with pytest.raises(ValueError, match="optimize"):
+        CQPSession(fresh_graph(edges), optimize="sometimes")
+    sess = CQPSession(fresh_graph(edges), engine="host")
+    with pytest.raises(ValueError, match="optimize"):
+        sess.register(qp.spsp(0, 1), optimize="sometimes")
+    with pytest.raises(ValueError):
+        Planner(sess, "sometimes")
